@@ -1,0 +1,37 @@
+use tpu_pod_train::benchkit::Bench;
+use tpu_pod_train::collectives::{gradsum_pipelined, gradsum_serial, torus2d_all_reduce, Placement};
+use tpu_pod_train::fabric::run_spmd;
+use tpu_pod_train::netsim::cost::resnet50_gradient_bytes;
+fn main() {
+    let sizes: Vec<usize> = resnet50_gradient_bytes().iter().map(|b| ((b/4.0/16.0) as usize).max(1)).collect();
+    let total: usize = sizes.iter().sum();
+    let world = 8;
+    let mut bench = Bench::quick();
+    let s = sizes.clone();
+    bench.run("per-tensor 2D AR (161 tensors)", move || {
+        let sizes = s.clone();
+        run_spmd(world, move |ep| {
+            let place = Placement::new(world);
+            let mut tensors: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![1.0; n]).collect();
+            gradsum_serial(ep, &place, &mut tensors);
+        });
+    });
+    bench.run("single fused 2D AR (flat buffer)", move || {
+        run_spmd(world, move |ep| {
+            let place = Placement::new(world);
+            let mut data = vec![1.0f32; total];
+            torus2d_all_reduce(ep, &place, &mut data);
+        });
+    });
+    for q in [4096usize, 65536, 1<<20] {
+        let s = sizes.clone();
+        bench.run(&format!("pipelined q={q}"), move || {
+            let sizes = s.clone();
+            run_spmd(world, move |ep| {
+                let place = Placement::new(world);
+                let mut tensors: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![1.0; n]).collect();
+                gradsum_pipelined(ep, &place, &mut tensors, q);
+            });
+        });
+    }
+}

@@ -1,0 +1,49 @@
+//! Simulated MLPerf-0.6 submission: runs the pod simulator for all five
+//! models across pod slices and prints the Fig. 9-style scaling table plus
+//! the §2 optimization ablation at the largest scale.
+//!
+//!   cargo run --release --example mlperf_submission
+
+use tpu_pod_train::benchkit::Table;
+use tpu_pod_train::models::all_models;
+use tpu_pod_train::simulator::{simulate, SimOptions};
+
+fn main() {
+    let slices = [64usize, 128, 256, 512, 1024, 2048];
+    let mut t = Table::new(
+        "MLPerf-0.6 benchmark seconds vs TPU-v3 cores (simulated, Fig. 9)",
+        &["model", "64", "128", "256", "512", "1024", "2048"],
+    );
+    for m in all_models() {
+        let mut row = vec![m.name.to_string()];
+        for &cores in &slices {
+            if cores > m.max_useful_cores() {
+                row.push("—".into());
+                continue;
+            }
+            let r = simulate(&m, cores, &SimOptions::default());
+            row.push(if r.converged { format!("{:.0}", r.benchmark_seconds) } else { "DNF".into() });
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    let mut t2 = Table::new(
+        "§2 ablation at largest scale (seconds; 'off' = that optimization disabled)",
+        &["model", "all on", "no pipeline", "1-D gradsum", "no WUS", "side-card eval"],
+    );
+    for m in all_models() {
+        let cores = m.max_useful_cores().min(2048);
+        let base = simulate(&m, cores, &SimOptions::default()).benchmark_seconds;
+        let f = |o: SimOptions| format!("{:.0}", simulate(&m, cores, &o).benchmark_seconds);
+        t2.row(&[
+            m.name.to_string(),
+            format!("{base:.0}"),
+            f(SimOptions { gradsum_pipelined: false, ..Default::default() }),
+            f(SimOptions { gradsum_2d: false, ..Default::default() }),
+            f(SimOptions { weight_update_sharding: false, ..Default::default() }),
+            f(SimOptions { distributed_eval: false, ..Default::default() }),
+        ]);
+    }
+    t2.print();
+}

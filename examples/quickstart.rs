@@ -1,0 +1,43 @@
+//! Quickstart: train the tiny transformer LM for 60 steps on 4 simulated
+//! TPU cores, with every paper technique on its default setting.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
+use tpu_pod_train::optim::AdamConfig;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = TrainConfig {
+        model: "transformer_tiny".into(),
+        cores: 4,
+        steps: 60,
+        eval_every: 20,
+        eval_examples: 128,
+        opt: OptChoice::Adam { cfg: AdamConfig::default(), lr: 3e-3 },
+        use_wus: true,                                // §2 weight-update sharding
+        gradsum: GradSumMode::Pipelined { quantum: 4096 }, // §2 pipelined 2-D gradsum
+        seed: 0,
+        task_difficulty: 0.05,
+        image_alpha: 2.0,
+        quality_target: Some(0.80),
+        warmup_steps: 0,
+    };
+    println!("== tpu-pod-train quickstart ==");
+    println!("model {}, {} cores, wus on, pipelined 2-D gradient summation", cfg.model, cfg.cores);
+    let rep = train(&cfg)?;
+    println!("\ninit (excluded from clock): {:.2}s", rep.init_s);
+    println!("params: {}", rep.params_total);
+    for (i, l) in rep.step_losses.iter().enumerate() {
+        if i % 10 == 0 {
+            println!("  step {:>3}: loss {:.4}", i + 1, l);
+        }
+    }
+    for e in &rep.evals {
+        println!("  eval @ {:>3}: loss {:.4}, next-token acc {:.3}", e.step, e.loss, e.accuracy);
+    }
+    println!("\n{}", rep.breakdown.report());
+    if let Some(s) = rep.converged_at {
+        println!("quality target 0.80 reached at step {s} ✓");
+    }
+    Ok(())
+}

@@ -1,0 +1,226 @@
+"""AOT pipeline: lower every L2 entry point to HLO **text** + write
+artifacts/manifest.json describing shapes for the Rust runtime.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True`` —
+the Rust side unwraps the tuple.
+
+Run: ``python -m compile.aot --out-dir ../artifacts [--presets tiny,small]``
+(the Makefile invokes this; it is a no-op at runtime — Python never touches
+the request path).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import cnn, model
+from .configs import CNN_PRESETS, TRANSFORMER_PRESETS
+from .kernels import adam as adam_k
+from .kernels import attention as attn_k
+from .kernels import lars as lars_k
+from .kernels import lstm as lstm_k
+
+# Canonical flat-tensor size for the optimizer artifacts: covers one
+# weight-update shard of the mini models and proves the Rust⇄Pallas loop.
+OPT_SIZE = 16384
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io(name, dtype, shape):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"artifacts": [], "params": {}, "configs": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(self, name, fn, in_specs, inputs, outputs, meta=None):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        self.manifest["artifacts"].append({
+            "name": name,
+            "file": fname,
+            "inputs": inputs,
+            "outputs": outputs,
+            "meta": meta or {},
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        })
+        print(f"  {name}: {len(text)/1e6:.2f} MB HLO in "
+              f"{time.time()-t0:.1f}s", file=sys.stderr)
+
+    def write_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"  manifest.json: {len(self.manifest['artifacts'])} artifacts",
+              file=sys.stderr)
+
+
+def build_transformer(b: Builder, preset: str):
+    cfg = TRANSFORMER_PRESETS[preset]
+    spec = model.param_spec(cfg)
+    b.manifest["params"][f"transformer_{preset}"] = [
+        {"name": n, "shape": list(s)} for n, s in spec]
+    b.manifest["configs"][f"transformer_{preset}"] = cfg.__dict__.copy()
+    p_specs = [_spec(s) for _, s in spec]
+    tok = _spec((cfg.batch_per_core, cfg.seq), jnp.int32)
+
+    b.add(
+        f"transformer_train_{preset}", model.make_train_step(cfg),
+        p_specs + [tok, tok],
+        inputs=[_io(n, "f32", s) for n, s in spec]
+        + [_io("tokens", "i32", tok.shape), _io("targets", "i32", tok.shape)],
+        outputs=[_io("loss", "f32", ())]
+        + [_io(f"grad.{n}", "f32", s) for n, s in spec],
+        meta={"model": f"transformer_{preset}", "kind": "train_step"},
+    )
+    mask = _spec((cfg.batch_per_core,), jnp.float32)
+    b.add(
+        f"transformer_eval_{preset}", model.make_eval_step(cfg),
+        p_specs + [tok, tok, mask],
+        inputs=[_io(n, "f32", s) for n, s in spec]
+        + [_io("tokens", "i32", tok.shape), _io("targets", "i32", tok.shape),
+           _io("mask", "f32", mask.shape)],
+        outputs=[_io("loss_sum", "f32", ()), _io("correct", "f32", ()),
+                 _io("count", "f32", ())],
+        meta={"model": f"transformer_{preset}", "kind": "eval_step"},
+    )
+
+
+def build_cnn(b: Builder, preset: str):
+    cfg = CNN_PRESETS[preset]
+    spec = cnn.param_spec(cfg)
+    b.manifest["params"][f"cnn_{preset}"] = [
+        {"name": n, "shape": list(s)} for n, s in spec]
+    b.manifest["configs"][f"cnn_{preset}"] = cfg.__dict__.copy()
+    p_specs = [_spec(s) for _, s in spec]
+    img = _spec((cfg.batch_per_core, cfg.image, cfg.image, 3), jnp.float32)
+    lab = _spec((cfg.batch_per_core,), jnp.int32)
+
+    b.add(
+        f"cnn_train_{preset}", cnn.make_train_step(cfg),
+        p_specs + [img, lab],
+        inputs=[_io(n, "f32", s) for n, s in spec]
+        + [_io("images", "f32", img.shape), _io("labels", "i32", lab.shape)],
+        outputs=[_io("loss", "f32", ())]
+        + [_io(f"grad.{n}", "f32", s) for n, s in spec],
+        meta={"model": f"cnn_{preset}", "kind": "train_step"},
+    )
+    mask = _spec((cfg.batch_per_core,), jnp.float32)
+    b.add(
+        f"cnn_eval_{preset}", cnn.make_eval_step(cfg),
+        p_specs + [img, lab, mask],
+        inputs=[_io(n, "f32", s) for n, s in spec]
+        + [_io("images", "f32", img.shape), _io("labels", "i32", lab.shape),
+           _io("mask", "f32", mask.shape)],
+        outputs=[_io("loss_sum", "f32", ()), _io("correct", "f32", ()),
+                 _io("count", "f32", ())],
+        meta={"model": f"cnn_{preset}", "kind": "eval_step"},
+    )
+
+
+def build_optimizers(b: Builder):
+    n = OPT_SIZE
+    vec = _spec((n,))
+    hp4, hp5 = _spec((4,)), _spec((5,))
+    for scaled, name in [(True, "lars_scaled"), (False, "lars_unscaled")]:
+        b.add(
+            f"{name}_{n}",
+            lambda w, g, v, hp, s=scaled: lars_k.lars_update(
+                w, g, v, hp, scaled=s),
+            [vec, vec, vec, hp4],
+            inputs=[_io("w", "f32", (n,)), _io("g", "f32", (n,)),
+                    _io("v", "f32", (n,)),
+                    _io("hp[lr,eta,beta,mom]", "f32", (4,))],
+            outputs=[_io("w_new", "f32", (n,)), _io("v_new", "f32", (n,))],
+            meta={"kind": "optimizer", "algo": name, "size": n},
+        )
+    b.add(
+        f"adam_{n}",
+        lambda w, g, m, v, hp: adam_k.adam_update(w, g, m, v, hp),
+        [vec, vec, vec, vec, hp5],
+        inputs=[_io("w", "f32", (n,)), _io("g", "f32", (n,)),
+                _io("m", "f32", (n,)), _io("v", "f32", (n,)),
+                _io("hp[lr,b1,b2,eps,step]", "f32", (5,))],
+        outputs=[_io("w_new", "f32", (n,)), _io("m_new", "f32", (n,)),
+                 _io("v_new", "f32", (n,))],
+        meta={"kind": "optimizer", "algo": "adam", "size": n},
+    )
+
+
+def build_kernel_micro(b: Builder):
+    # Standalone attention (runtime micro-bench target).
+    bh, s, d = (8, 4), 64, 32
+    q = _spec((bh[0], bh[1], s, d))
+    b.add(
+        "attention_b8h4s64d32",
+        lambda q, k, v: attn_k.attention(q, k, v),
+        [q, q, q],
+        inputs=[_io(t, "f32", q.shape) for t in ("q", "k", "v")],
+        outputs=[_io("o", "f32", q.shape)],
+        meta={"kind": "kernel", "algo": "attention"},
+    )
+    # Hoisted LSTM cell (GNMT §3).
+    bsz, h = 8, 128
+    b.add(
+        "lstm_cell_b8h128",
+        lambda xp, hh, cc, wh, bb: lstm_k.lstm_cell_hoisted(xp, hh, cc, wh, bb),
+        [_spec((bsz, 4 * h)), _spec((bsz, h)), _spec((bsz, h)),
+         _spec((h, 4 * h)), _spec((4 * h,))],
+        inputs=[_io("x_proj", "f32", (bsz, 4 * h)),
+                _io("h", "f32", (bsz, h)), _io("c", "f32", (bsz, h)),
+                _io("w_h", "f32", (h, 4 * h)), _io("b", "f32", (4 * h,))],
+        outputs=[_io("h_new", "f32", (bsz, h)), _io("c_new", "f32", (bsz, h))],
+        meta={"kind": "kernel", "algo": "lstm_cell_hoisted"},
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small",
+                    help="transformer presets to build (comma-sep)")
+    ap.add_argument("--cnn-presets", default="mini")
+    args = ap.parse_args()
+
+    b = Builder(args.out_dir)
+    for preset in [p for p in args.presets.split(",") if p]:
+        build_transformer(b, preset)
+    for preset in [p for p in args.cnn_presets.split(",") if p]:
+        build_cnn(b, preset)
+    build_optimizers(b)
+    build_kernel_micro(b)
+    b.write_manifest()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""L2: mini convolutional classifier (ResNet-50 stand-in) for the LARS
+optimizer study (paper §3, Table 1).
+
+Three conv+batch-norm+relu blocks with 2x2 average pooling, then a linear
+head — small enough that a full batch-size/optimizer sweep runs on CPU in
+seconds, but with the property the LARS study needs: many weight tensors of
+very different scale (conv kernels vs. BN scales vs. the head), which is
+exactly the regime where layer-adaptive rates matter.
+
+Batch norm uses batch statistics in both train and eval (the distributed
+batch-norm of the paper is a *cross-core* statistics group; the grouping
+itself lives in the Rust layer — see rust/src/models/batchnorm.rs — while
+this per-core graph computes the local moments it would feed in).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import CnnConfig
+
+
+def param_spec(cfg: CnnConfig):
+    spec = []
+    in_c = 3
+    for i, out_c in enumerate(cfg.channels):
+        spec += [
+            (f"conv{i}.w", (3, 3, in_c, out_c)),
+            (f"bn{i}.scale", (out_c,)),
+            (f"bn{i}.bias", (out_c,)),
+        ]
+        in_c = out_c
+    side = cfg.image // (2 ** len(cfg.channels))
+    feat = side * side * cfg.channels[-1]
+    spec += [("fc.w", (feat, cfg.classes)), ("fc.b", (cfg.classes,))]
+    return spec
+
+
+def init_params(cfg: CnnConfig, key):
+    params = []
+    for i, (name, shape) in enumerate(param_spec(cfg)):
+        if name.endswith(".scale"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".bias", ".b")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            std = jnp.sqrt(2.0 / fan_in)
+            params.append(
+                std * jax.random.normal(jax.random.fold_in(key, i), shape,
+                                        jnp.float32))
+    return params
+
+
+def _round_bf16(x):
+    """bf16 mantissa rounding with f32 storage: same numerics as bf16
+    operands + f32 accumulation, but keeps the conv VJP single-dtype
+    (lax.conv's transpose rule rejects mixed bf16/f32 operands)."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _conv(x, w, mixed: bool):
+    if mixed:
+        x, w = _round_bf16(x), _round_bf16(w)
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32)
+
+
+def _batch_norm(x, scale, bias, eps=1e-5):
+    # f32 moments over (N, H, W) — the non-conv op the paper keeps in f32.
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=(0, 1, 2))
+    var = jnp.mean(jnp.square(x - mu), axis=(0, 1, 2))
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def forward(cfg: CnnConfig, params, images):
+    """images [B, I, I, 3] f32 → logits [B, classes] f32."""
+    it = iter(params)
+    x = images
+    for _ in cfg.channels:
+        w, s, b = next(it), next(it), next(it)
+        x = jax.nn.relu(_batch_norm(_conv(x, w, cfg.mixed_bf16), s, b))
+        x = jax.lax.reduce_window(
+            x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+    fcw, fcb = next(it), next(it)
+    x = x.reshape(x.shape[0], -1)
+    if cfg.mixed_bf16:
+        logits = jnp.dot(x.astype(jnp.bfloat16), fcw.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32) + fcb
+    else:
+        logits = x @ fcw + fcb
+    return logits
+
+
+def loss_fn(cfg: CnnConfig, params, images, labels):
+    logits = forward(cfg, params, images).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def make_train_step(cfg: CnnConfig):
+    """(params..., images, labels) → (loss, grads...)."""
+
+    def train_step(*args):
+        nparams = len(param_spec(cfg))
+        params = list(args[:nparams])
+        images, labels = args[nparams], args[nparams + 1]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, images, labels))(params)
+        return (loss, *grads)
+
+    return train_step
+
+
+def make_eval_step(cfg: CnnConfig):
+    """(params..., images, labels, mask) → (loss_sum, correct, count) —
+    masked for the distributed evaluator's zero-padded examples."""
+
+    def eval_step(*args):
+        nparams = len(param_spec(cfg))
+        params = list(args[:nparams])
+        images, labels, mask = args[nparams:nparams + 3]
+        logits = forward(cfg, params, images).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        losses = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+        return (jnp.sum(losses * mask), jnp.sum(correct * mask),
+                jnp.sum(mask))
+
+    return eval_step

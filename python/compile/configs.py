@@ -1,0 +1,60 @@
+"""Model-size presets for the AOT artifacts.
+
+Per-core batch lives here because HLO is shape-specialised: the Rust
+coordinator picks an artifact whose ``batch_per_core`` matches its
+data-parallel layout (global batch = batch_per_core x num_cores, paper §4
+Fig. 7).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_layers: int
+    seq: int
+    batch_per_core: int
+    mixed_bf16: bool = True  # paper §2: matmuls bf16, everything else f32
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+@dataclass(frozen=True)
+class CnnConfig:
+    name: str
+    image: int            # square side
+    channels: tuple
+    classes: int
+    batch_per_core: int
+    mixed_bf16: bool = True
+
+
+TRANSFORMER_PRESETS = {
+    # tiny: unit tests + quickstart; one train step is a few ms on CPU.
+    "tiny": TransformerConfig("tiny", vocab=256, d_model=128, n_heads=4,
+                              d_ff=256, n_layers=2, seq=64, batch_per_core=8),
+    # small: the e2e_train default (~3.6M params).
+    "small": TransformerConfig("small", vocab=1024, d_model=256, n_heads=8,
+                               d_ff=1024, n_layers=4, seq=128,
+                               batch_per_core=8),
+    # large: scaling study (~27M params); build with PRESETS=large.
+    "large": TransformerConfig("large", vocab=8192, d_model=512, n_heads=8,
+                               d_ff=2048, n_layers=8, seq=128,
+                               batch_per_core=4),
+}
+
+CNN_PRESETS = {
+    # mini: the LARS study model (3 conv blocks + fc, batch-norm'd).
+    "mini": CnnConfig("mini", image=16, channels=(16, 32, 64), classes=10,
+                      batch_per_core=32),
+}

@@ -1,0 +1,130 @@
+"""Causal scaled-dot-product attention as a Pallas kernel pair (fwd + bwd),
+wired through ``jax.custom_vjp`` so the L2 transformer's autodiff uses the
+hand-written backward kernel.
+
+This is the Transformer hot-spot from paper §3 ("transformers typically have
+attention layers that are large fully connected layers"). TPU shaping:
+
+  * grid = (batch * heads,): each grid step owns one full [S, D] attention
+    problem resident in VMEM — for the sizes this repo trains (S ≤ 256,
+    D ≤ 128) the working set is S*D*3*4B + S*S*4B ≤ 640 KiB, comfortably
+    inside the 16 MiB/core VMEM budget (see kernels/vmem.py for the audit).
+  * logits/softmax in f32 even if q/k/v arrive bf16 — the paper's
+    mixed-precision rule (non-conv/matmul math in f32).
+  * the S×S logits matmul and the PV matmul are MXU-shaped
+    ([S,D]@[D,S], [S,S]@[S,D]).
+
+The backward kernel recomputes the probability matrix from q,k (cheaper than
+spilling S×S residuals to HBM — the standard TPU trade, compute for memory).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref):
+    s, d = q_ref.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    logits = jnp.dot(q, k.T) * scale
+    rows = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    logits = jnp.where(cols <= rows, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v_ref[...].astype(jnp.float32))
+
+
+def _bwd_kernel(q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref):
+    s, d = q_ref.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    logits = jnp.dot(q, k.T) * scale
+    rows = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    logits = jnp.where(cols <= rows, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    dv_ref[...] = jnp.dot(p.T, do)
+    dp = jnp.dot(do, v.T)
+    # softmax VJP: dlogits = p * (dp - sum(dp * p, axis=-1))
+    dlogits = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq_ref[...] = jnp.dot(dlogits, k) * scale
+    dk_ref[...] = jnp.dot(dlogits.T, q) * scale
+
+
+def _flatten_heads(x):
+    b, h, s, d = x.shape
+    return x.reshape(b * h, s, d)
+
+
+def _attention_fwd_impl(q, k, v):
+    b, h, s, d = q.shape
+    qf, kf, vf = _flatten_heads(q), _flatten_heads(k), _flatten_heads(v)
+    spec = pl.BlockSpec((1, s, d), lambda i: (i, 0, 0))
+
+    def kernel(q_ref, k_ref, v_ref, o_ref):
+        _fwd_kernel(q_ref.at[0], k_ref.at[0], v_ref.at[0], o_ref.at[0])
+
+    o = pl.pallas_call(
+        kernel,
+        grid=(b * h,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), jnp.float32),
+        interpret=True,
+    )(qf, kf, vf)
+    return o.reshape(b, h, s, d)
+
+
+def _attention_bwd_impl(q, k, v, do):
+    b, h, s, d = q.shape
+    qf, kf, vf, dof = (_flatten_heads(t) for t in (q, k, v, do))
+    spec = pl.BlockSpec((1, s, d), lambda i: (i, 0, 0))
+
+    def kernel(q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref):
+        _bwd_kernel(q_ref.at[0], k_ref.at[0], v_ref.at[0], do_ref.at[0],
+                    dq_ref.at[0], dk_ref.at[0], dv_ref.at[0])
+
+    dq, dk, dv = pl.pallas_call(
+        kernel,
+        grid=(b * h,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((b * h, s, d), jnp.float32)] * 3,
+        interpret=True,
+    )(qf, kf, vf, dof)
+    return (dq.reshape(b, h, s, d), dk.reshape(b, h, s, d),
+            dv.reshape(b, h, s, d))
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Causal attention over [B, H, S, D]; differentiable via the Pallas
+    backward kernel."""
+    return _attention_fwd_impl(q, k, v)
+
+
+def _vjp_fwd(q, k, v):
+    return _attention_fwd_impl(q, k, v), (q, k, v)
+
+
+def _vjp_bwd(res, do):
+    q, k, v = res
+    return _attention_bwd_impl(q, k, v, do)
+
+
+attention.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,155 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an oracle here; pytest asserts
+allclose between kernel and oracle across shape/dtype sweeps (hypothesis).
+The Rust-side optimizers are additionally bit-compared against HLO lowered
+from these same functions, closing the three-way loop
+(Rust == Pallas == reference).
+
+LARS update equations are the two variants from the paper (Figures 5 and 6):
+
+  scaled momentum (MLPerf-0.6 reference):
+      lam = eta * ||w|| / (||g|| + beta * ||w||)
+      v   = m * v + (g + beta * w)
+      w   = w - lam * v
+
+  unscaled momentum (You et al. [20], the paper's faster variant):
+      lam = eta * ||w|| / (||g|| + beta * ||w||)
+      v   = m * v + lam * (g + beta * w)
+      w   = w - v
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# LARS (paper Figures 5/6)
+# ---------------------------------------------------------------------------
+
+
+def lars_trust_ratio(w, g, eta, beta, eps=1e-9):
+    """The LARS layer-adaptive learning rate lambda."""
+    w_norm = jnp.sqrt(jnp.sum(jnp.square(w.astype(jnp.float32))))
+    g_norm = jnp.sqrt(jnp.sum(jnp.square(g.astype(jnp.float32))))
+    return eta * w_norm / (g_norm + beta * w_norm + eps)
+
+
+def lars_scaled_ref(w, g, v, lr, eta, beta, momentum, eps=1e-9):
+    """Scaled-momentum LARS (paper Fig. 5, MLPerf-0.6 reference optimizer)."""
+    lam = lars_trust_ratio(w, g, eta, beta, eps)
+    v_new = momentum * v + (g + beta * w)
+    w_new = w - lr * lam * v_new
+    return w_new, v_new
+
+
+def lars_unscaled_ref(w, g, v, lr, eta, beta, momentum, eps=1e-9):
+    """Unscaled-momentum LARS (paper Fig. 6, You et al.)."""
+    lam = lars_trust_ratio(w, g, eta, beta, eps)
+    v_new = momentum * v + lr * lam * (g + beta * w)
+    w_new = w - v_new
+    return w_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# Adam (Transformer / GNMT optimizer in the paper)
+# ---------------------------------------------------------------------------
+
+
+def adam_ref(w, g, m, v, step, lr, beta1=0.9, beta2=0.999, eps=1e-8):
+    """Standard Adam with bias correction; `step` is 1-based."""
+    g = g.astype(jnp.float32)
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * jnp.square(g)
+    m_hat = m_new / (1.0 - beta1**step)
+    v_hat = v_new / (1.0 - beta2**step)
+    w_new = w - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return w_new, m_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# Attention (Transformer hot-spot)
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(q, k, v, causal=True):
+    """Scaled dot-product attention over [B, H, S, D], f32 accumulation.
+
+    Mirrors the paper's mixed-precision rule: matmuls may be bf16 but the
+    softmax/normalisation runs in f32.
+    """
+    b, h, s, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum(
+        "bhsd,bhtd->bhst", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# LSTM cell (GNMT §3): traditional vs hoisted-input-projection formulations
+# ---------------------------------------------------------------------------
+
+
+def lstm_cell_ref(x, h, c, w_x, w_h, b):
+    """Traditional LSTM cell: gates from concat([x, h]) (here split weights).
+
+    x: [B, I], h/c: [B, H]; w_x: [I, 4H]; w_h: [H, 4H]; b: [4H].
+    Gate order: i, f, g, o.
+    """
+    gates = x @ w_x + h @ w_h + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_cell_hoisted_ref(x_proj, h, c, w_h, b):
+    """GNMT-optimized cell: input projection x @ w_x precomputed outside the
+    recurrent loop (the paper hoists it to run at full effective batch);
+    inside the loop only the h-projection remains.
+    Mathematically identical to :func:`lstm_cell_ref`.
+    """
+    gates = x_proj + h @ w_h + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_unrolled_ref(xs, h0, c0, w_x, w_h, b):
+    """Run the traditional cell over a [T, B, I] sequence (oracle for the
+    hoisted pipeline)."""
+
+    def step(carry, x):
+        h, c = carry
+        h, c = lstm_cell_ref(x, h, c, w_x, w_h, b)
+        return (h, c), h
+
+    (_, _), hs = jax.lax.scan(step, (h0, c0), xs)
+    return hs
+
+
+def lstm_hoisted_pipeline_ref(xs, h0, c0, w_x, w_h, b):
+    """Hoisted formulation over a sequence: one big [T*B, I] @ [I, 4H] matmul
+    outside the loop, then the cheap recurrent part. Must equal
+    :func:`lstm_unrolled_ref` to float tolerance."""
+    t, bsz, _ = xs.shape
+    x_proj = (xs.reshape(t * bsz, -1) @ w_x).reshape(t, bsz, -1)
+
+    def step(carry, xp):
+        h, c = carry
+        h, c = lstm_cell_hoisted_ref(xp, h, c, w_h, b)
+        return (h, c), h
+
+    (_, _), hs = jax.lax.scan(step, (h0, c0), x_proj)
+    return hs

@@ -1,0 +1,155 @@
+"""VMEM-footprint and MXU-utilization estimator for the Pallas kernels.
+
+``interpret=True`` gives CPU-numpy timings only, which say nothing about TPU
+performance; what *is* knowable statically is (a) the VMEM working set each
+grid step pins, and (b) the fraction of the kernel's FLOPs that land on the
+MXU at a given tile shape. These two numbers are the L1 perf deliverable
+(DESIGN.md §5) and are asserted in pytest so a kernel edit that blows the
+VMEM budget or de-MXU-shapes a matmul fails CI.
+
+TPU-v3 constants (per core):
+  VMEM          = 16 MiB
+  MXU           = 128x128 systolic array, bf16 multiply / f32 accumulate
+  peak bf16     = 52.5 TFLOP/s per core (105 TF/chip / 2 cores, paper Fig. 1:
+                  420 TF per 4-chip device)
+  HBM bandwidth = 450 GB/s per core (900 GB/chip)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128
+PEAK_BF16_FLOPS = 52.5e12
+HBM_BYTES_PER_S = 450e9
+
+
+@dataclass
+class KernelEstimate:
+    """Static per-grid-step resource estimate for one Pallas kernel."""
+
+    name: str
+    vmem_bytes: int          # working set pinned per grid step
+    mxu_flops: float         # FLOPs issued as MXU matmuls per grid step
+    vpu_flops: float         # FLOPs on the vector unit per grid step
+    hbm_bytes: int           # HBM traffic per grid step (stream in + out)
+
+    @property
+    def vmem_frac(self) -> float:
+        return self.vmem_bytes / VMEM_BYTES
+
+    @property
+    def mxu_utilization(self) -> float:
+        """Fraction of MXU issue slots filled, accounting for tile padding
+        up to the 128x128 systolic array."""
+        total = self.mxu_flops + self.vpu_flops
+        return 0.0 if total == 0 else self.mxu_flops / total
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return (self.mxu_flops + self.vpu_flops) / max(self.hbm_bytes, 1)
+
+    @property
+    def roofline_bound(self) -> str:
+        knee = PEAK_BF16_FLOPS / HBM_BYTES_PER_S  # ≈117 FLOP/byte on v3
+        return "compute" if self.arithmetic_intensity >= knee else "memory"
+
+    def est_step_seconds(self) -> float:
+        """Max of compute-limited and memory-limited time per grid step."""
+        t_compute = (self.mxu_flops + self.vpu_flops) / PEAK_BF16_FLOPS
+        t_memory = self.hbm_bytes / HBM_BYTES_PER_S
+        return max(t_compute, t_memory)
+
+
+def _mxu_padded(m: int, n: int, k: int) -> float:
+    """FLOPs a [m,k]@[k,n] matmul *occupies* on the MXU after padding each
+    dimension up to the 128 systolic tile (wasted lanes still burn slots)."""
+    up = lambda x: -(-x // MXU_DIM) * MXU_DIM
+    return 2.0 * up(m) * up(n) * up(k)
+
+
+def lars_update_estimate(blk: int = 2048) -> KernelEstimate:
+    # Elementwise: 5 streams of f32[blk] in (w,g,v,hp,norms≈0) + 2 out.
+    return KernelEstimate(
+        name="lars_update",
+        vmem_bytes=5 * blk * 4,
+        mxu_flops=0.0,
+        vpu_flops=8.0 * blk,   # mul/add chain per element
+        hbm_bytes=5 * blk * 4,
+    )
+
+
+def adam_update_estimate(blk: int = 2048) -> KernelEstimate:
+    return KernelEstimate(
+        name="adam_update",
+        vmem_bytes=7 * blk * 4,
+        mxu_flops=0.0,
+        vpu_flops=12.0 * blk,
+        hbm_bytes=7 * blk * 4,
+    )
+
+
+def attention_estimate(seq: int, dhead: int) -> KernelEstimate:
+    # Per (batch*head) grid step: q,k,v,o [S,D] + logits/probs [S,S] in f32.
+    vmem = 4 * seq * dhead * 4 + 2 * seq * seq * 4
+    qk = _mxu_padded(seq, seq, dhead)
+    pv = _mxu_padded(seq, dhead, seq)
+    softmax = 6.0 * seq * seq
+    return KernelEstimate(
+        name=f"attention_s{seq}_d{dhead}",
+        vmem_bytes=vmem,
+        mxu_flops=qk + pv,
+        vpu_flops=softmax,
+        hbm_bytes=4 * seq * dhead * 4,
+    )
+
+
+def lstm_cell_estimate(batch_tile: int, hidden: int) -> KernelEstimate:
+    # Per grid step: x_proj [Bt,4H], h,c [Bt,H], w_h [H,4H], outputs.
+    vmem = (batch_tile * 4 * hidden + 4 * batch_tile * hidden
+            + hidden * 4 * hidden + 4 * hidden) * 4
+    matmul = _mxu_padded(batch_tile, 4 * hidden, hidden)
+    gates = 10.0 * batch_tile * 4 * hidden
+    return KernelEstimate(
+        name=f"lstm_cell_b{batch_tile}_h{hidden}",
+        vmem_bytes=vmem,
+        mxu_flops=matmul,
+        vpu_flops=gates,
+        hbm_bytes=(hidden * 4 * hidden + 6 * batch_tile * hidden) * 4,
+    )
+
+
+ALL_ESTIMATES = [
+    lars_update_estimate(),
+    adam_update_estimate(),
+    attention_estimate(64, 32),
+    attention_estimate(128, 64),
+    attention_estimate(256, 64),
+    lstm_cell_estimate(8, 128),
+    lstm_cell_estimate(8, 512),
+]
+
+# GNMT's production hidden size does NOT fit: w_h f32[1024, 4096] is 16.8 MB
+# alone — the reason the paper's GNMT keeps weights bf16 and the XLA
+# weight-update sharding splits optimizer state across cores. Asserted in
+# tests/test_vmem.py::test_gnmt_full_hidden_exceeds_vmem.
+GNMT_FULL_HIDDEN = 1024
+
+
+def report() -> str:
+    lines = [
+        f"{'kernel':<24}{'VMEM':>10}{'%VMEM':>8}{'MXU%':>7}"
+        f"{'AI(F/B)':>9}{'bound':>9}"
+    ]
+    for e in ALL_ESTIMATES:
+        lines.append(
+            f"{e.name:<24}{e.vmem_bytes:>10}{100*e.vmem_frac:>7.2f}%"
+            f"{100*e.mxu_utilization:>6.1f}%{e.arithmetic_intensity:>9.2f}"
+            f"{e.roofline_bound:>9}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

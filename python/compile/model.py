@@ -1,0 +1,172 @@
+"""L2: transformer language model fwd/bwd in JAX, calling the L1 Pallas
+attention kernel, shaped like the paper's MLPerf Transformer workload.
+
+The train step deliberately returns **(loss, grads...)** rather than updated
+weights: the optimizer is the Rust coordinator's job (paper §2 weight-update
+sharding — the update is sharded across cores *after* gradient summation, so
+it cannot live inside the per-core fwd/bwd HLO).
+
+Mixed precision follows the paper's rule: matmul/attention operands are cast
+to bfloat16 with f32 accumulation; layer-norm, softmax, loss and gradient
+summation stay f32.
+
+Parameters travel as a flat ordered list of tensors. ``param_spec`` is the
+single source of truth for that order; aot.py serialises it into
+artifacts/manifest.json so the Rust side can allocate/iterate identically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import TransformerConfig
+from .kernels.attention import attention
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec / init
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: TransformerConfig):
+    """Ordered [(name, shape)] for every trainable tensor."""
+    spec = [("embed", (cfg.vocab, cfg.d_model))]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        spec += [
+            (p + "ln1.scale", (cfg.d_model,)),
+            (p + "ln1.bias", (cfg.d_model,)),
+            (p + "attn.wq", (cfg.d_model, cfg.d_model)),
+            (p + "attn.wk", (cfg.d_model, cfg.d_model)),
+            (p + "attn.wv", (cfg.d_model, cfg.d_model)),
+            (p + "attn.wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2.scale", (cfg.d_model,)),
+            (p + "ln2.bias", (cfg.d_model,)),
+            (p + "mlp.w1", (cfg.d_model, cfg.d_ff)),
+            (p + "mlp.b1", (cfg.d_ff,)),
+            (p + "mlp.w2", (cfg.d_ff, cfg.d_model)),
+            (p + "mlp.b2", (cfg.d_model,)),
+        ]
+    spec += [("ln_f.scale", (cfg.d_model,)), ("ln_f.bias", (cfg.d_model,))]
+    return spec
+
+
+def init_params(cfg: TransformerConfig, key):
+    """Scaled-normal init; scale/bias tensors start at 1/0."""
+    params = []
+    for i, (name, shape) in enumerate(param_spec(cfg)):
+        if name.endswith(".scale"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".bias", ".b1", ".b2")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            std = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+            params.append(
+                std * jax.random.normal(jax.random.fold_in(key, i), shape,
+                                        jnp.float32))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _matmul(x, w, mixed: bool):
+    """Paper mixed-precision rule: bf16 operands, f32 accumulation."""
+    if mixed:
+        return jnp.dot(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+    return jnp.dot(x, w)
+
+
+def _layer_norm(x, scale, bias, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def forward(cfg: TransformerConfig, params, tokens):
+    """tokens [B, S] int32 → logits [B, S, V] f32 (weight-tied output)."""
+    it = iter(params)
+    nxt = lambda: next(it)
+    embed = nxt()
+    x = embed[tokens]  # [B, S, D]
+    b, s, d = x.shape
+    for _ in range(cfg.n_layers):
+        ln1s, ln1b = nxt(), nxt()
+        wq, wk, wv, wo = nxt(), nxt(), nxt(), nxt()
+        ln2s, ln2b = nxt(), nxt()
+        w1, b1, w2, b2 = nxt(), nxt(), nxt(), nxt()
+        h = _layer_norm(x, ln1s, ln1b)
+        q = _matmul(h, wq, cfg.mixed_bf16)
+        k = _matmul(h, wk, cfg.mixed_bf16)
+        v = _matmul(h, wv, cfg.mixed_bf16)
+        split = lambda t: t.reshape(b, s, cfg.n_heads, cfg.d_head).transpose(
+            0, 2, 1, 3)
+        o = attention(split(q), split(k), split(v))  # L1 Pallas kernel
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+        x = x + _matmul(o, wo, cfg.mixed_bf16)
+        h = _layer_norm(x, ln2s, ln2b)
+        h = jax.nn.relu(_matmul(h, w1, cfg.mixed_bf16) + b1)
+        x = x + _matmul(h, w2, cfg.mixed_bf16) + b2
+    lnfs, lnfb = nxt(), nxt()
+    x = _layer_norm(x, lnfs, lnfb)
+    return _matmul(x, embed.T, cfg.mixed_bf16)  # tied softmax weights
+
+
+def _token_losses(cfg, params, tokens, targets):
+    """Per-token NLL [B, S], f32 (softmax in f32 per the paper)."""
+    logits = forward(cfg, params, tokens).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+
+
+def loss_fn(cfg: TransformerConfig, params, tokens, targets):
+    return jnp.mean(_token_losses(cfg, params, tokens, targets))
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: TransformerConfig):
+    """(params..., tokens, targets) → (loss, grads...) — grads in param_spec
+    order, f32, ready for the Rust 2-D gradient summation."""
+
+    def train_step(*args):
+        nparams = len(param_spec(cfg))
+        params = list(args[:nparams])
+        tokens, targets = args[nparams], args[nparams + 1]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, tokens, targets))(params)
+        return (loss, *grads)
+
+    return train_step
+
+
+def make_eval_step(cfg: TransformerConfig):
+    """(params..., tokens, targets, mask) → (loss_sum, correct, count).
+
+    ``mask`` is f32[B]: 1 for real eval examples, 0 for the zero-padding the
+    distributed evaluator adds so the eval set divides the core count
+    (paper §2 'Distribute evaluation computation'). Only masked-in tokens
+    contribute — the Rust side just sums the three scalars across cores.
+    """
+
+    def eval_step(*args):
+        nparams = len(param_spec(cfg))
+        params = list(args[:nparams])
+        tokens, targets, mask = args[nparams:nparams + 3]
+        losses = _token_losses(cfg, params, tokens, targets)  # [B, S]
+        logits = forward(cfg, params, tokens)
+        pred = jnp.argmax(logits, axis=-1)
+        correct = (pred == targets).astype(jnp.float32)
+        m = mask[:, None]
+        count = jnp.sum(m * jnp.ones_like(losses))
+        return (jnp.sum(losses * m), jnp.sum(correct * m), count)
+
+    return eval_step

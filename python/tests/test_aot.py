@@ -1,0 +1,91 @@
+"""AOT pipeline checks: every artifact lowers to parseable HLO text whose
+entry computation has the input arity the manifest promises. Runs the real
+builder into a temp dir (fast: tiny preset only).
+"""
+
+import json
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(__file__)))
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--presets", "tiny"],
+        cwd=os.path.join(REPO, "python"), check=True, capture_output=True)
+    with open(out / "manifest.json") as f:
+        manifest = json.load(f)
+    return out, manifest
+
+
+def test_manifest_lists_all_files(built):
+    out, manifest = built
+    for art in manifest["artifacts"]:
+        assert (out / art["file"]).exists(), art["name"]
+
+
+def test_hlo_text_has_entry(built):
+    out, manifest = built
+    for art in manifest["artifacts"]:
+        text = (out / art["file"]).read_text()
+        assert "ENTRY" in text, art["name"]
+        assert "HloModule" in text, art["name"]
+
+
+def test_entry_arity_matches_manifest(built):
+    """Parameter count in the ENTRY computation must equal the manifest's
+    input list — this is the contract the Rust runtime trusts blindly."""
+    out, manifest = built
+    for art in manifest["artifacts"]:
+        text = (out / art["file"]).read_text()
+        entry = text[text.index("ENTRY"):]
+        body = entry[:entry.index("ROOT")]
+        nparams = len(re.findall(r"parameter\(\d+\)", body))
+        assert nparams == len(art["inputs"]), art["name"]
+
+
+def test_train_step_output_arity(built):
+    _, manifest = built
+    arts = {a["name"]: a for a in manifest["artifacts"]}
+    train = arts["transformer_train_tiny"]
+    nparams = len(manifest["params"]["transformer_tiny"])
+    assert len(train["outputs"]) == 1 + nparams  # loss + one grad per param
+    assert len(train["inputs"]) == nparams + 2   # params + tokens + targets
+
+
+def test_param_manifest_matches_spec(built):
+    _, manifest = built
+    from compile import model
+    from compile.configs import TRANSFORMER_PRESETS
+    spec = model.param_spec(TRANSFORMER_PRESETS["tiny"])
+    entry = manifest["params"]["transformer_tiny"]
+    assert [(e["name"], tuple(e["shape"])) for e in entry] == spec
+
+
+def test_optimizer_artifacts_present(built):
+    _, manifest = built
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert {"lars_scaled_16384", "lars_unscaled_16384", "adam_16384",
+            "attention_b8h4s64d32", "lstm_cell_b8h128"} <= names
+
+
+def test_rebuild_is_deterministic(built, tmp_path):
+    """Same inputs → same HLO hash (Makefile staleness contract)."""
+    out, manifest = built
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+         "--presets", "tiny"],
+        cwd=os.path.join(REPO, "python"), check=True, capture_output=True)
+    with open(tmp_path / "manifest.json") as f:
+        manifest2 = json.load(f)
+    h1 = {a["name"]: a["sha256"] for a in manifest["artifacts"]}
+    h2 = {a["name"]: a["sha256"] for a in manifest2["artifacts"]}
+    assert h1 == h2

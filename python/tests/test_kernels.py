@@ -1,0 +1,184 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (kernels/ref.py),
+hypothesis-swept over shapes, sizes and hyper-parameters.
+
+This is the core correctness signal for the kernel layer: the Rust optimizer
+implementations are separately bit-compared against HLO lowered from these
+same kernels, so kernel==ref here closes the Rust==Pallas==ref triangle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adam, attention, lars, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# LARS
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=3 * lars.BLK + 17),
+    lr=st.floats(1e-4, 10.0),
+    eta=st.floats(1e-4, 0.1),
+    beta=st.floats(0.0, 1e-2),
+    momentum=st.floats(0.0, 0.99),
+    scaled=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_lars_matches_ref(n, lr, eta, beta, momentum, scaled, seed):
+    w, g, v = (_rand(seed + i, n) for i in range(3))
+    hp = jnp.array([lr, eta, beta, momentum], jnp.float32)
+    w1, v1 = lars.lars_update(w, g, v, hp, scaled=scaled)
+    fn = ref.lars_scaled_ref if scaled else ref.lars_unscaled_ref
+    w2, v2 = fn(w, g, v, lr, eta, beta, momentum)
+    np.testing.assert_allclose(w1, w2, rtol=3e-5, atol=1e-5)
+    np.testing.assert_allclose(v1, v2, rtol=3e-5, atol=1e-5)
+
+
+def test_lars_variants_differ():
+    """Scaled vs unscaled momentum must actually diverge (Figures 5 vs 6) —
+    they are identical only in the first step from v=0 when lr*lam == lam."""
+    n = 4096
+    w, g = _rand(0, n), _rand(1, n)
+    v = jnp.abs(_rand(2, n))
+    hp = jnp.array([0.5, 0.01, 1e-4, 0.9], jnp.float32)
+    ws, _ = lars.lars_update(w, g, v, hp, scaled=True)
+    wu, _ = lars.lars_update(w, g, v, hp, scaled=False)
+    assert not np.allclose(ws, wu)
+
+
+def test_lars_padding_is_neutral():
+    """Auto-padding must not perturb norms: padded result == exact-size
+    result on the unpadded prefix."""
+    n = lars.BLK + 123
+    w, g, v = (_rand(i, n) for i in range(3))
+    hp = jnp.array([0.1, 0.01, 1e-4, 0.9], jnp.float32)
+    w1, v1 = lars.lars_update(w, g, v, hp, scaled=False)
+    w2, v2 = ref.lars_unscaled_ref(w, g, v, 0.1, 0.01, 1e-4, 0.9)
+    np.testing.assert_allclose(w1, w2, rtol=3e-5, atol=1e-5)
+
+
+def test_lars_norms_blocked_reduction():
+    n = 4 * lars.BLK
+    w, g = _rand(0, n), _rand(1, n)
+    norms = lars.lars_norms(w, g)
+    np.testing.assert_allclose(norms[0], jnp.sum(w * w), rtol=1e-5)
+    np.testing.assert_allclose(norms[1], jnp.sum(g * g), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=2 * adam.BLK + 5),
+    lr=st.floats(1e-5, 1e-1),
+    beta1=st.floats(0.5, 0.999),
+    beta2=st.floats(0.9, 0.9999),
+    step=st.integers(1, 10000),
+    seed=st.integers(0, 2**16),
+)
+def test_adam_matches_ref(n, lr, beta1, beta2, step, seed):
+    w, g = _rand(seed, n), _rand(seed + 1, n)
+    m = _rand(seed + 2, n) * 0.1
+    v = jnp.abs(_rand(seed + 3, n)) * 0.01
+    hp = jnp.array([lr, beta1, beta2, 1e-8, float(step)], jnp.float32)
+    out = adam.adam_update(w, g, m, v, hp)
+    exp = ref.adam_ref(w, g, m, v, step, lr, beta1, beta2, 1e-8)
+    for got, want in zip(out, exp):
+        np.testing.assert_allclose(got, want, rtol=5e-5, atol=1e-5)
+
+
+def test_adam_moments_accumulate_across_steps():
+    """Chained kernel steps must track the oracle over a short trajectory."""
+    n = 1000
+    w, m, v = _rand(0, n), jnp.zeros(n), jnp.zeros(n)
+    w2, m2, v2 = w, m, v
+    for step in range(1, 6):
+        g = _rand(10 + step, n)
+        hp = jnp.array([1e-2, 0.9, 0.999, 1e-8, float(step)], jnp.float32)
+        w, m, v = adam.adam_update(w, g, m, v, hp)
+        w2, m2, v2 = ref.adam_ref(w2, g, m2, v2, step, 1e-2)
+    np.testing.assert_allclose(w, w2, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    s=st.sampled_from([4, 16, 33, 64]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(b, h, s, d, seed):
+    q, k, v = (_rand(seed + i, b, h, s, d) for i in range(3))
+    o = attention.attention(q, k, v)
+    exp = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(o, exp, rtol=2e-4, atol=1e-4)
+
+
+def test_attention_is_causal():
+    """Future positions must not leak: perturbing position j>i leaves row i
+    unchanged."""
+    q, k, v = (_rand(i, 1, 1, 8, 4) for i in range(3))
+    o1 = attention.attention(q, k, v)
+    k2 = k.at[0, 0, 7].set(100.0)
+    v2 = v.at[0, 0, 7].set(-100.0)
+    o2 = attention.attention(q, k2, v2)
+    np.testing.assert_allclose(o1[0, 0, :7], o2[0, 0, :7], rtol=1e-5,
+                               atol=1e-6)
+    assert not np.allclose(o1[0, 0, 7], o2[0, 0, 7])
+
+
+def test_attention_grad_matches_ref():
+    """custom_vjp backward kernel vs autodiff through the oracle."""
+    q, k, v = (_rand(i + 20, 2, 2, 16, 8) for i in range(3))
+    t = _rand(99, 2, 2, 16, 8)
+
+    def loss_kernel(q, k, v):
+        return jnp.sum((attention.attention(q, k, v) - t) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum((ref.attention_ref(q, k, v) - t) ** 2)
+
+    g1 = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4)
+
+
+def test_attention_bf16_inputs():
+    """Paper mixed-precision rule: bf16 operands, f32 softmax — kernel must
+    accept bf16 and stay close to the f32 oracle."""
+    q, k, v = (_rand(i + 40, 1, 2, 32, 16) for i in range(3))
+    o = attention.attention(q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+                            v.astype(jnp.bfloat16))
+    exp = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(o, exp, rtol=2e-2, atol=2e-2)
+
+
+def test_attention_rows_sum_preserved():
+    """With v = ones, attention output must be exactly ones (softmax rows
+    sum to 1) — a property the blocked kernel must preserve."""
+    q, k = _rand(0, 2, 2, 16, 8), _rand(1, 2, 2, 16, 8)
+    v = jnp.ones((2, 2, 16, 8), jnp.float32)
+    o = attention.attention(q, k, v)
+    np.testing.assert_allclose(o, np.ones_like(o), rtol=1e-5, atol=1e-5)

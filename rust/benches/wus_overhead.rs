@@ -1,0 +1,107 @@
+//! §2 weight-update sharding: reproduces the overhead numbers that motivate
+//! it — "ResNet-50 ... LARS optimizer weight update overhead is about 6% of
+//! the total device step time. In the MLPerf Transformer model, the ADAM
+//! optimizer weight update time is about 45%" — and shows WUS removing the
+//! overhead at scale, on both the device model and the real fabric.
+
+use tpu_pod_train::benchkit::{fmt_ratio, Table};
+use tpu_pod_train::devicesim::{step_model, weight_update_cost, TPU_V3};
+use tpu_pod_train::fabric::run_spmd;
+use tpu_pod_train::models::model;
+use tpu_pod_train::netsim::{CostModel, NetParams, Torus};
+use tpu_pod_train::optim::{adam_step, AdamConfig, AdamState};
+use tpu_pod_train::util::rng::Rng;
+use tpu_pod_train::wus::{ShardPlan, ShardedAdam};
+
+fn main() {
+    // --- modeled overhead fractions (paper's 6% / 45%) --------------------
+    let net = CostModel::new(Torus::for_chips(1024), NetParams::default());
+    let mut t = Table::new(
+        "Update share of device step at 2048 cores (replicated optimizer)",
+        &["model", "examples/core", "update fraction", "paper"],
+    );
+    for (name, ex, units, paper) in [
+        ("resnet50", 16.0, 1.0, "≈6%"),
+        ("transformer", 1.0, 33.0, "≈45%"),
+    ] {
+        let m = model(name).unwrap();
+        let s = step_model(&TPU_V3, &net, m.fwd_flops_per_example,
+                           m.hbm_bytes_per_example, ex, units, m.params,
+                           m.optimizer.bytes_per_param(), false);
+        t.row(&[name.to_string(), format!("{ex}"),
+                format!("{:.1}%", 100.0 * s.update_fraction()), paper.to_string()]);
+    }
+    t.print();
+
+    let mut t2 = Table::new(
+        "Modeled update time: replicated vs sharded (ms)",
+        &["model", "cores", "replicated", "sharded+allgather", "win"],
+    );
+    for (name, cores) in [("resnet50", 2048usize), ("transformer", 2048), ("gnmt", 1024)] {
+        let m = model(name).unwrap();
+        let uc = weight_update_cost(&TPU_V3, &net, m.params,
+                                    m.optimizer.bytes_per_param(), cores);
+        t2.row(&[name.to_string(), cores.to_string(),
+                 format!("{:.3}", uc.replicated * 1e3),
+                 format!("{:.3}", uc.sharded * 1e3),
+                 fmt_ratio(uc.replicated / uc.sharded)]);
+    }
+    t2.print();
+
+    // --- real fabric: replicated vs sharded Adam on ~0.9M params ----------
+    // Pre-allocated state, timed inside one SPMD region. On a 1-CPU host
+    // the replicated path's 8x-redundant compute is fully serialized, so
+    // sharding shows its compute win directly.
+    let sizes: Vec<usize> = vec![1 << 18, 1 << 19, 1 << 17, 12345];
+    let world = 8;
+    let iters = 20usize;
+    let total: usize = sizes.iter().sum();
+    println!("\nReal fabric ({world} cores, {:.2}M params, Adam, {iters} iters):",
+             total as f64 / 1e6);
+    let sz = sizes.clone();
+    let out = run_spmd(world, move |ep| {
+        use tpu_pod_train::collectives::all_reduce_scalars;
+        use tpu_pod_train::util::timer::Timer;
+        let group: Vec<usize> = (0..world).collect();
+        let mut rng = Rng::new(1);
+        let mut params: Vec<Vec<f32>> = sz.iter().map(|&s| rng.normal_vec(s, 0.1)).collect();
+        let grads: Vec<Vec<f32>> = sz.iter().map(|&s| rng.normal_vec(s, 0.1)).collect();
+        let mut bar = [0.0f32];
+
+        // Replicated: every core updates every parameter.
+        let mut st: Vec<AdamState> = sz.iter().map(|_| AdamState::default()).collect();
+        for ti in 0..params.len() {
+            adam_step(&AdamConfig::default(), 1e-3, 1, &mut params[ti], &grads[ti], &mut st[ti]);
+        }
+        all_reduce_scalars(ep, &group, &mut bar);
+        let t0 = Timer::start();
+        for it in 0..iters {
+            for ti in 0..params.len() {
+                adam_step(&AdamConfig::default(), 1e-3, 2 + it as u64, &mut params[ti],
+                          &grads[ti], &mut st[ti]);
+            }
+        }
+        all_reduce_scalars(ep, &group, &mut bar);
+        let repl_s = t0.secs();
+
+        // Sharded (WUS): 1/8 of the update each + all-gather.
+        let plan = ShardPlan::balanced(&sz, world);
+        let mut opt = ShardedAdam::new(AdamConfig::default(), plan, ep.rank);
+        opt.step(ep, &group, 1e-3, &mut params, &grads);
+        all_reduce_scalars(ep, &group, &mut bar);
+        let t1 = Timer::start();
+        for _ in 0..iters {
+            opt.step(ep, &group, 1e-3, &mut params, &grads);
+        }
+        all_reduce_scalars(ep, &group, &mut bar);
+        (repl_s, t1.secs())
+    });
+    let (repl_s, shard_s) = out[0];
+    println!("  replicated update: {:.2} ms/iter", repl_s * 1e3 / iters as f64);
+    println!("  sharded + gather : {:.2} ms/iter", shard_s * 1e3 / iters as f64);
+    println!("  → real speedup from WUS: {}", fmt_ratio(repl_s / shard_s));
+    println!("  (in-process, a weight all-gather costs the same memcpy/element as");
+    println!("   the update itself, so the 8x compute saving is offset by gather");
+    println!("   copies; on TPU the gather rides the torus at 2 B/param and");
+    println!("   overlaps — the modeled table above carries the paper-scale win.)");
+}

@@ -1,0 +1,180 @@
+//! Criterion-lite bench harness (no criterion crate in the offline build).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: named
+//! benchmarks with warmup, adaptive iteration counts, mean/p50/p99 output,
+//! plus a table printer for the paper-reproduction benches (each bench
+//! regenerates one paper table/figure as rows on stdout).
+
+use crate::util::timer::{percentile, Stats, Timer};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub std_s: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>8} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p99_s)
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner with warmup and a time budget.
+pub struct Bench {
+    pub warmup_s: f64,
+    pub budget_s: f64,
+    pub min_iters: u64,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Bench {
+        Bench { warmup_s: 0.3, budget_s: 1.5, min_iters: 5, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench { warmup_s: 0.05, budget_s: 0.3, min_iters: 3, results: Vec::new() }
+    }
+
+    /// Time `f` repeatedly; prints and records the result.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let w = Timer::start();
+        while w.secs() < self.warmup_s {
+            f();
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let mut stats = Stats::new();
+        let budget = Timer::start();
+        while budget.secs() < self.budget_s || (samples.len() as u64) < self.min_iters {
+            let t = Timer::start();
+            f();
+            let dt = t.secs();
+            samples.push(dt);
+            stats.push(dt);
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: samples.len() as u64,
+            mean_s: stats.mean(),
+            p50_s: percentile(&samples, 50.0),
+            p99_s: percentile(&samples, 99.0),
+            std_s: stats.std(),
+        };
+        println!("{}", r.line());
+        self.results.push(r.clone());
+        r
+    }
+}
+
+/// Fixed-width table printer for paper-table reproductions.
+pub struct Table {
+    pub title: String,
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|h| h.len().max(10)).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.headers, &self.widths));
+        let total: usize = self.widths.iter().sum::<usize>() + 2 * (self.widths.len() - 1);
+        println!("{}", "-".repeat(total));
+        for r in &self.rows {
+            println!("{}", fmt_row(r, &self.widths));
+        }
+    }
+}
+
+/// Helper: `x.yz` formatting for speedups/ratios.
+pub fn fmt_ratio(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let mut b = Bench { warmup_s: 0.0, budget_s: 0.05, min_iters: 3, results: vec![] };
+        let r = b.run("sleep-1ms", || {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert!(r.mean_s >= 0.9e-3, "{}", r.mean_s);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn table_rendering_is_aligned() {
+        let mut t = Table::new("Table 1", &["optimizer", "epochs", "seconds"]);
+        t.row(&["scaled".into(), "72.8".into(), "76.9".into()]);
+        t.row(&["unscaled-long-name".into(), "64".into(), "67.1".into()]);
+        t.print(); // should not panic
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.5), "2.500 s");
+        assert_eq!(fmt_time(2.5e-3), "2.500 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500 us");
+        assert_eq!(fmt_time(2.5e-9), "2.5 ns");
+    }
+}

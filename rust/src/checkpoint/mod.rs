@@ -1,0 +1,196 @@
+//! Checkpointing: save/restore model parameters + optimizer step counter.
+//!
+//! MLPerf's timing rules make initialization (including checkpoint
+//! restore) free, so production runs restore the pre-trained backbone
+//! (e.g. SSD's ResNet-34) before `run_start`. Format: a JSON header
+//! (tensor names/shapes/offsets, fletcher checksum) followed by raw
+//! little-endian f32 data — readable with one pass, no serde.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::ParamSpec;
+use crate::util::json::{obj, Json};
+
+/// Fletcher-64 style checksum over the raw f32 bytes.
+fn checksum(data: &[f32]) -> u64 {
+    let mut a: u64 = 1;
+    let mut b: u64 = 0;
+    for &x in data {
+        a = (a + x.to_bits() as u64) % 0xFFFF_FFFB;
+        b = (b + a) % 0xFFFF_FFFB;
+    }
+    (b << 32) | a
+}
+
+/// Save parameters (+ step) to `path`.
+pub fn save(
+    path: impl AsRef<Path>,
+    specs: &[ParamSpec],
+    params: &[Vec<f32>],
+    step: u64,
+) -> Result<()> {
+    assert_eq!(specs.len(), params.len());
+    let mut tensors = Vec::new();
+    let mut offset = 0usize;
+    for (s, p) in specs.iter().zip(params) {
+        if s.numel() != p.len() {
+            bail!("{}: spec {} elems, data {}", s.name, s.numel(), p.len());
+        }
+        tensors.push(obj(vec![
+            ("name", Json::Str(s.name.clone())),
+            ("shape", Json::Arr(s.shape.iter().map(|&d| Json::from(d)).collect())),
+            ("offset", Json::from(offset)),
+        ]));
+        offset += p.len();
+    }
+    let total_sum: u64 = params.iter().map(|p| checksum(p)).fold(0, u64::wrapping_add);
+    let header = obj(vec![
+        ("format", Json::Str("tpu-pod-train-ckpt-v1".into())),
+        ("step", Json::from(step as usize)),
+        ("total_elems", Json::from(offset)),
+        ("checksum", Json::Str(format!("{total_sum:016x}"))),
+        ("tensors", Json::Arr(tensors)),
+    ])
+    .dump();
+
+    let mut f = std::fs::File::create(&path)
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for p in params {
+        // Safe little-endian serialization.
+        let mut buf = Vec::with_capacity(p.len() * 4);
+        for &x in p {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+/// Restore a checkpoint; returns (params, step). Validates names, shapes
+/// and checksum against `specs`.
+pub fn load(path: impl AsRef<Path>, specs: &[ParamSpec]) -> Result<(Vec<Vec<f32>>, u64)> {
+    let mut f = std::fs::File::open(&path)
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    if hlen > 64 << 20 {
+        bail!("implausible header length {hlen}");
+    }
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?)
+        .map_err(|e| anyhow::anyhow!("header parse: {e}"))?;
+    if header.get("format").and_then(Json::as_str) != Some("tpu-pod-train-ckpt-v1") {
+        bail!("unknown checkpoint format");
+    }
+    let step = header.get("step").and_then(Json::as_usize).unwrap_or(0) as u64;
+    let tensors = header
+        .get("tensors")
+        .and_then(Json::as_arr)
+        .context("header missing tensors")?;
+    if tensors.len() != specs.len() {
+        bail!("checkpoint has {} tensors, model needs {}", tensors.len(), specs.len());
+    }
+    let mut params = Vec::with_capacity(specs.len());
+    for (t, s) in tensors.iter().zip(specs) {
+        let name = t.get("name").and_then(Json::as_str).unwrap_or("");
+        if name != s.name {
+            bail!("tensor order mismatch: checkpoint {name:?} vs model {:?}", s.name);
+        }
+        let shape: Vec<usize> = t
+            .get("shape")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        if shape != s.shape {
+            bail!("{name}: shape {shape:?} vs model {:?}", s.shape);
+        }
+        let n = s.numel();
+        let mut buf = vec![0u8; n * 4];
+        f.read_exact(&mut buf)?;
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        params.push(data);
+    }
+    let want = header.get("checksum").and_then(Json::as_str).unwrap_or("");
+    let got: u64 = params.iter().map(|p| checksum(p)).fold(0, u64::wrapping_add);
+    if format!("{got:016x}") != want {
+        bail!("checksum mismatch: corrupt checkpoint");
+    }
+    Ok((params, step))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "embed".into(), shape: vec![16, 8] },
+            ParamSpec { name: "layer0.w".into(), shape: vec![8, 8] },
+            ParamSpec { name: "bias".into(), shape: vec![8] },
+        ]
+    }
+
+    fn make_params(seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        specs().iter().map(|s| rng.normal_vec(s.numel(), 1.0)).collect()
+    }
+
+    #[test]
+    fn round_trip_exact() {
+        let dir = std::env::temp_dir().join("tpt_ckpt_rt.bin");
+        let params = make_params(1);
+        save(&dir, &specs(), &params, 42).unwrap();
+        let (restored, step) = load(&dir, &specs()).unwrap();
+        assert_eq!(step, 42);
+        assert_eq!(restored, params); // bit-exact
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("tpt_ckpt_shape.bin");
+        save(&dir, &specs(), &make_params(2), 0).unwrap();
+        let mut wrong = specs();
+        wrong[1].shape = vec![4, 16];
+        assert!(load(&dir, &wrong).is_err());
+    }
+
+    #[test]
+    fn name_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("tpt_ckpt_name.bin");
+        save(&dir, &specs(), &make_params(3), 0).unwrap();
+        let mut wrong = specs();
+        wrong[0].name = "other".into();
+        assert!(load(&dir, &wrong).is_err());
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = std::env::temp_dir().join("tpt_ckpt_corrupt.bin");
+        save(&dir, &specs(), &make_params(4), 0).unwrap();
+        // Flip a payload byte near the end.
+        let mut bytes = std::fs::read(&dir).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0xFF;
+        std::fs::write(&dir, bytes).unwrap();
+        let err = load(&dir, &specs()).unwrap_err();
+        assert!(format!("{err}").contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(load("/nonexistent/ckpt.bin", &specs()).is_err());
+    }
+}

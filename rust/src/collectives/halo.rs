@@ -1,0 +1,108 @@
+//! Halo exchange for spatial partitioning (paper §2, Fig. 3: "Halo exchange
+//! communication operations are added to synchronize TPU-v3 cores that
+//! execute spatially partitioned workloads").
+//!
+//! 1-D stripe partitioning of the image height: worker i holds rows
+//! [r_i, r_{i+1}); a K×K convolution needs K/2 rows of halo from each
+//! spatial neighbor. Halos may ride bf16 (activations are matmul/conv
+//! operands under the paper's mixed-precision rule).
+
+use crate::fabric::{Endpoint, Payload};
+use crate::util::bf16::pack_bf16;
+
+/// Exchange halo rows with stripe neighbors.
+///
+/// * `group` — fabric ranks of the spatial partition, in stripe order.
+/// * `top`/`bottom` — this worker's boundary rows to send (its first/last
+///   `halo` rows); `None` at the partition edges.
+/// * Returns `(halo_from_above, halo_from_below)` as f32.
+pub fn halo_exchange(
+    ep: &mut Endpoint,
+    group: &[usize],
+    top_rows: Option<&[f32]>,
+    bottom_rows: Option<&[f32]>,
+    bf16_wire: bool,
+) -> (Option<Vec<f32>>, Option<Vec<f32>>) {
+    let pos = group.iter().position(|&r| r == ep.rank).expect("rank not in group");
+    let tags = ep.fresh_tags(2);
+    let up_tag = tags; // messages travelling toward lower indices
+    let down_tag = tags + 1;
+
+    let wrap = |data: &[f32]| -> Payload {
+        if bf16_wire {
+            Payload::Bf16(pack_bf16(data))
+        } else {
+            Payload::F32(data.to_vec())
+        }
+    };
+
+    // Send my top boundary up, my bottom boundary down.
+    if pos > 0 {
+        let rows = top_rows.expect("interior worker must provide top rows");
+        ep.send(group[pos - 1], up_tag, wrap(rows));
+    }
+    if pos + 1 < group.len() {
+        let rows = bottom_rows.expect("interior worker must provide bottom rows");
+        ep.send(group[pos + 1], down_tag, wrap(rows));
+    }
+
+    // Receive the matching halos.
+    let from_above =
+        (pos > 0).then(|| ep.recv(group[pos - 1], down_tag).into_f32());
+    let from_below =
+        (pos + 1 < group.len()).then(|| ep.recv(group[pos + 1], up_tag).into_f32());
+    (from_above, from_below)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::run_spmd;
+
+    #[test]
+    fn three_way_stripe_exchange() {
+        let out = run_spmd(3, |ep| {
+            let group = [0, 1, 2];
+            let mine = vec![ep.rank as f32 * 10.0; 4];
+            let (above, below) = halo_exchange(
+                ep,
+                &group,
+                (ep.rank > 0).then_some(&mine[..]),
+                (ep.rank < 2).then_some(&mine[..]),
+                false,
+            );
+            (above, below)
+        });
+        // rank 0: nothing above, rank1's rows below.
+        assert_eq!(out[0].0, None);
+        assert_eq!(out[0].1, Some(vec![10.0; 4]));
+        assert_eq!(out[1].0, Some(vec![0.0; 4]));
+        assert_eq!(out[1].1, Some(vec![20.0; 4]));
+        assert_eq!(out[2].0, Some(vec![10.0; 4]));
+        assert_eq!(out[2].1, None);
+    }
+
+    #[test]
+    fn bf16_wire_round_trips_representable_values() {
+        let out = run_spmd(2, |ep| {
+            let group = [0, 1];
+            let mine = vec![1.5f32, -0.25, 8.0];
+            let (above, below) = halo_exchange(
+                ep,
+                &group,
+                (ep.rank == 1).then_some(&mine[..]),
+                (ep.rank == 0).then_some(&mine[..]),
+                true,
+            );
+            (above, below)
+        });
+        assert_eq!(out[0].1, Some(vec![1.5, -0.25, 8.0]));
+        assert_eq!(out[1].0, Some(vec![1.5, -0.25, 8.0]));
+    }
+
+    #[test]
+    fn single_worker_no_exchange() {
+        let out = run_spmd(1, |ep| halo_exchange(ep, &[0], None, None, false));
+        assert_eq!(out[0], (None, None));
+    }
+}

@@ -1,0 +1,16 @@
+//! Collectives on real buffers over the in-process fabric: ring primitives,
+//! the paper's 2-D torus all-reduce, pipelined non-contiguous gradient
+//! summation (§2), and halo exchange for spatial partitioning.
+
+pub mod gradsum;
+pub mod halo;
+pub mod ring;
+pub mod torus2d;
+
+pub use gradsum::{gradsum_pipelined, gradsum_pipelined_ws, gradsum_serial, FlatView, GradSumWorkspace};
+pub use halo::halo_exchange;
+pub use ring::{
+    all_gather_concat, all_reduce_scalars, broadcast, chunk_range, owned_chunk,
+    ring_all_gather, ring_all_reduce, ring_reduce_scatter,
+};
+pub use torus2d::{torus2d_all_reduce, Placement};

@@ -1,0 +1,286 @@
+//! Ring collectives on real buffers over the fabric: the building blocks
+//! both the 1-D baseline and the paper's 2-D torus schedule compose.
+//!
+//! All functions are SPMD: every rank in `group` calls the same function
+//! with the same `group` slice; `group[i]` is the fabric rank at ring
+//! position i. Tags are allocated from the endpoint's deterministic
+//! allocator so back-to-back collectives never alias.
+
+use crate::fabric::{Endpoint, Payload};
+
+/// Balanced chunk boundaries: chunk `c` of `n` over `len` elements.
+pub fn chunk_range(len: usize, n: usize, c: usize) -> std::ops::Range<usize> {
+    let base = len / n;
+    let rem = len % n;
+    let start = c * base + c.min(rem);
+    let size = base + usize::from(c < rem);
+    start..start + size
+}
+
+/// Ring position of this endpoint within `group` (panics if absent).
+fn my_pos(ep: &Endpoint, group: &[usize]) -> usize {
+    group.iter().position(|&r| r == ep.rank).expect("rank not in group")
+}
+
+/// After [`ring_reduce_scatter`], ring position `pos` owns this chunk index.
+pub fn owned_chunk(pos: usize, n: usize) -> usize {
+    (pos + 1) % n
+}
+
+/// Ring reduce-scatter: on return, each rank's `data[chunk_range(owned)]`
+/// holds the group sum of that chunk; other regions are partial garbage.
+pub fn ring_reduce_scatter(ep: &mut Endpoint, group: &[usize], data: &mut [f32]) {
+    let n = group.len();
+    if n <= 1 {
+        return;
+    }
+    let pos = my_pos(ep, group);
+    let next = group[(pos + 1) % n];
+    let prev = group[(pos + n - 1) % n];
+    let tags = ep.fresh_tags(n as u64);
+    for step in 0..n - 1 {
+        let send_c = (pos + n - step) % n;
+        let recv_c = (pos + n - step - 1) % n;
+        let sr = chunk_range(data.len(), n, send_c);
+        ep.send(next, tags + step as u64, Payload::F32(data[sr].to_vec()));
+        let incoming = ep.recv(prev, tags + step as u64).into_f32();
+        let rr = chunk_range(data.len(), n, recv_c);
+        // f32 accumulation (paper: gradient summation in 32-bit).
+        for (d, x) in data[rr].iter_mut().zip(incoming) {
+            *d += x;
+        }
+    }
+}
+
+/// Ring all-gather assuming each rank's owned chunk (per [`owned_chunk`])
+/// is valid; on return every rank holds all chunks.
+pub fn ring_all_gather(ep: &mut Endpoint, group: &[usize], data: &mut [f32]) {
+    let n = group.len();
+    if n <= 1 {
+        return;
+    }
+    let pos = my_pos(ep, group);
+    let next = group[(pos + 1) % n];
+    let prev = group[(pos + n - 1) % n];
+    let tags = ep.fresh_tags(n as u64);
+    for step in 0..n - 1 {
+        let send_c = (pos + 1 + n - step) % n;
+        let recv_c = (pos + n - step) % n;
+        let sr = chunk_range(data.len(), n, send_c);
+        ep.send(next, tags + step as u64, Payload::F32(data[sr].to_vec()));
+        let incoming = ep.recv(prev, tags + step as u64).into_f32();
+        let rr = chunk_range(data.len(), n, recv_c);
+        data[rr].copy_from_slice(&incoming);
+    }
+}
+
+/// Full ring all-reduce (reduce-scatter + all-gather).
+pub fn ring_all_reduce(ep: &mut Endpoint, group: &[usize], data: &mut [f32]) {
+    ring_reduce_scatter(ep, group, data);
+    ring_all_gather(ep, group, data);
+}
+
+/// All-gather of variable-size parts: every rank contributes `mine`; the
+/// return value is the concatenation in ring-position order. Used by
+/// weight-update sharding to broadcast freshly-updated weight shards
+/// (paper §2, Fig. 4 "optimized all-gather").
+pub fn all_gather_concat(ep: &mut Endpoint, group: &[usize], mine: &[f32]) -> Vec<f32> {
+    let n = group.len();
+    let pos = my_pos(ep, group);
+    let tags = ep.fresh_tags(n as u64);
+    if n == 1 {
+        return mine.to_vec();
+    }
+    let next = group[(pos + 1) % n];
+    let prev = group[(pos + n - 1) % n];
+    // Pipelined ring: forward my part, then keep forwarding what arrives.
+    let mut parts: Vec<Option<Vec<f32>>> = vec![None; n];
+    parts[pos] = Some(mine.to_vec());
+    let mut cur = mine.to_vec();
+    let mut cur_owner = pos;
+    for step in 0..n - 1 {
+        ep.send(next, tags + step as u64, Payload::F32(cur));
+        let incoming = ep.recv(prev, tags + step as u64).into_f32();
+        cur_owner = (cur_owner + n - 1) % n;
+        parts[cur_owner] = Some(incoming.clone());
+        cur = incoming;
+    }
+    parts.into_iter().flat_map(|p| p.expect("missing part")).collect()
+}
+
+/// Root broadcast (weight init / restored checkpoints).
+pub fn broadcast(ep: &mut Endpoint, group: &[usize], root_pos: usize, data: &mut Vec<f32>) {
+    let n = group.len();
+    if n <= 1 {
+        return;
+    }
+    let pos = my_pos(ep, group);
+    let tags = ep.fresh_tags(1);
+    // Simple ring pipeline from the root.
+    let rel = (pos + n - root_pos) % n;
+    if rel != 0 {
+        let prev = group[(pos + n - 1) % n];
+        *data = ep.recv(prev, tags).into_f32();
+    }
+    if rel != n - 1 {
+        let next = group[(pos + 1) % n];
+        ep.send(next, tags, Payload::F32(data.clone()));
+    }
+}
+
+/// All-reduce a small vector of scalars (eval metrics, BN statistics).
+pub fn all_reduce_scalars(ep: &mut Endpoint, group: &[usize], vals: &mut [f32]) {
+    let mut buf = vals.to_vec();
+    // Scalars are far smaller than a chunk per rank; gather-to-all directly.
+    let n = group.len();
+    if n <= 1 {
+        return;
+    }
+    let tags = ep.fresh_tags(1);
+    for &peer in group {
+        if peer != ep.rank {
+            ep.send(peer, tags, Payload::F32(buf.clone()));
+        }
+    }
+    for &peer in group {
+        if peer != ep.rank {
+            let theirs = ep.recv(peer, tags).into_f32();
+            for (b, x) in buf.iter_mut().zip(theirs) {
+                *b += x;
+            }
+        }
+    }
+    vals.copy_from_slice(&buf);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::run_spmd;
+
+    #[test]
+    fn chunk_ranges_partition() {
+        for (len, n) in [(10, 3), (7, 7), (5, 8), (100, 4)] {
+            let mut covered = 0;
+            for c in 0..n {
+                let r = chunk_range(len, n, c);
+                assert_eq!(r.start, covered);
+                covered = r.end;
+            }
+            assert_eq!(covered, len);
+        }
+    }
+
+    #[test]
+    fn all_reduce_sums_across_ranks() {
+        let world = 4;
+        let len = 37;
+        let out = run_spmd(world, |ep| {
+            let group: Vec<usize> = (0..world).collect();
+            let mut data: Vec<f32> = (0..len).map(|i| (ep.rank * 100 + i) as f32).collect();
+            ring_all_reduce(ep, &group, &mut data);
+            data
+        });
+        for i in 0..len {
+            let expect: f32 = (0..world).map(|r| (r * 100 + i) as f32).sum();
+            for r in 0..world {
+                assert_eq!(out[r][i], expect, "elt {i} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_owned_chunks_correct() {
+        let world = 3;
+        let len = 11;
+        let out = run_spmd(world, |ep| {
+            let group: Vec<usize> = (0..world).collect();
+            let mut data: Vec<f32> = (0..len).map(|i| (ep.rank + 1) as f32 * i as f32).collect();
+            ring_reduce_scatter(ep, &group, &mut data);
+            let own = owned_chunk(ep.rank, world);
+            let r = chunk_range(len, world, own);
+            (own, data[r].to_vec())
+        });
+        let total: f32 = (1..=world).map(|x| x as f32).sum();
+        for (own, chunk) in out {
+            let r = chunk_range(len, world, own);
+            for (j, &v) in chunk.iter().enumerate() {
+                assert_eq!(v, total * (r.start + j) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_concat_orders_parts() {
+        let world = 5;
+        let out = run_spmd(world, |ep| {
+            let group: Vec<usize> = (0..world).collect();
+            let mine = vec![ep.rank as f32; ep.rank + 1]; // variable sizes
+            all_gather_concat(ep, &group, &mine)
+        });
+        let expect: Vec<f32> =
+            (0..world).flat_map(|r| std::iter::repeat(r as f32).take(r + 1)).collect();
+        for r in 0..world {
+            assert_eq!(out[r], expect, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn broadcast_from_nonzero_root() {
+        let world = 4;
+        let out = run_spmd(world, |ep| {
+            let group: Vec<usize> = (0..world).collect();
+            let mut data = if ep.rank == 2 { vec![3.25, -1.5] } else { vec![0.0, 0.0] };
+            broadcast(ep, &group, 2, &mut data);
+            data
+        });
+        for r in 0..world {
+            assert_eq!(out[r], vec![3.25, -1.5]);
+        }
+    }
+
+    #[test]
+    fn scalar_all_reduce() {
+        let world = 6;
+        let out = run_spmd(world, |ep| {
+            let group: Vec<usize> = (0..world).collect();
+            let mut vals = [1.0, ep.rank as f32];
+            all_reduce_scalars(ep, &group, &mut vals);
+            vals
+        });
+        for r in 0..world {
+            assert_eq!(out[r][0], world as f32);
+            assert_eq!(out[r][1], (0..world).sum::<usize>() as f32);
+        }
+    }
+
+    #[test]
+    fn subgroup_collectives_dont_cross() {
+        // Two disjoint groups all-reduce concurrently; sums stay in-group.
+        let out = run_spmd(4, |ep| {
+            let group: Vec<usize> =
+                if ep.rank < 2 { vec![0, 1] } else { vec![2, 3] };
+            let mut data = vec![ep.rank as f32 + 1.0];
+            ring_all_reduce(ep, &group, &mut data);
+            data[0]
+        });
+        assert_eq!(out, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn back_to_back_collectives_no_alias() {
+        // Tag allocator must keep consecutive all-reduces separate even
+        // when ranks race ahead.
+        let out = run_spmd(3, |ep| {
+            let group: Vec<usize> = (0..3).collect();
+            let mut a = vec![1.0f32];
+            let mut b = vec![10.0f32];
+            ring_all_reduce(ep, &group, &mut a);
+            ring_all_reduce(ep, &group, &mut b);
+            (a[0], b[0])
+        });
+        for (a, b) in out {
+            assert_eq!((a, b), (3.0, 30.0));
+        }
+    }
+}

@@ -1,0 +1,295 @@
+//! Config system: a TOML-subset parser + typed accessors + CLI overrides.
+//!
+//! Supports the launcher's needs: `[section.sub]` tables, string / integer /
+//! float / boolean / string-array values, `#` comments, and dotted-path
+//! overrides from the command line (`--set train.lr=0.5`).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    fn parse(raw: &str) -> Result<Value, String> {
+        let raw = raw.trim();
+        if raw.starts_with('"') && raw.ends_with('"') && raw.len() >= 2 {
+            return Ok(Value::Str(raw[1..raw.len() - 1].to_string()));
+        }
+        if raw == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if raw == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if raw.starts_with('[') && raw.ends_with(']') {
+            let inner = &raw[1..raw.len() - 1];
+            let mut items = Vec::new();
+            if !inner.trim().is_empty() {
+                for part in split_top_level(inner) {
+                    items.push(Value::parse(&part)?);
+                }
+            }
+            return Ok(Value::Arr(items));
+        }
+        if let Ok(i) = raw.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = raw.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        Err(format!("cannot parse value: {raw:?}"))
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Split "a, b, [c, d]" at top-level commas.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 && !in_str => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Flat dotted-key config ("train.lr" → value).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw_line) in text.lines().enumerate() {
+            let line = strip_comment(raw_line).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(format!("line {}: empty section", lineno + 1));
+                }
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            let value = Value::parse(val)
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            cfg.entries.insert(full_key, value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Config::parse(&text)
+    }
+
+    /// Apply a `key.path=value` CLI override.
+    pub fn set_override(&mut self, spec: &str) -> Result<(), String> {
+        let (key, val) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("override must be key=value: {spec:?}"))?;
+        self.entries.insert(key.trim().to_string(), Value::parse(val)?);
+        Ok(())
+    }
+
+    /// Merge `other` on top of `self` (other wins).
+    pub fn merge(&mut self, other: Config) {
+        self.entries.extend(other.entries);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(Value::as_str).unwrap_or(default).to_string()
+    }
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_i64).unwrap_or(default)
+    }
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.i64_or(key, default as i64) as usize
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// All keys below a dotted prefix.
+    pub fn section(&self, prefix: &str) -> Vec<(&str, &Value)> {
+        let p = format!("{prefix}.");
+        self.entries
+            .iter()
+            .filter(|(k, _)| k.starts_with(&p))
+            .map(|(k, v)| (&k[p.len()..], v))
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# pod config
+name = "resnet50"
+
+[pod]
+chips = 1024            # full pod
+cores_per_chip = 2
+
+[train]
+lr = 31.2
+warmup_epochs = 25
+use_wus = true
+presets = ["tiny", "small"]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("name", ""), "resnet50");
+        assert_eq!(c.usize_or("pod.chips", 0), 1024);
+        assert_eq!(c.f64_or("train.lr", 0.0), 31.2);
+        assert!(c.bool_or("train.use_wus", false));
+        match c.get("train.presets").unwrap() {
+            Value::Arr(items) => {
+                assert_eq!(items.len(), 2);
+                assert_eq!(items[0].as_str(), Some("tiny"));
+            }
+            _ => panic!("expected array"),
+        }
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let c = Config::parse("x = 3").unwrap();
+        assert_eq!(c.f64_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn comments_stripped_but_not_in_strings() {
+        let c = Config::parse(r##"s = "a#b" # comment"##).unwrap();
+        assert_eq!(c.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set_override("train.lr=29.0").unwrap();
+        c.set_override("pod.chips=64").unwrap();
+        assert_eq!(c.f64_or("train.lr", 0.0), 29.0);
+        assert_eq!(c.usize_or("pod.chips", 0), 64);
+    }
+
+    #[test]
+    fn section_listing() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let keys: Vec<&str> = c.section("train").into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["lr", "presets", "use_wus", "warmup_epochs"]);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Config::parse("x == 1\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err = Config::parse("\n\nbad").unwrap_err();
+        assert!(err.contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn merge_prefers_other() {
+        let mut a = Config::parse("x = 1\ny = 2").unwrap();
+        let b = Config::parse("y = 3\nz = 4").unwrap();
+        a.merge(b);
+        assert_eq!(a.i64_or("x", 0), 1);
+        assert_eq!(a.i64_or("y", 0), 3);
+        assert_eq!(a.i64_or("z", 0), 4);
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let c = Config::parse("m = [[1, 2], [3]]").unwrap();
+        match c.get("m").unwrap() {
+            Value::Arr(rows) => assert_eq!(rows.len(), 2),
+            _ => panic!(),
+        }
+    }
+}

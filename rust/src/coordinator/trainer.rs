@@ -1,0 +1,449 @@
+//! The data-parallel trainer (see module docs in `coordinator`).
+
+use std::rc::Rc;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::collectives::{broadcast, gradsum_pipelined, gradsum_serial, Placement};
+use crate::data::synthetic::{ImageTask, LmTask};
+use crate::evaluation::{distributed_eval, EvalChunk, EvalSharding};
+use crate::fabric::{run_spmd, Endpoint};
+use crate::metrics::StepBreakdown;
+use crate::optim::{
+    adam_step, lars_step, sgd_momentum_step, AdamConfig, AdamState, LarsConfig, LarsState,
+};
+use crate::runtime::{Manifest, ParamSpec, Runtime};
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+use crate::wus::{ShardPlan, ShardedAdam, ShardedLars};
+
+/// Optimizer selection.
+#[derive(Clone, Copy, Debug)]
+pub enum OptChoice {
+    Adam { cfg: AdamConfig, lr: f32 },
+    Lars { cfg: LarsConfig, lr: f32 },
+    Sgd { lr: f32, momentum: f32 },
+}
+
+/// Gradient-summation schedule (§2).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum GradSumMode {
+    /// Per-tensor 2-D all-reduces with exposed gathers (baseline).
+    Serial,
+    /// The paper's pipelined non-contiguous scheme; the quantum is the
+    /// pack granularity overlapped with network waits.
+    Pipelined { quantum: usize },
+}
+
+/// Trainer configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Manifest model key, e.g. "transformer_tiny" or "cnn_mini".
+    pub model: String,
+    /// Data-parallel worker threads ("cores"); power of two.
+    pub cores: usize,
+    pub steps: usize,
+    /// Evaluate every N steps (0 = never).
+    pub eval_every: usize,
+    pub eval_examples: usize,
+    pub opt: OptChoice,
+    /// Weight-update sharding on/off (§2 Fig. 4).
+    pub use_wus: bool,
+    pub gradsum: GradSumMode,
+    pub seed: u64,
+    /// LM label-noise floor (Lm) — drives the accuracy ceiling.
+    pub task_difficulty: f64,
+    /// Image-task signal strength alpha (Image kind; higher = easier).
+    pub image_alpha: f32,
+    /// Stop early once eval accuracy reaches this (None = run all steps).
+    pub quality_target: Option<f64>,
+    /// Linear warmup (steps) then polynomial decay to `steps` — the MLPerf
+    /// ResNet schedule shape (paper Table 1 columns). 0 = constant lr.
+    pub warmup_steps: usize,
+}
+
+impl TrainConfig {
+    /// Effective lr multiplier at a (1-based) step under the schedule.
+    pub fn lr_factor(&self, step: usize) -> f32 {
+        if self.warmup_steps == 0 {
+            return 1.0;
+        }
+        let w = self.warmup_steps as f32;
+        let s = step as f32;
+        if s < w {
+            return s / w;
+        }
+        let span = (self.steps as f32 - w).max(1.0);
+        let frac = ((s - w) / span).clamp(0.0, 1.0);
+        (1.0 - frac) * (1.0 - frac)
+    }
+}
+
+impl TrainConfig {
+    pub fn quick(model: &str, cores: usize, steps: usize) -> TrainConfig {
+        TrainConfig {
+            model: model.to_string(),
+            cores,
+            steps,
+            eval_every: 0,
+            eval_examples: 256,
+            opt: OptChoice::Adam { cfg: AdamConfig::default(), lr: 1e-3 },
+            use_wus: false,
+            gradsum: GradSumMode::Pipelined { quantum: 4096 },
+            seed: 0,
+            task_difficulty: 0.05,
+            image_alpha: 2.0,
+            quality_target: None,
+            warmup_steps: 0,
+        }
+    }
+}
+
+/// One evaluation record.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub loss: f64,
+    pub accuracy: f64,
+}
+
+/// Trainer output (rank-0 view; workers are synchronous so identical).
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub step_losses: Vec<f32>,
+    pub evals: Vec<EvalPoint>,
+    pub breakdown: StepBreakdown,
+    pub wallclock_s: f64,
+    pub init_s: f64,
+    /// First step whose eval met the quality target.
+    pub converged_at: Option<usize>,
+    pub params_total: usize,
+    /// Cumulative PJRT execute seconds (perf accounting).
+    pub pjrt_s: f64,
+}
+
+/// Workload family, inferred from the model key.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Kind {
+    Lm,
+    Image,
+}
+
+/// Static per-run context shared (read-only) by all workers.
+struct RunCtx {
+    cfg: TrainConfig,
+    kind: Kind,
+    specs: Vec<ParamSpec>,
+    manifest_dir: std::path::PathBuf,
+    train_art: String,
+    eval_art: String,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    image: usize,
+    classes: usize,
+}
+
+fn kind_of(model: &str) -> Result<Kind> {
+    if model.starts_with("transformer") {
+        Ok(Kind::Lm)
+    } else if model.starts_with("cnn") {
+        Ok(Kind::Image)
+    } else {
+        bail!("unknown model family: {model}")
+    }
+}
+
+fn init_params(specs: &[ParamSpec], seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    specs
+        .iter()
+        .map(|s| {
+            let n = s.numel();
+            if s.name.ends_with(".scale") {
+                vec![1.0; n]
+            } else if s.name.ends_with(".bias")
+                || s.name.ends_with(".b1")
+                || s.name.ends_with(".b2")
+                || s.name.ends_with(".b")
+            {
+                vec![0.0; n]
+            } else {
+                let fan_in = s.shape[..s.shape.len() - 1].iter().product::<usize>().max(1);
+                let std = (1.0 / fan_in as f32).sqrt();
+                rng.normal_vec(n, std)
+            }
+        })
+        .collect()
+}
+
+/// Replicated optimizer state (per tensor).
+enum OptState {
+    Adam(Vec<AdamState>),
+    Lars(Vec<LarsState>),
+    Sgd(Vec<Vec<f32>>),
+}
+
+/// Run the trainer; returns the rank-0 report.
+pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
+    assert!(cfg.cores.is_power_of_two(), "cores must be a power of two");
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let specs: Vec<ParamSpec> = manifest.model_params(&cfg.model)?.to_vec();
+    let kind = kind_of(&cfg.model)?;
+    let family = cfg.model.split('_').next().unwrap().to_string();
+    let preset = cfg.model.split_once('_').map(|(_, p)| p).unwrap_or("tiny").to_string();
+    let get = |key: &str| manifest.config_usize(&cfg.model, key);
+    let ctx = RunCtx {
+        cfg: cfg.clone(),
+        kind,
+        specs,
+        manifest_dir: manifest.dir.clone(),
+        train_art: format!("{family}_train_{preset}"),
+        eval_art: format!("{family}_eval_{preset}"),
+        batch: get("batch_per_core")?,
+        seq: if kind == Kind::Lm { get("seq")? } else { 0 },
+        vocab: if kind == Kind::Lm { get("vocab")? } else { 0 },
+        image: if kind == Kind::Image { get("image")? } else { 0 },
+        classes: if kind == Kind::Image { get("classes")? } else { 0 },
+    };
+    // Fail fast if the artifacts are missing before spawning workers.
+    manifest.artifact(&ctx.train_art)?;
+    manifest.artifact(&ctx.eval_art)?;
+
+    let results = Mutex::new(Vec::<(usize, TrainReport)>::new());
+    run_spmd(cfg.cores, |ep| {
+        let r = worker(ep, &ctx)
+            .unwrap_or_else(|e| panic!("worker {} failed: {e:#}", ep.rank));
+        results.lock().unwrap().push((ep.rank, r));
+    });
+
+    let mut all = results.into_inner().unwrap();
+    all.sort_by_key(|(r, _)| *r);
+    all.into_iter().next().map(|(_, rep)| rep).ok_or_else(|| anyhow!("no worker results"))
+}
+
+fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
+    let cfg = &ctx.cfg;
+    let init_timer = Timer::start();
+    let world = ep.world;
+    let group: Vec<usize> = (0..world).collect();
+    let place = Placement::new(world);
+
+    // ---- init phase (excluded from the MLPerf clock) ---------------------
+    let rt = Runtime::with_manifest(Rc::new(Manifest::load(&ctx.manifest_dir)?))?;
+    rt.warmup(&[&ctx.train_art, &ctx.eval_art])?;
+
+    // Rank 0 initializes; weights ride the broadcast collective.
+    let mut params: Vec<Vec<f32>> = if ep.rank == 0 {
+        init_params(&ctx.specs, cfg.seed)
+    } else {
+        ctx.specs.iter().map(|s| vec![0.0; s.numel()]).collect()
+    };
+    for t in params.iter_mut() {
+        broadcast(ep, &group, 0, t);
+    }
+
+    // Training data decorrelated per worker; eval set shared via seeds.
+    let lm_task = LmTask::new(ctx.vocab.max(2), cfg.task_difficulty);
+    let img_task =
+        ImageTask::new(ctx.image.max(1), ctx.classes.max(2), cfg.image_alpha, cfg.seed ^ 0xEEE);
+    let mut data_rng = Rng::new(cfg.seed).fold_in(1000 + ep.rank as u64);
+
+    // Optimizer state (replicated or sharded per §2 Fig. 4).
+    let is_1d: Vec<bool> = ctx.specs.iter().map(|s| s.shape.len() <= 1).collect();
+    let sizes: Vec<usize> = ctx.specs.iter().map(|s| s.numel()).collect();
+    let mut replicated: Option<OptState> = None;
+    let mut sharded_lars: Option<ShardedLars> = None;
+    let mut sharded_adam: Option<ShardedAdam> = None;
+    if cfg.use_wus {
+        let plan = ShardPlan::balanced(&sizes, world);
+        match cfg.opt {
+            OptChoice::Lars { cfg: lc, .. } => {
+                sharded_lars = Some(ShardedLars::new(lc, plan, ep.rank, is_1d.clone()));
+            }
+            OptChoice::Adam { cfg: ac, .. } => {
+                sharded_adam = Some(ShardedAdam::new(ac, plan, ep.rank));
+            }
+            OptChoice::Sgd { .. } => bail!("WUS+SGD not wired; use Adam or LARS"),
+        }
+    } else {
+        replicated = Some(match cfg.opt {
+            OptChoice::Adam { .. } => {
+                OptState::Adam(ctx.specs.iter().map(|_| AdamState::default()).collect())
+            }
+            OptChoice::Lars { .. } => {
+                OptState::Lars(ctx.specs.iter().map(|_| LarsState::default()).collect())
+            }
+            OptChoice::Sgd { .. } => OptState::Sgd(ctx.specs.iter().map(|_| vec![]).collect()),
+        });
+    }
+
+    let mut report =
+        TrainReport { params_total: sizes.iter().sum(), ..Default::default() };
+    report.init_s = init_timer.secs();
+    let wall = Timer::start();
+
+    // ---- nested train-and-eval tight loop (§2) ---------------------------
+    for step in 1..=cfg.steps {
+        // -- input pipeline --
+        let t_in = Timer::start();
+        let (images, ints_a, ints_b): (Vec<f32>, Vec<i32>, Vec<i32>) = match ctx.kind {
+            Kind::Lm => {
+                let b = lm_task.batch(&mut data_rng, ctx.batch, ctx.seq);
+                (vec![], b.tokens, b.targets)
+            }
+            Kind::Image => {
+                let b = img_task.batch(&mut data_rng, ctx.batch);
+                (b.images, b.labels, vec![])
+            }
+        };
+        report.breakdown.input_s += t_in.secs();
+
+        // -- fwd/bwd on the AOT executable --
+        let t_c = Timer::start();
+        let mut f32_inputs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+        if ctx.kind == Kind::Image {
+            f32_inputs.push(&images);
+        }
+        let ints: Vec<&[i32]> = match ctx.kind {
+            Kind::Lm => vec![&ints_a, &ints_b],
+            Kind::Image => vec![&ints_a],
+        };
+        let outputs = rt.execute_raw(&ctx.train_art, &f32_inputs, &ints)?;
+        report.breakdown.compute_s += t_c.secs();
+        let loss = outputs[0].data[0];
+        let mut grads: Vec<Vec<f32>> = outputs.into_iter().skip(1).map(|t| t.data).collect();
+
+        // -- gradient summation (§2) --
+        let t_g = Timer::start();
+        match cfg.gradsum {
+            GradSumMode::Serial => gradsum_serial(ep, &place, &mut grads),
+            GradSumMode::Pipelined { quantum } => {
+                gradsum_pipelined(ep, &place, &mut grads, quantum)
+            }
+        }
+        let scale = 1.0 / world as f32;
+        for g in grads.iter_mut() {
+            for x in g.iter_mut() {
+                *x *= scale;
+            }
+        }
+        report.breakdown.gradsum_s += t_g.secs();
+
+        // -- weight update (replicated or WUS, §2 Fig. 4) --
+        let t_u = Timer::start();
+        let lrf = cfg.lr_factor(step);
+        match &mut replicated {
+            Some(OptState::Adam(states)) => {
+                let (ac, lr) = match cfg.opt {
+                    OptChoice::Adam { cfg, lr } => (cfg, lr),
+                    _ => unreachable!(),
+                };
+                for ti in 0..params.len() {
+                    adam_step(&ac, lr * lrf, step as u64, &mut params[ti], &grads[ti],
+                              &mut states[ti]);
+                }
+            }
+            Some(OptState::Lars(states)) => {
+                let (lc, lr) = match cfg.opt {
+                    OptChoice::Lars { cfg, lr } => (cfg, lr),
+                    _ => unreachable!(),
+                };
+                for ti in 0..params.len() {
+                    lars_step(&lc, lr * lrf, &mut params[ti], &grads[ti], &mut states[ti],
+                              is_1d[ti]);
+                }
+            }
+            Some(OptState::Sgd(vels)) => {
+                let (lr, mom) = match cfg.opt {
+                    OptChoice::Sgd { lr, momentum } => (lr, momentum),
+                    _ => unreachable!(),
+                };
+                for ti in 0..params.len() {
+                    sgd_momentum_step(lr * lrf, mom, &mut params[ti], &grads[ti],
+                                      &mut vels[ti]);
+                }
+            }
+            None => {
+                if let Some(sl) = &mut sharded_lars {
+                    let lr = match cfg.opt {
+                        OptChoice::Lars { lr, .. } => lr,
+                        _ => unreachable!(),
+                    };
+                    sl.step(ep, &group, lr * lrf, &mut params, &grads);
+                } else if let Some(sa) = &mut sharded_adam {
+                    let lr = match cfg.opt {
+                        OptChoice::Adam { lr, .. } => lr,
+                        _ => unreachable!(),
+                    };
+                    sa.step(ep, &group, lr * lrf, &mut params, &grads);
+                }
+            }
+        }
+        report.breakdown.update_s += t_u.secs();
+        report.breakdown.steps += 1;
+        report.step_losses.push(loss);
+
+        // -- distributed evaluation (§2) --
+        if cfg.eval_every > 0 && step % cfg.eval_every == 0 {
+            let sharding = EvalSharding::new(cfg.eval_examples, world, ctx.batch);
+            let res = distributed_eval(ep, &group, &sharding, |chunk| {
+                eval_chunk(&rt, ctx, &params, chunk, &lm_task, &img_task)
+                    .expect("eval execution failed")
+            });
+            report.evals.push(EvalPoint { step, loss: res.loss, accuracy: res.accuracy });
+            if let Some(target) = cfg.quality_target {
+                if res.accuracy >= target && report.converged_at.is_none() {
+                    report.converged_at = Some(step);
+                    break; // synchronous: all workers see the same metric
+                }
+            }
+        }
+    }
+    report.wallclock_s = wall.secs();
+    report.pjrt_s = *rt.execute_seconds.borrow();
+    Ok(report)
+}
+
+fn eval_chunk(
+    rt: &Runtime,
+    ctx: &RunCtx,
+    params: &[Vec<f32>],
+    chunk: &EvalChunk,
+    lm_task: &LmTask,
+    img_task: &ImageTask,
+) -> Result<(f32, f32, f32)> {
+    let eval_seed = ctx.cfg.seed ^ 0x5EED_0000;
+    let mut f32_inputs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+    match ctx.kind {
+        Kind::Lm => {
+            let mut tokens = Vec::with_capacity(ctx.batch * ctx.seq);
+            let mut targets = Vec::with_capacity(ctx.batch * ctx.seq);
+            for &g in &chunk.indices {
+                let mut rng = Rng::new(eval_seed).fold_in(g as u64);
+                let b = lm_task.batch(&mut rng, 1, ctx.seq);
+                tokens.extend(b.tokens);
+                targets.extend(b.targets);
+            }
+            f32_inputs.push(&chunk.mask);
+            let out = rt.execute_raw(&ctx.eval_art, &f32_inputs, &[&tokens, &targets])?;
+            Ok((out[0].data[0], out[1].data[0], out[2].data[0]))
+        }
+        Kind::Image => {
+            let dim = ctx.image * ctx.image * 3;
+            let mut images = Vec::with_capacity(ctx.batch * dim);
+            let mut labels = Vec::with_capacity(ctx.batch);
+            for &g in &chunk.indices {
+                let mut rng = Rng::new(eval_seed).fold_in(g as u64);
+                let b = img_task.batch(&mut rng, 1);
+                images.extend(b.images);
+                labels.extend(b.labels);
+            }
+            f32_inputs.push(&images);
+            f32_inputs.push(&chunk.mask);
+            let out = rt.execute_raw(&ctx.eval_art, &f32_inputs, &[&labels])?;
+            Ok((out[0].data[0], out[1].data[0], out[2].data[0]))
+        }
+    }
+}

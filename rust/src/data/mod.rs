@@ -1,0 +1,11 @@
+//! Host input pipeline substrate: synthetic datasets with paper-matched
+//! shape statistics, window/global sequence bucketization (§3 GNMT), and
+//! prefetching with round-robin multi-host distribution.
+
+pub mod bucket;
+pub mod pipeline;
+pub mod synthetic;
+
+pub use bucket::{batch_bucketized, batch_global, batch_sequential, total_waste, SeqBatch};
+pub use pipeline::{HostSharding, Prefetcher};
+pub use synthetic::{ImageTask, LmTask, TranslationTask};

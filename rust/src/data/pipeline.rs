@@ -1,0 +1,191 @@
+//! Host input pipeline (paper §2 "caching, host to device offload ... and
+//! prefetching"; §3 GNMT "round-robin algorithm to distribute the input
+//! pipeline to multiple hosts").
+//!
+//! * [`Prefetcher`] — a bounded producer/consumer queue on its own thread:
+//!   the host prepares batches ahead of the device step, with backpressure
+//!   when the device falls behind.
+//! * [`HostSharding`] — round-robin assignment of workers to input hosts,
+//!   plus a throughput model showing where the single-host pipeline becomes
+//!   the bottleneck (the paper's 1024-worker observation).
+
+use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
+use std::thread::JoinHandle;
+
+/// Bounded prefetch queue fed by a producer thread.
+pub struct Prefetcher<T: Send + 'static> {
+    rx: Receiver<T>,
+    handle: Option<JoinHandle<PrefetchStats>>,
+}
+
+/// Producer-side statistics (how often the queue pushed back).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefetchStats {
+    pub produced: u64,
+    pub backpressure_events: u64,
+}
+
+impl<T: Send + 'static> Prefetcher<T> {
+    /// Start producing with `make(i)` for i in 0..count, `depth` batches of
+    /// lookahead.
+    pub fn start<F>(depth: usize, count: usize, make: F) -> Prefetcher<T>
+    where
+        F: Fn(usize) -> T + Send + 'static,
+    {
+        let (tx, rx) = sync_channel(depth);
+        let handle = std::thread::spawn(move || {
+            let mut stats = PrefetchStats::default();
+            for i in 0..count {
+                let mut item = make(i);
+                stats.produced += 1;
+                loop {
+                    match tx.try_send(item) {
+                        Ok(()) => break,
+                        Err(TrySendError::Full(it)) => {
+                            stats.backpressure_events += 1;
+                            item = it;
+                            std::thread::yield_now();
+                            // Fall back to a blocking send to avoid spinning.
+                            match tx.send(item) {
+                                Ok(()) => break,
+                                Err(_) => return stats,
+                            }
+                        }
+                        Err(TrySendError::Disconnected(_)) => return stats,
+                    }
+                }
+            }
+            stats
+        });
+        Prefetcher { rx, handle: Some(handle) }
+    }
+
+    /// Blocking fetch of the next batch (None when the stream ends).
+    pub fn next(&mut self) -> Option<T> {
+        self.rx.recv().ok()
+    }
+
+    /// Drain and join; returns producer stats.
+    pub fn finish(mut self) -> PrefetchStats {
+        // Close our receiver first so a blocked producer unblocks.
+        drop(std::mem::replace(&mut self.rx, {
+            let (_tx, rx) = sync_channel(1);
+            rx
+        }));
+        self.handle.take().map(|h| h.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+/// Round-robin worker→host input assignment (paper §3 GNMT).
+#[derive(Clone, Debug)]
+pub struct HostSharding {
+    pub hosts: usize,
+    pub workers: usize,
+}
+
+impl HostSharding {
+    pub fn new(hosts: usize, workers: usize) -> HostSharding {
+        assert!(hosts >= 1 && workers >= 1);
+        HostSharding { hosts, workers }
+    }
+
+    /// Which host feeds a worker.
+    pub fn host_of(&self, worker: usize) -> usize {
+        worker % self.hosts
+    }
+
+    /// Workers fed by a host.
+    pub fn workers_of(&self, host: usize) -> Vec<usize> {
+        (0..self.workers).filter(|w| self.host_of(*w) == host).collect()
+    }
+
+    /// Examples/second the pod can consume given per-host pipeline
+    /// throughput `host_rate` (examples/s) and per-worker device demand
+    /// `device_rate` (examples/s): min(host supply, device demand), where
+    /// the busiest host limits supply.
+    pub fn pod_throughput(&self, host_rate: f64, device_rate: f64) -> f64 {
+        let max_workers_per_host = (self.workers + self.hosts - 1) / self.hosts;
+        let per_worker_supply = host_rate / max_workers_per_host as f64;
+        self.workers as f64 * per_worker_supply.min(device_rate)
+    }
+
+    /// Is the input pipeline the bottleneck at this scale?
+    pub fn input_bound(&self, host_rate: f64, device_rate: f64) -> bool {
+        let max_workers_per_host = (self.workers + self.hosts - 1) / self.hosts;
+        (host_rate / max_workers_per_host as f64) < device_rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn prefetcher_delivers_in_order() {
+        let mut p = Prefetcher::start(4, 100, |i| i * i);
+        for i in 0..100 {
+            assert_eq!(p.next(), Some(i * i));
+        }
+        assert_eq!(p.next(), None);
+        let stats = p.finish();
+        assert_eq!(stats.produced, 100);
+    }
+
+    #[test]
+    fn prefetcher_applies_backpressure() {
+        // Slow consumer, fast producer, shallow queue: the producer must
+        // observe backpressure instead of buffering unboundedly.
+        let mut p = Prefetcher::start(2, 50, |i| i);
+        std::thread::sleep(Duration::from_millis(20)); // let producer fill
+        let mut got = 0;
+        while let Some(_) = p.next() {
+            got += 1;
+        }
+        assert_eq!(got, 50);
+        let stats = p.finish();
+        assert!(stats.backpressure_events > 0, "{stats:?}");
+    }
+
+    #[test]
+    fn prefetcher_early_drop_unblocks_producer() {
+        let p = Prefetcher::start(1, 1_000_000, |i| vec![i; 10]);
+        // Consume a few then drop — producer must terminate, not hang.
+        let mut p = p;
+        for _ in 0..3 {
+            p.next();
+        }
+        let stats = p.finish();
+        assert!(stats.produced < 1_000_000);
+    }
+
+    #[test]
+    fn round_robin_is_balanced() {
+        let s = HostSharding::new(4, 1024);
+        let counts: Vec<usize> = (0..4).map(|h| s.workers_of(h).len()).collect();
+        assert_eq!(counts, vec![256; 4]);
+    }
+
+    #[test]
+    fn single_host_bottleneck_at_scale() {
+        // Paper §3: "when scaling to very large systems where we have 1024
+        // workers, the single host input pipeline becomes the bottleneck."
+        let host_rate = 10_000.0; // examples/s one host can preprocess
+        let device_rate = 100.0; // examples/s one worker consumes
+        let single = HostSharding::new(1, 1024);
+        assert!(single.input_bound(host_rate, device_rate));
+        // Distributing over 16 hosts removes the bottleneck.
+        let multi = HostSharding::new(16, 1024);
+        assert!(!multi.input_bound(host_rate, device_rate));
+        assert!(multi.pod_throughput(host_rate, device_rate)
+            > 10.0 * single.pod_throughput(host_rate, device_rate));
+    }
+
+    #[test]
+    fn small_scale_single_host_fine() {
+        // At 8 workers the single host keeps up — matching why the paper
+        // only distributes the pipeline at pod scale.
+        let s = HostSharding::new(1, 8);
+        assert!(!s.input_bound(10_000.0, 100.0));
+    }
+}

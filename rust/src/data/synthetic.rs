@@ -1,0 +1,286 @@
+//! Synthetic dataset generators with the shape statistics of the paper's
+//! workloads (DESIGN.md §0 substitution table: the input-pipeline
+//! contributions depend on example shape/length statistics, not content).
+//!
+//! * [`LmTask`] — byte-level language modelling with a planted affine
+//!   next-token structure plus noise: the tiny/small transformers can
+//!   actually *learn* it, so loss curves are meaningful.
+//! * [`ImageTask`] — image classification with a planted linear feature per
+//!   class (the mini-CNN stand-in for ImageNet).
+//! * [`TranslationTask`] — WMT-like sentence pairs whose lengths follow the
+//!   long-tailed distribution that makes GNMT bucketization matter
+//!   (paper §3: max eval length 97).
+
+use crate::util::rng::Rng;
+
+/// Language-model batch: `tokens[b][s]` and next-token `targets[b][s]`.
+#[derive(Clone, Debug)]
+pub struct LmBatch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Planted-structure LM task: with probability `1 - noise`,
+/// `x[t+1] = (a * x[t] + b) mod vocab`; otherwise uniform.
+#[derive(Clone, Debug)]
+pub struct LmTask {
+    pub vocab: i64,
+    pub noise: f64,
+    a: i64,
+    b: i64,
+}
+
+impl LmTask {
+    pub fn new(vocab: usize, noise: f64) -> LmTask {
+        // a chosen coprime with vocab so the chain visits every token.
+        LmTask { vocab: vocab as i64, noise, a: 5, b: 3 }
+    }
+
+    /// The Bayes-optimal next token (used by accuracy-ceiling tests).
+    pub fn ideal_next(&self, tok: i32) -> i32 {
+        ((self.a * tok as i64 + self.b) % self.vocab) as i32
+    }
+
+    pub fn batch(&self, rng: &mut Rng, batch: usize, seq: usize) -> LmBatch {
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut targets = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let mut x = rng.below(self.vocab as u64) as i32;
+            for _ in 0..seq {
+                tokens.push(x);
+                let next = if rng.uniform() < self.noise {
+                    rng.below(self.vocab as u64) as i32
+                } else {
+                    self.ideal_next(x)
+                };
+                targets.push(next);
+                x = next;
+            }
+        }
+        LmBatch { tokens, targets, batch, seq }
+    }
+}
+
+/// Image-classification batch (NHWC f32 images + i32 labels).
+#[derive(Clone, Debug)]
+pub struct ImageBatch {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub batch: usize,
+    pub side: usize,
+}
+
+/// Planted *spatially smooth* class patterns: class c's images are noise +
+/// alpha * P_c, where P_c is a random coarse 4x4x3 field bilinearly
+/// upsampled to the image size and RMS-normalised. Smooth low-frequency
+/// structure is what convolution + pooling stacks detect naturally, so the
+/// mini-CNN learns this task in tens of steps (an unstructured random
+/// direction, by contrast, looks like noise to 3x3 kernels).
+#[derive(Clone, Debug)]
+pub struct ImageTask {
+    pub side: usize,
+    pub classes: usize,
+    pub alpha: f32,
+    features: Vec<Vec<f32>>,
+}
+
+/// Bilinear upsample a [cs, cs, ch] field to [side, side, ch].
+fn upsample_bilinear(coarse: &[f32], cs: usize, ch: usize, side: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; side * side * ch];
+    let scale = cs as f32 / side as f32;
+    for y in 0..side {
+        for x in 0..side {
+            // Sample at pixel centers.
+            let fy = ((y as f32 + 0.5) * scale - 0.5).clamp(0.0, cs as f32 - 1.0);
+            let fx = ((x as f32 + 0.5) * scale - 0.5).clamp(0.0, cs as f32 - 1.0);
+            let (y0, x0) = (fy.floor() as usize, fx.floor() as usize);
+            let (y1, x1) = ((y0 + 1).min(cs - 1), (x0 + 1).min(cs - 1));
+            let (wy, wx) = (fy - y0 as f32, fx - x0 as f32);
+            for c in 0..ch {
+                let v00 = coarse[(y0 * cs + x0) * ch + c];
+                let v01 = coarse[(y0 * cs + x1) * ch + c];
+                let v10 = coarse[(y1 * cs + x0) * ch + c];
+                let v11 = coarse[(y1 * cs + x1) * ch + c];
+                out[(y * side + x) * ch + c] = v00 * (1.0 - wy) * (1.0 - wx)
+                    + v01 * (1.0 - wy) * wx
+                    + v10 * wy * (1.0 - wx)
+                    + v11 * wy * wx;
+            }
+        }
+    }
+    out
+}
+
+impl ImageTask {
+    pub fn new(side: usize, classes: usize, alpha: f32, seed: u64) -> ImageTask {
+        let mut rng = Rng::new(seed);
+        let cs = 4.min(side);
+        let features = (0..classes)
+            .map(|_| {
+                let coarse = rng.normal_vec(cs * cs * 3, 1.0);
+                let f = upsample_bilinear(&coarse, cs, 3, side);
+                let rms =
+                    (f.iter().map(|x| x * x).sum::<f32>() / f.len() as f32).sqrt().max(1e-6);
+                f.into_iter().map(|x| x / rms).collect()
+            })
+            .collect();
+        ImageTask { side, classes, alpha, features }
+    }
+
+    pub fn batch(&self, rng: &mut Rng, batch: usize) -> ImageBatch {
+        let dim = self.side * self.side * 3;
+        let mut images = Vec::with_capacity(batch * dim);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let c = rng.below(self.classes as u64) as usize;
+            labels.push(c as i32);
+            let feat = &self.features[c];
+            for d in 0..dim {
+                images.push(rng.normal_f32(0.0, 1.0) + self.alpha * feat[d]);
+            }
+        }
+        ImageBatch { images, labels, batch, side: self.side }
+    }
+}
+
+/// A sentence pair for the translation pipeline (only lengths matter for
+/// the bucketization experiments; tokens are synthetic).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SentencePair {
+    pub src: Vec<i32>,
+    pub tgt: Vec<i32>,
+}
+
+impl SentencePair {
+    pub fn len(&self) -> usize {
+        self.src.len().max(self.tgt.len())
+    }
+    pub fn is_empty(&self) -> bool {
+        self.src.is_empty()
+    }
+}
+
+/// WMT-like length distribution: lognormal body, clamped to [1, max_len].
+/// (Paper §3 Transformer: "97 is the length of the largest example in the
+/// evaluation dataset".)
+#[derive(Clone, Debug)]
+pub struct TranslationTask {
+    pub vocab: usize,
+    pub max_len: usize,
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl Default for TranslationTask {
+    fn default() -> TranslationTask {
+        TranslationTask { vocab: 32000, max_len: 97, mu: 3.0, sigma: 0.6 }
+    }
+}
+
+impl TranslationTask {
+    pub fn sample_len(&self, rng: &mut Rng) -> usize {
+        let l = (self.mu + self.sigma * rng.normal()).exp();
+        (l.round() as usize).clamp(1, self.max_len)
+    }
+
+    pub fn pair(&self, rng: &mut Rng) -> SentencePair {
+        let sl = self.sample_len(rng);
+        // Target length correlated with source (translation property).
+        let tl = ((sl as f64 * (0.8 + 0.4 * rng.uniform())).round() as usize)
+            .clamp(1, self.max_len);
+        let gen = |rng: &mut Rng, n: usize| {
+            (0..n).map(|_| rng.below(self.vocab as u64) as i32).collect()
+        };
+        SentencePair { src: gen(rng, sl), tgt: gen(rng, tl) }
+    }
+
+    pub fn pairs(&self, rng: &mut Rng, n: usize) -> Vec<SentencePair> {
+        (0..n).map(|_| self.pair(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lm_targets_follow_planted_rule_at_zero_noise() {
+        let task = LmTask::new(256, 0.0);
+        let mut rng = Rng::new(0);
+        let b = task.batch(&mut rng, 4, 32);
+        for i in 0..b.tokens.len() {
+            assert_eq!(b.targets[i], task.ideal_next(b.tokens[i]));
+        }
+    }
+
+    #[test]
+    fn lm_noise_rate_matches() {
+        let task = LmTask::new(256, 0.3);
+        let mut rng = Rng::new(1);
+        let b = task.batch(&mut rng, 64, 64);
+        let wrong = b
+            .tokens
+            .iter()
+            .zip(&b.targets)
+            .filter(|&(&t, &y)| y != task.ideal_next(t))
+            .count();
+        let rate = wrong as f64 / b.tokens.len() as f64;
+        // Uniform noise hits the correct token 1/256 of the time.
+        assert!((rate - 0.3).abs() < 0.03, "rate={rate}");
+    }
+
+    #[test]
+    fn lm_tokens_in_vocab() {
+        let task = LmTask::new(100, 0.5);
+        let mut rng = Rng::new(2);
+        let b = task.batch(&mut rng, 8, 16);
+        assert!(b.tokens.iter().chain(&b.targets).all(|&t| (0..100).contains(&t)));
+    }
+
+    #[test]
+    fn images_linearly_separable_at_high_alpha() {
+        // Nearest-feature classification must beat chance easily.
+        let task = ImageTask::new(8, 4, 3.0, 7);
+        let mut rng = Rng::new(3);
+        let b = task.batch(&mut rng, 64);
+        let dim = 8 * 8 * 3;
+        let mut correct = 0;
+        for i in 0..b.batch {
+            let img = &b.images[i * dim..(i + 1) * dim];
+            let best = (0..4)
+                .max_by(|&a, &c| {
+                    let da: f32 = img.iter().zip(&task.features[a]).map(|(x, f)| x * f).sum();
+                    let dc: f32 = img.iter().zip(&task.features[c]).map(|(x, f)| x * f).sum();
+                    da.total_cmp(&dc)
+                })
+                .unwrap();
+            if best as i32 == b.labels[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct > 55, "correct={correct}/64");
+    }
+
+    #[test]
+    fn translation_lengths_long_tailed_and_clamped() {
+        let task = TranslationTask::default();
+        let mut rng = Rng::new(4);
+        let pairs = task.pairs(&mut rng, 2000);
+        let lens: Vec<usize> = pairs.iter().map(|p| p.len()).collect();
+        assert!(lens.iter().all(|&l| (1..=97).contains(&l)));
+        let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+        assert!((15.0..35.0).contains(&mean), "mean={mean}");
+        let max = *lens.iter().max().unwrap();
+        assert!(max > 60, "tail too short: max={max}");
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let task = TranslationTask::default();
+        let a = task.pairs(&mut Rng::new(9), 10);
+        let b = task.pairs(&mut Rng::new(9), 10);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,229 @@
+//! TPU-v3 device roofline model (paper Fig. 1: 420 TFLOPS and 128 GB HBM
+//! per 4-chip device → 105 TF/chip, 52.5 TF/core; 32 GB HBM/chip).
+//!
+//! Used by the pod simulator to estimate per-step compute time and the
+//! optimizer weight-update overhead that motivates weight-update sharding
+//! (§2: LARS ≈6% of step @2048 cores on ResNet-50; Adam ≈45% on
+//! Transformer).
+
+use crate::netsim::{ArAlgo, CostModel};
+
+/// Per-core device constants.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    /// Peak bf16 FLOP/s per core.
+    pub peak_flops: f64,
+    /// HBM bytes/s per core.
+    pub hbm_bw: f64,
+    /// Achievable fraction of peak on dense conv/matmul workloads.
+    pub mxu_efficiency: f64,
+}
+
+pub const TPU_V3: Device = Device {
+    peak_flops: 52.5e12,
+    hbm_bw: 450e9,
+    mxu_efficiency: 0.55,
+};
+
+/// Per-core batch at which MXU utilization reaches half its dense-batch
+/// ceiling (small per-core batches starve the systolic array — the regime
+/// the paper's model-parallel techniques fight).
+pub const BATCH_HALF_UTIL: f64 = 16.0;
+
+impl Device {
+    /// MXU efficiency at a given per-core example count.
+    pub fn efficiency_at(&self, examples_per_core: f64) -> f64 {
+        self.mxu_efficiency * examples_per_core / (examples_per_core + BATCH_HALF_UTIL)
+    }
+
+    /// Compute time for one example-batch on one core: roofline of MXU
+    /// FLOPs against HBM traffic.
+    pub fn compute_time(&self, flops: f64, hbm_bytes: f64) -> f64 {
+        let t_flops = flops / (self.peak_flops * self.mxu_efficiency);
+        let t_mem = hbm_bytes / self.hbm_bw;
+        t_flops.max(t_mem)
+    }
+
+    /// Compute time with batch-dependent utilization.
+    pub fn compute_time_batched(&self, flops: f64, hbm_bytes: f64, examples_per_core: f64) -> f64 {
+        let t_flops = flops / (self.peak_flops * self.efficiency_at(examples_per_core));
+        let t_mem = hbm_bytes / self.hbm_bw;
+        t_flops.max(t_mem)
+    }
+
+    /// Optimizer update time for `params` parameters with `bytes_per_param`
+    /// HBM traffic per parameter (LARS: w,g,v read + w,v write ≈ 20 B;
+    /// Adam: w,g,m,v read + w,m,v write ≈ 28 B). Elementwise → memory
+    /// bound.
+    pub fn update_time(&self, params: f64, bytes_per_param: f64) -> f64 {
+        params * bytes_per_param / self.hbm_bw
+    }
+}
+
+/// Optimizer HBM traffic per parameter (f32 state).
+pub const LARS_BYTES_PER_PARAM: f64 = 20.0;
+pub const ADAM_BYTES_PER_PARAM: f64 = 28.0;
+
+/// Weight-update strategy cost (paper §2 / Fig. 4).
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateCost {
+    pub replicated: f64,
+    pub sharded: f64,
+}
+
+/// Cost of the weight update replicated vs sharded across `cores`, where
+/// the sharded path adds the all-gather of fresh weights on the torus.
+pub fn weight_update_cost(
+    dev: &Device,
+    net: &CostModel,
+    params: f64,
+    bytes_per_param: f64,
+    cores: usize,
+) -> UpdateCost {
+    let replicated = dev.update_time(params, bytes_per_param);
+    let shard_compute = dev.update_time(params / cores as f64, bytes_per_param);
+    let gather = net.all_gather(params * 4.0); // weights broadcast in f32
+    UpdateCost { replicated, sharded: shard_compute + gather }
+}
+
+/// Full device-step model: compute + gradient summation + weight update.
+#[derive(Clone, Copy, Debug)]
+pub struct StepModel {
+    pub compute: f64,
+    pub gradsum: f64,
+    pub update: f64,
+}
+
+impl StepModel {
+    pub fn total(&self) -> f64 {
+        self.compute + self.gradsum + self.update
+    }
+
+    /// Update share of the total step time — the quantity behind the
+    /// paper's "about 6% of the total device step time" (ResNet-50 LARS)
+    /// and "about 45% of the step time" (Transformer Adam).
+    pub fn update_fraction(&self) -> f64 {
+        self.update / self.total()
+    }
+}
+
+/// Estimate one synchronous training step.
+#[allow(clippy::too_many_arguments)]
+pub fn step_model(
+    dev: &Device,
+    net: &CostModel,
+    flops_per_example: f64,
+    hbm_bytes_per_example: f64,
+    examples_per_core: f64,
+    // util_units_per_example: 1 for an image classifier (parallelism
+    // saturates within one image), ~tokens/sentence for sequence models
+    // whose matmul row count is batch x tokens.
+    util_units_per_example: f64,
+    params: f64,
+    bytes_per_param: f64,
+    use_wus: bool,
+) -> StepModel {
+    // fwd + bwd ≈ 3x fwd FLOPs; MXU utilization degrades at small
+    // per-core batch.
+    let compute = dev.compute_time_batched(
+        3.0 * flops_per_example * examples_per_core,
+        hbm_bytes_per_example * examples_per_core,
+        examples_per_core * util_units_per_example,
+    );
+    let gradsum = net.all_reduce(ArAlgo::Torus2D, params * 4.0);
+    let cores = net.torus.chips() * 2; // 2 cores per chip
+    let uc = weight_update_cost(dev, net, params, bytes_per_param, cores);
+    let update = if use_wus { uc.sharded } else { uc.replicated };
+    StepModel { compute, gradsum, update }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{NetParams, Torus};
+
+    fn pod(chips: usize) -> CostModel {
+        CostModel::new(Torus::for_chips(chips), NetParams::default())
+    }
+
+    #[test]
+    fn compute_time_roofline() {
+        // 1 TFLOP of dense work ≈ 34.6 ms at 55% of 52.5 TF.
+        let t = TPU_V3.compute_time(1e12, 1e6);
+        assert!((t - 1e12 / (52.5e12 * 0.55)).abs() < 1e-9);
+        // Memory-bound case.
+        let t = TPU_V3.compute_time(1e6, 45e9);
+        assert!((t - 0.1).abs() < 1e-6);
+    }
+
+    /// Paper §2: ResNet-50 LARS weight update ≈ 6% of step @ 2048 cores,
+    /// batch 32K (16 examples/core).
+    #[test]
+    fn resnet_lars_update_overhead_matches_paper() {
+        let net = pod(1024); // 2048 cores
+        let params = 25.6e6;
+        let step = step_model(
+            &TPU_V3,
+            &net,
+            3.9e9,  // ResNet-50 fwd GFLOPs/image
+            50e6,   // activation traffic/image (approx)
+            16.0,   // 32768 / 2048 cores
+            1.0,    // image models: 1 util unit per example
+            params,
+            LARS_BYTES_PER_PARAM,
+            false, // replicated update (the overhead being measured)
+        );
+        let frac = step.update_fraction();
+        assert!((0.03..0.10).contains(&frac), "LARS update fraction {frac}");
+    }
+
+    /// Paper §2: Transformer Adam update ≈ 45% of step time (batch 1/core).
+    #[test]
+    fn transformer_adam_update_overhead_matches_paper() {
+        let net = pod(1024);
+        let params = 210e6; // MLPerf Transformer (big)
+        let step = step_model(
+            &TPU_V3,
+            &net,
+            2.0e9 * 33.0, // fwd FLOPs for one 33-token-avg sentence ≈ 2*P*L
+            60e6,
+            1.0,  // batch 1 per core (paper: global 2048 on 2048 cores)
+            33.0, // ~33 matmul rows (tokens) per sentence
+            params,
+            ADAM_BYTES_PER_PARAM,
+            false,
+        );
+        let frac = step.update_fraction();
+        assert!((0.30..0.60).contains(&frac), "Adam update fraction {frac}");
+    }
+
+    #[test]
+    fn wus_removes_most_update_cost_at_scale() {
+        let net = pod(1024);
+        let uc = weight_update_cost(&TPU_V3, &net, 210e6, ADAM_BYTES_PER_PARAM, 2048);
+        assert!(
+            uc.sharded < uc.replicated * 0.55,
+            "sharded {} vs replicated {}",
+            uc.sharded,
+            uc.replicated
+        );
+    }
+
+    #[test]
+    fn wus_pointless_on_few_cores() {
+        // On 4 chips the all-gather costs more than the saved update time
+        // for a small model — matching why WUS is a *scale* optimization.
+        let net = pod(4);
+        let uc = weight_update_cost(&TPU_V3, &net, 25.6e6, LARS_BYTES_PER_PARAM, 8);
+        assert!(uc.sharded > uc.replicated * 0.5);
+    }
+
+    #[test]
+    fn step_model_totals() {
+        let net = pod(64);
+        let s = step_model(&TPU_V3, &net, 3.9e9, 50e6, 32.0, 1.0, 25.6e6,
+                           LARS_BYTES_PER_PARAM, true);
+        assert!(s.total() > 0.0);
+        assert!(s.compute > s.update, "compute should dominate at batch 32");
+    }
+}

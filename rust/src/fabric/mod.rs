@@ -1,0 +1,291 @@
+//! In-process "pod" fabric: N SPMD worker threads connected by mailbox
+//! channels, playing the role of TPU cores on the torus.
+//!
+//! The collectives in `crate::collectives` run *real math on real buffers*
+//! over this fabric — the same reduce-scatter/all-gather schedules the paper
+//! runs on ICI links — so their correctness (and the pipelining structure of
+//! the gradient summation) is exercised for real, while TPU-scale *timing*
+//! comes from `crate::netsim`.
+//!
+//! Semantics are MPI-flavored: `send(to, tag, payload)` is async buffered,
+//! `recv(from, tag)` blocks and stashes out-of-order arrivals, `try_recv`
+//! polls (the pipelined gradsum packs gradient fragments while polling —
+//! genuine overlap in a single thread).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::util::bf16::Bf16;
+
+/// Message payload: f32 math values or bf16 wire format (halo exchanges of
+/// activations may ride bf16 per the paper's mixed-precision rule; gradient
+/// summation stays f32).
+#[derive(Clone, Debug)]
+pub enum Payload {
+    F32(Vec<f32>),
+    Bf16(Vec<Bf16>),
+}
+
+impl Payload {
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len() * 4,
+            Payload::Bf16(v) => v.len() * 2,
+        }
+    }
+
+    /// Materialize as f32 (bf16 upconverts losslessly).
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            Payload::F32(v) => v,
+            Payload::Bf16(v) => v.into_iter().map(|b| b.to_f32()).collect(),
+        }
+    }
+}
+
+struct Envelope {
+    from: usize,
+    tag: u64,
+    payload: Payload,
+}
+
+/// Shared traffic accounting across the fabric (wire-volume assertions).
+#[derive(Default)]
+pub struct Traffic {
+    pub bytes_sent: AtomicU64,
+    pub messages: AtomicU64,
+}
+
+/// One worker's communication endpoint. Move into the worker thread.
+pub struct Endpoint {
+    pub rank: usize,
+    pub world: usize,
+    senders: Vec<Sender<Envelope>>,
+    inbox: Receiver<Envelope>,
+    /// Out-of-order stash: (from, tag) → payloads in arrival order.
+    stash: HashMap<(usize, u64), Vec<Payload>>,
+    pub traffic: Arc<Traffic>,
+    /// SPMD-deterministic tag allocator (see [`Endpoint::fresh_tags`]).
+    tag_counter: u64,
+}
+
+impl Endpoint {
+    /// Reserve a block of `n` tags. Because every rank executes the same
+    /// SPMD program order, counters agree across ranks without any
+    /// coordination — consecutive collectives can never alias even when one
+    /// rank runs ahead.
+    pub fn fresh_tags(&mut self, n: u64) -> u64 {
+        let base = self.tag_counter;
+        self.tag_counter += n;
+        base
+    }
+
+    /// Asynchronous buffered send.
+    pub fn send(&self, to: usize, tag: u64, payload: Payload) {
+        self.traffic.bytes_sent.fetch_add(payload.wire_bytes() as u64, Ordering::Relaxed);
+        self.traffic.messages.fetch_add(1, Ordering::Relaxed);
+        self.senders[to]
+            .send(Envelope { from: self.rank, tag, payload })
+            .expect("fabric peer hung up");
+    }
+
+    /// Blocking matched receive.
+    pub fn recv(&mut self, from: usize, tag: u64) -> Payload {
+        if let Some(p) = self.take_stashed(from, tag) {
+            return p;
+        }
+        loop {
+            let env = self.inbox.recv().expect("fabric closed");
+            if env.from == from && env.tag == tag {
+                return env.payload;
+            }
+            self.stash.entry((env.from, env.tag)).or_default().push(env.payload);
+        }
+    }
+
+    /// Non-blocking matched receive (used by the pipelined gradsum to
+    /// overlap packing with network waits).
+    pub fn try_recv(&mut self, from: usize, tag: u64) -> Option<Payload> {
+        if let Some(p) = self.take_stashed(from, tag) {
+            return Some(p);
+        }
+        loop {
+            match self.inbox.try_recv() {
+                Ok(env) => {
+                    if env.from == from && env.tag == tag {
+                        return Some(env.payload);
+                    }
+                    self.stash.entry((env.from, env.tag)).or_default().push(env.payload);
+                }
+                Err(TryRecvError::Empty) => return None,
+                Err(TryRecvError::Disconnected) => panic!("fabric closed"),
+            }
+        }
+    }
+
+    fn take_stashed(&mut self, from: usize, tag: u64) -> Option<Payload> {
+        if let Some(q) = self.stash.get_mut(&(from, tag)) {
+            if !q.is_empty() {
+                return Some(q.remove(0));
+            }
+        }
+        None
+    }
+}
+
+/// Build a fully-connected fabric of `world` endpoints.
+pub fn fabric(world: usize) -> Vec<Endpoint> {
+    let traffic = Arc::new(Traffic::default());
+    let mut senders = Vec::with_capacity(world);
+    let mut inboxes = Vec::with_capacity(world);
+    for _ in 0..world {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        inboxes.push(rx);
+    }
+    inboxes
+        .into_iter()
+        .enumerate()
+        .map(|(rank, inbox)| Endpoint {
+            rank,
+            world,
+            senders: senders.clone(),
+            inbox,
+            stash: HashMap::new(),
+            traffic: traffic.clone(),
+            tag_counter: 0,
+        })
+        .collect()
+}
+
+/// Run one SPMD closure per endpoint on its own OS thread; returns the
+/// per-rank results in rank order. Panics propagate.
+pub fn run_spmd<T, F>(world: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&mut Endpoint) -> T + Sync,
+{
+    let endpoints = fabric(world);
+    crossbeam_utils::thread::scope(|scope| {
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|mut ep| {
+                let f = &f;
+                scope.spawn(move |_| f(&mut ep))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+    .expect("spmd scope panicked")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping_pong() {
+        let out = run_spmd(2, |ep| {
+            if ep.rank == 0 {
+                ep.send(1, 7, Payload::F32(vec![1.0, 2.0]));
+                ep.recv(1, 8).into_f32()
+            } else {
+                let got = ep.recv(0, 7).into_f32();
+                ep.send(0, 8, Payload::F32(vec![got[0] + got[1]]));
+                got
+            }
+        });
+        assert_eq!(out[0], vec![3.0]);
+        assert_eq!(out[1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn out_of_order_tags_are_stashed() {
+        let out = run_spmd(2, |ep| {
+            if ep.rank == 0 {
+                ep.send(1, 1, Payload::F32(vec![1.0]));
+                ep.send(1, 2, Payload::F32(vec![2.0]));
+                vec![]
+            } else {
+                // Receive in reverse tag order.
+                let b = ep.recv(0, 2).into_f32();
+                let a = ep.recv(0, 1).into_f32();
+                vec![a[0], b[0]]
+            }
+        });
+        assert_eq!(out[1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn same_tag_fifo_order() {
+        let out = run_spmd(2, |ep| {
+            if ep.rank == 0 {
+                for i in 0..5 {
+                    ep.send(1, 0, Payload::F32(vec![i as f32]));
+                }
+                vec![]
+            } else {
+                (0..5).map(|_| ep.recv(0, 0).into_f32()[0]).collect()
+            }
+        });
+        assert_eq!(out[1], vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn bf16_payload_halves_wire_bytes() {
+        let eps = fabric(2);
+        let t = eps[0].traffic.clone();
+        let out = run_spmd(2, |ep| {
+            if ep.rank == 0 {
+                ep.send(1, 0, Payload::F32(vec![1.5; 100]));
+                ep.send(1, 1, Payload::Bf16(vec![Bf16::from_f32(1.5); 100]));
+                0.0
+            } else {
+                let a = ep.recv(0, 0).into_f32();
+                let b = ep.recv(0, 1).into_f32();
+                a[0] + b[0]
+            }
+        });
+        assert_eq!(out[1], 3.0);
+        drop(t); // traffic accounting checked in the dedicated test below
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let results = run_spmd(3, |ep| {
+            if ep.rank == 0 {
+                ep.send(1, 0, Payload::F32(vec![0.0; 10])); // 40 bytes
+                ep.send(2, 0, Payload::Bf16(vec![Bf16::ZERO; 10])); // 20 bytes
+            } else {
+                ep.recv(0, 0);
+            }
+            ep.traffic.bytes_sent.load(Ordering::SeqCst)
+        });
+        // Total fabric traffic is global (shared counter): 60 bytes.
+        assert!(results.iter().all(|&b| b == 60));
+    }
+
+    #[test]
+    fn try_recv_polls() {
+        let out = run_spmd(2, |ep| {
+            if ep.rank == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                ep.send(1, 0, Payload::F32(vec![42.0]));
+                0
+            } else {
+                let mut polls = 0u64;
+                loop {
+                    if let Some(p) = ep.try_recv(0, 0) {
+                        assert_eq!(p.into_f32(), vec![42.0]);
+                        break;
+                    }
+                    polls += 1;
+                }
+                polls
+            }
+        });
+        assert!(out[1] > 0, "receiver should have polled while waiting");
+    }
+}

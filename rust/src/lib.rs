@@ -1,0 +1,34 @@
+//! # tpu-pod-train
+//!
+//! Reproduction of *"Scale MLPerf-0.6 models on Google TPU-v3 Pods"*
+//! (Kumar et al., 2019) as a three-layer Rust + JAX + Pallas
+//! distributed-training framework. See DESIGN.md for the system inventory
+//! and EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map:
+//! * L3 (this crate) — coordinator: data-parallel trainer, 2-D torus
+//!   gradient summation, weight-update sharding, spatial partitioning,
+//!   distributed evaluation, pod simulator.
+//! * L2/L1 (python/, build-time only) — JAX model fwd/bwd + Pallas kernels,
+//!   AOT-lowered to `artifacts/*.hlo.txt` and executed via PJRT from
+//!   [`runtime`].
+
+pub mod benchkit;
+pub mod checkpoint;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod devicesim;
+pub mod evaluation;
+pub mod fabric;
+pub mod metrics;
+pub mod models;
+pub mod optim;
+pub mod netsim;
+pub mod runtime;
+pub mod simulator;
+pub mod spatial;
+pub mod testing;
+pub mod util;
+pub mod wus;

@@ -1,0 +1,246 @@
+//! `tpu-pod-train` launcher.
+//!
+//! Subcommands:
+//! * `train`    — run the real data-parallel trainer on the in-process pod
+//!                (AOT artifacts via PJRT; see `make artifacts`).
+//! * `simulate` — TPU-v3 pod time-to-train simulation for one MLPerf model.
+//! * `submit`   — full simulated MLPerf-0.6 submission (all five models,
+//!                Fig. 9-style table).
+//! * `info`     — list artifacts, models and device constants.
+
+use tpu_pod_train::benchkit::Table;
+use tpu_pod_train::config::Config;
+use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
+use tpu_pod_train::models::{all_models, model};
+use tpu_pod_train::optim::{AdamConfig, LarsConfig, LarsVariant};
+use tpu_pod_train::runtime::Manifest;
+use tpu_pod_train::simulator::{simulate, SimOptions};
+use tpu_pod_train::util::cli::Cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if args.is_empty() { vec![] } else { args[1..].to_vec() };
+    let code = match cmd {
+        "train" => cmd_train(&rest),
+        "simulate" => cmd_simulate(&rest),
+        "submit" => cmd_submit(&rest),
+        "info" => cmd_info(),
+        _ => {
+            eprintln!(
+                "tpu-pod-train — MLPerf-0.6 TPU-v3 pod reproduction\n\n\
+                 Usage: tpu-pod-train <train|simulate|submit|info> [options]\n\
+                 Run a subcommand with --help for its options."
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_train(tokens: &[String]) -> i32 {
+    let cli = Cli::new("train", "run the real trainer on the in-process pod")
+        .opt("config", "", "TOML config file (CLI flags override)")
+        .opt("model", "transformer_tiny", "manifest model key")
+        .opt("cores", "4", "data-parallel workers (power of two)")
+        .opt("steps", "100", "training steps")
+        .opt("eval-every", "25", "eval cadence in steps (0 = never)")
+        .opt("eval-examples", "256", "evaluation set size")
+        .opt("optimizer", "adam", "adam | lars | lars-scaled | sgd")
+        .opt("lr", "0.001", "learning rate")
+        .opt("momentum", "0.9", "momentum (sgd/lars)")
+        .opt("target", "0", "quality target accuracy (0 = none)")
+        .opt("seed", "0", "rng seed")
+        .flag("wus", "shard the weight update across cores (paper §2)")
+        .flag("serial-gradsum", "disable the pipelined gradient summation");
+    let a = match cli.parse_tokens(tokens) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let mut file_cfg = Config::default();
+    let cfg_path = a.get_or("config", "");
+    if !cfg_path.is_empty() {
+        match Config::from_file(&cfg_path) {
+            Ok(c) => file_cfg = c,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        }
+    }
+    let get_s = |k: &str, d: &str| {
+        a.get(k).map(|v| v.to_string()).unwrap_or_else(|| file_cfg.str_or(&format!("train.{k}"), d))
+    };
+    let lr = a.get_f64("lr", file_cfg.f64_or("train.lr", 1e-3)) as f32;
+    let momentum = a.get_f64("momentum", 0.9) as f32;
+    let opt = match get_s("optimizer", "adam").as_str() {
+        "adam" => OptChoice::Adam { cfg: AdamConfig::default(), lr },
+        "lars" => OptChoice::Lars { cfg: LarsConfig::default(), lr },
+        "lars-scaled" => OptChoice::Lars {
+            cfg: LarsConfig { variant: LarsVariant::Scaled, momentum, ..Default::default() },
+            lr,
+        },
+        "sgd" => OptChoice::Sgd { lr, momentum },
+        other => {
+            eprintln!("unknown optimizer {other:?}");
+            return 2;
+        }
+    };
+    let target = a.get_f64("target", 0.0);
+    let cfg = TrainConfig {
+        model: get_s("model", "transformer_tiny"),
+        cores: a.get_usize("cores", file_cfg.usize_or("train.cores", 4)),
+        steps: a.get_usize("steps", file_cfg.usize_or("train.steps", 100)),
+        eval_every: a.get_usize("eval-every", 25),
+        eval_examples: a.get_usize("eval-examples", 256),
+        opt,
+        use_wus: a.flag("wus") || file_cfg.bool_or("train.use_wus", false),
+        gradsum: if a.flag("serial-gradsum") {
+            GradSumMode::Serial
+        } else {
+            GradSumMode::Pipelined { quantum: 4096 }
+        },
+        seed: a.get_usize("seed", 0) as u64,
+        task_difficulty: 0.05,
+        image_alpha: 2.0,
+        quality_target: (target > 0.0).then_some(target),
+        warmup_steps: 0,
+    };
+    println!(
+        "training {} on {} cores, {} steps (wus={}, gradsum={:?})",
+        cfg.model, cfg.cores, cfg.steps, cfg.use_wus, cfg.gradsum
+    );
+    match train(&cfg) {
+        Ok(rep) => {
+            println!(
+                "init {:.1}s, train wall {:.1}s, params {}",
+                rep.init_s, rep.wallclock_s, rep.params_total
+            );
+            println!("{}", rep.breakdown.report());
+            let n = rep.step_losses.len();
+            let stride = (n / 10).max(1);
+            for (i, chunk) in rep.step_losses.chunks(stride).enumerate() {
+                let mean: f32 = chunk.iter().sum::<f32>() / chunk.len() as f32;
+                println!("  steps {:>4}..: loss {:.4}", i * stride + 1, mean);
+            }
+            for e in &rep.evals {
+                println!("  eval @ step {:>4}: loss {:.4} acc {:.3}", e.step, e.loss, e.accuracy);
+            }
+            if let Some(s) = rep.converged_at {
+                println!("quality target reached at step {s}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("train failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_simulate(tokens: &[String]) -> i32 {
+    let cli = Cli::new("simulate", "TPU-v3 pod time-to-train simulation")
+        .opt("model", "resnet50", "resnet50|ssd|maskrcnn|transformer|gnmt")
+        .opt("cores", "2048", "TPU-v3 cores")
+        .flag("no-wus", "disable weight-update sharding")
+        .flag("no-pipelining", "disable pipelined gradient summation")
+        .flag("no-2d", "use 1-D ring gradient summation")
+        .flag("no-dist-eval", "use side-card evaluation")
+        .flag("no-spatial", "disable spatial partitioning");
+    let a = match cli.parse_tokens(tokens) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let name = a.get_or("model", "resnet50");
+    let Some(m) = model(&name) else {
+        eprintln!("unknown model {name}");
+        return 2;
+    };
+    let opts = SimOptions {
+        gradsum_2d: !a.flag("no-2d"),
+        gradsum_pipelined: !a.flag("no-pipelining"),
+        weight_update_sharding: !a.flag("no-wus"),
+        distributed_eval: !a.flag("no-dist-eval"),
+        spatial_partitioning: !a.flag("no-spatial"),
+        epochs_override: None,
+    };
+    let r = simulate(&m, a.get_usize("cores", 2048), &opts);
+    println!("{name} @ {} cores: layout {:?}", r.cores, r.layout);
+    println!(
+        "  epochs {:.1}, steps {:.0}, step {:.2} ms (compute {:.2} / gradsum {:.2} / update {:.2})",
+        r.epochs,
+        r.steps,
+        r.step_seconds * 1e3,
+        r.compute_seconds * 1e3,
+        r.gradsum_seconds * 1e3,
+        r.update_seconds * 1e3
+    );
+    println!(
+        "  eval {:.1}s, infra {:.1}s → benchmark {:.1}s",
+        r.eval_seconds, r.infra_seconds, r.benchmark_seconds
+    );
+    0
+}
+
+fn cmd_submit(_tokens: &[String]) -> i32 {
+    let mut t = Table::new(
+        "Simulated MLPerf-0.6 submission (TPU-v3, all §2 optimizations on)",
+        &["model", "cores", "global batch", "mp", "epochs", "benchmark seconds"],
+    );
+    for m in all_models() {
+        let cores = m.max_useful_cores().min(2048);
+        let r = simulate(&m, cores, &SimOptions::default());
+        t.row(&[
+            m.name.to_string(),
+            r.cores.to_string(),
+            r.layout.global_batch.to_string(),
+            r.layout.mp.to_string(),
+            format!("{:.1}", r.epochs),
+            format!("{:.1}", r.benchmark_seconds),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_info() -> i32 {
+    match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => {
+            println!("artifacts ({}):", m.dir.display());
+            for (name, a) in &m.artifacts {
+                println!(
+                    "  {:<28} {:>2} inputs {:>3} outputs  kind={}",
+                    name,
+                    a.inputs.len(),
+                    a.outputs.len(),
+                    a.meta.get("kind").map(String::as_str).unwrap_or("?")
+                );
+            }
+            println!("\ntrainable models:");
+            for (model, specs) in &m.params {
+                let total: usize = specs.iter().map(|p| p.numel()).sum();
+                println!("  {model:<24} {total:>10} params in {} tensors", specs.len());
+            }
+        }
+        Err(e) => println!("no artifacts: {e:#}"),
+    }
+    println!("\nMLPerf-0.6 profiles:");
+    for m in all_models() {
+        println!(
+            "  {:<12} {:>6.1}M params, opt {:?}, target {} {}, max batch {}",
+            m.name,
+            m.params / 1e6,
+            m.optimizer,
+            m.quality_target,
+            m.quality_metric,
+            m.max_batch
+        );
+    }
+    0
+}

@@ -1,0 +1,240 @@
+//! MLPerf-style structured run logging and timing rules.
+//!
+//! MLPerf time-to-train measures from `run_start` (after initialization —
+//! the v0.6 rules added "a time budget allowing for large scale systems to
+//! initialize") to the eval that first reaches the quality target. This
+//! module implements that clock plus simple counters the trainer and
+//! benches report.
+
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+
+/// One structured log event (mirrors the MLPerf compliance log).
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub t: f64,
+    pub key: String,
+    pub value: Json,
+}
+
+/// Run phases per the MLPerf timing rules.
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Phase {
+    Init,
+    Running,
+    Stopped,
+}
+
+/// MLPerf run logger + clock.
+pub struct RunLog {
+    origin: Instant,
+    run_start: Option<f64>,
+    run_stop: Option<f64>,
+    target_hit_at: Option<f64>,
+    phase: Phase,
+    pub events: Vec<Event>,
+    /// Quality target (e.g. top-1 0.759 for ResNet-50 in v0.6).
+    pub quality_target: f64,
+}
+
+impl RunLog {
+    pub fn new(quality_target: f64) -> RunLog {
+        RunLog {
+            origin: Instant::now(),
+            run_start: None,
+            run_stop: None,
+            target_hit_at: None,
+            phase: Phase::Init,
+            events: Vec::new(),
+            quality_target,
+        }
+    }
+
+    fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+
+    pub fn log(&mut self, key: &str, value: Json) {
+        self.events.push(Event { t: self.now(), key: key.to_string(), value });
+    }
+
+    /// End of initialization (compile, weight broadcast): the MLPerf clock
+    /// starts here.
+    pub fn run_start(&mut self) {
+        assert_eq!(self.phase, Phase::Init, "run_start called twice");
+        self.phase = Phase::Running;
+        let t = self.now();
+        self.run_start = Some(t);
+        self.log("run_start", Json::Null);
+    }
+
+    /// Record an evaluation result; trips the quality clock on first pass.
+    pub fn eval_result(&mut self, epoch: f64, accuracy: f64) {
+        assert_eq!(self.phase, Phase::Running, "eval outside run");
+        self.log(
+            "eval_accuracy",
+            obj(vec![("epoch", Json::Num(epoch)), ("value", Json::Num(accuracy))]),
+        );
+        if accuracy >= self.quality_target && self.target_hit_at.is_none() {
+            self.target_hit_at = Some(self.now());
+            self.log("quality_target_reached", Json::Num(accuracy));
+        }
+    }
+
+    pub fn run_stop(&mut self) {
+        assert_eq!(self.phase, Phase::Running);
+        self.phase = Phase::Stopped;
+        self.run_stop = Some(self.now());
+        self.log("run_stop", Json::Null);
+    }
+
+    /// Whether the target was reached.
+    pub fn converged(&self) -> bool {
+        self.target_hit_at.is_some()
+    }
+
+    /// MLPerf benchmark seconds: run_start → quality target. None if the
+    /// target was never reached (a DNF submission).
+    pub fn benchmark_seconds(&self) -> Option<f64> {
+        Some(self.target_hit_at? - self.run_start?)
+    }
+
+    /// Initialization seconds excluded from the benchmark time.
+    pub fn init_seconds(&self) -> Option<f64> {
+        self.run_start
+    }
+
+    /// Serialize the event log as JSON lines.
+    pub fn dump(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("t", Json::Num(e.t)),
+                    ("key", Json::Str(e.key.clone())),
+                    ("value", e.value.clone()),
+                ])
+                .dump()
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Step-time decomposition accumulator (device step = compute + gradsum +
+/// weight update; the paper's §2 overhead percentages come from exactly
+/// this breakdown).
+#[derive(Clone, Debug, Default)]
+pub struct StepBreakdown {
+    pub compute_s: f64,
+    pub gradsum_s: f64,
+    pub update_s: f64,
+    pub input_s: f64,
+    pub steps: u64,
+}
+
+impl StepBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.gradsum_s + self.update_s + self.input_s
+    }
+
+    /// Fraction of step time spent in the optimizer update (the quantity
+    /// weight-update sharding attacks: 6% ResNet-50 LARS, 45% Transformer
+    /// Adam in the paper).
+    pub fn update_fraction(&self) -> f64 {
+        if self.total() == 0.0 {
+            0.0
+        } else {
+            self.update_s / self.total()
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let t = self.total().max(1e-12);
+        format!(
+            "steps={} total={:.3}s compute={:.1}% gradsum={:.1}% update={:.1}% input={:.1}%",
+            self.steps,
+            self.total(),
+            100.0 * self.compute_s / t,
+            100.0 * self.gradsum_s / t,
+            100.0 * self.update_s / t,
+            100.0 * self.input_s / t,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn benchmark_clock_excludes_init() {
+        let mut log = RunLog::new(0.75);
+        std::thread::sleep(Duration::from_millis(20)); // "compilation"
+        log.run_start();
+        std::thread::sleep(Duration::from_millis(10));
+        log.eval_result(4.0, 0.5);
+        std::thread::sleep(Duration::from_millis(10));
+        log.eval_result(8.0, 0.76);
+        log.run_stop();
+        let bench = log.benchmark_seconds().unwrap();
+        assert!(bench >= 0.015 && bench < 0.5, "bench={bench}");
+        assert!(log.init_seconds().unwrap() >= 0.015);
+        assert!(log.converged());
+    }
+
+    #[test]
+    fn dnf_when_target_missed() {
+        let mut log = RunLog::new(0.99);
+        log.run_start();
+        log.eval_result(1.0, 0.5);
+        log.run_stop();
+        assert!(!log.converged());
+        assert_eq!(log.benchmark_seconds(), None);
+    }
+
+    #[test]
+    fn first_passing_eval_stops_the_clock() {
+        let mut log = RunLog::new(0.7);
+        log.run_start();
+        log.eval_result(1.0, 0.71);
+        let t1 = log.benchmark_seconds().unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        log.eval_result(2.0, 0.9); // later, better eval must not move it
+        assert_eq!(log.benchmark_seconds().unwrap(), t1);
+    }
+
+    #[test]
+    fn event_log_is_json_lines() {
+        let mut log = RunLog::new(0.5);
+        log.run_start();
+        log.eval_result(1.0, 0.6);
+        log.run_stop();
+        for line in log.dump().lines() {
+            assert!(crate::util::json::Json::parse(line).is_ok(), "{line}");
+        }
+    }
+
+    #[test]
+    fn breakdown_percentages() {
+        let b = StepBreakdown {
+            compute_s: 0.90,
+            gradsum_s: 0.04,
+            update_s: 0.06,
+            input_s: 0.0,
+            steps: 100,
+        };
+        assert!((b.update_fraction() - 0.06).abs() < 1e-12);
+        assert!(b.report().contains("update=6.0%"));
+    }
+
+    #[test]
+    #[should_panic(expected = "run_start called twice")]
+    fn double_start_panics() {
+        let mut log = RunLog::new(0.5);
+        log.run_start();
+        log.run_start();
+    }
+}

@@ -1,0 +1,160 @@
+//! Distributed batch normalization (paper §2: "When the number of examples
+//! per TPU accelerator is below a threshold, we use the distributed
+//! normalization technique presented in [19]").
+//!
+//! Per-core batches at pod scale are tiny (ResNet-50: 16/core at 32K
+//! batch over 2048 cores), so BN statistics over the local batch alone are
+//! too noisy. [19] forms *normalization groups* of g cores that all-reduce
+//! their per-core moments; the group mean/variance are then exact moments
+//! of the union of the group's examples.
+
+use crate::collectives::all_reduce_scalars;
+use crate::fabric::Endpoint;
+
+/// Per-core batch moments for one channel: (count, sum, sum of squares).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Moments {
+    pub count: f32,
+    pub sum: f32,
+    pub sumsq: f32,
+}
+
+impl Moments {
+    pub fn of(xs: &[f32]) -> Moments {
+        Moments {
+            count: xs.len() as f32,
+            sum: xs.iter().sum(),
+            sumsq: xs.iter().map(|x| x * x).sum(),
+        }
+    }
+
+    pub fn mean(&self) -> f32 {
+        self.sum / self.count
+    }
+
+    pub fn var(&self) -> f32 {
+        (self.sumsq / self.count - self.mean() * self.mean()).max(0.0)
+    }
+
+    pub fn merge(&self, other: &Moments) -> Moments {
+        Moments {
+            count: self.count + other.count,
+            sum: self.sum + other.sum,
+            sumsq: self.sumsq + other.sumsq,
+        }
+    }
+}
+
+/// The normalization-group size rule: group enough cores that the combined
+/// examples reach `target_examples` (the threshold below which local BN
+/// degrades; [19] uses ≥32).
+pub fn group_size(per_core_batch: usize, target_examples: usize, max_group: usize) -> usize {
+    let mut g = 1;
+    while g < max_group && per_core_batch * g < target_examples {
+        g *= 2;
+    }
+    g
+}
+
+/// All-reduce per-channel moments within a normalization subgroup; returns
+/// the group mean/var per channel. SPMD over the fabric.
+pub fn distributed_moments(
+    ep: &mut Endpoint,
+    group: &[usize],
+    locals: &[Moments],
+) -> Vec<(f32, f32)> {
+    let mut buf: Vec<f32> = Vec::with_capacity(locals.len() * 3);
+    for m in locals {
+        buf.extend_from_slice(&[m.count, m.sum, m.sumsq]);
+    }
+    all_reduce_scalars(ep, group, &mut buf);
+    buf.chunks(3)
+        .map(|c| {
+            let m = Moments { count: c[0], sum: c[1], sumsq: c[2] };
+            (m.mean(), m.var())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::run_spmd;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn merged_moments_are_exact_union_moments() {
+        let mut rng = Rng::new(0);
+        let a = rng.normal_vec(37, 2.0);
+        let b = rng.normal_vec(63, 0.5);
+        let merged = Moments::of(&a).merge(&Moments::of(&b));
+        let mut union = a.clone();
+        union.extend_from_slice(&b);
+        let exact = Moments::of(&union);
+        assert!((merged.mean() - exact.mean()).abs() < 1e-5);
+        assert!((merged.var() - exact.var()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn group_size_rule() {
+        // Paper regime: 16 examples/core, want ≥32 → group of 2.
+        assert_eq!(group_size(16, 32, 64), 2);
+        assert_eq!(group_size(4, 32, 64), 8);
+        // Already enough examples locally → no grouping.
+        assert_eq!(group_size(64, 32, 64), 1);
+        // Cap respected.
+        assert_eq!(group_size(1, 1024, 16), 16);
+    }
+
+    #[test]
+    fn distributed_moments_match_global() {
+        let world = 4;
+        let per_core = 8;
+        // Build the global dataset deterministically; each core owns a slice.
+        let all: Vec<f32> = (0..world * per_core).map(|i| (i * i % 17) as f32).collect();
+        let exact = Moments::of(&all);
+        let out = run_spmd(world, |ep| {
+            let mine = &all[ep.rank * per_core..(ep.rank + 1) * per_core];
+            let group: Vec<usize> = (0..world).collect();
+            distributed_moments(ep, &group, &[Moments::of(mine)])
+        });
+        for r in 0..world {
+            let (mean, var) = out[r][0];
+            assert!((mean - exact.mean()).abs() < 1e-4);
+            assert!((var - exact.var()).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn subgroup_moments_stay_in_subgroup() {
+        let out = run_spmd(4, |ep| {
+            let group: Vec<usize> = if ep.rank < 2 { vec![0, 1] } else { vec![2, 3] };
+            let val = if ep.rank < 2 { 1.0 } else { 5.0 };
+            let m = Moments::of(&[val, val]);
+            distributed_moments(ep, &group, &[m])
+        });
+        assert!((out[0][0].0 - 1.0).abs() < 1e-6);
+        assert!((out[3][0].0 - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn variance_reduction_with_grouping() {
+        // Group statistics are less noisy: variance of the group-mean
+        // estimator shrinks ~1/g. Monte-Carlo check.
+        let trials = 200;
+        let per_core = 4;
+        let mut rng = Rng::new(42);
+        let spread = |g: usize, rng: &mut Rng| -> f64 {
+            let mut means = Vec::new();
+            for _ in 0..trials {
+                let xs = rng.normal_vec(per_core * g, 1.0);
+                means.push(Moments::of(&xs).mean() as f64);
+            }
+            let mu = means.iter().sum::<f64>() / trials as f64;
+            means.iter().map(|m| (m - mu).powi(2)).sum::<f64>() / trials as f64
+        };
+        let v1 = spread(1, &mut rng);
+        let v8 = spread(8, &mut rng);
+        assert!(v8 < v1 / 4.0, "v1={v1} v8={v8}");
+    }
+}

@@ -1,0 +1,9 @@
+//! MLPerf-0.6 model inventories, convergence curves (Fig. 8) and the
+//! distributed batch-norm grouping from [19] (§2).
+
+pub mod batchnorm;
+pub mod convergence;
+pub mod registry;
+
+pub use convergence::EpochCurve;
+pub use registry::{all_models, model, Layout, ModelProfile, Optimizer};

@@ -1,0 +1,388 @@
+//! MLPerf-0.6 model inventories (paper §3): parameter counts, per-example
+//! FLOPs, dataset sizes, quality targets, optimizer choice, the batch-size
+//! scaling policy of the Google submission (Fig. 7), and the gradient
+//! tensor-size census used by the gradient-summation model.
+//!
+//! Numbers are from the public model descriptions and MLPerf-0.6 reference
+//! implementations; they drive the *simulator* (Figs. 7-9), not the real
+//! trainable mini-models (those live in python/compile).
+
+use crate::models::convergence::EpochCurve;
+use crate::netsim::cost::resnet50_gradient_bytes;
+
+/// Optimizer used by a benchmark (determines update HBM traffic).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Optimizer {
+    Lars,
+    Adam,
+    Sgd,
+}
+
+impl Optimizer {
+    /// HBM bytes per parameter per update (reads + writes, f32 state).
+    pub fn bytes_per_param(&self) -> f64 {
+        match self {
+            Optimizer::Lars => 20.0, // r:w,g,v w:w,v
+            Optimizer::Adam => 28.0, // r:w,g,m,v w:w,m,v
+            Optimizer::Sgd => 16.0,  // r:w,g,v w:w,v (momentum)
+        }
+    }
+}
+
+/// Data/model-parallel layout chosen for a core count (paper Fig. 7 + §3).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Layout {
+    pub cores: usize,
+    /// Spatial/graph model-parallel degree (1 = pure data parallel).
+    pub mp: usize,
+    /// Data-parallel replica count = cores / mp.
+    pub replicas: usize,
+    pub global_batch: usize,
+}
+
+impl Layout {
+    pub fn per_replica_batch(&self) -> f64 {
+        self.global_batch as f64 / self.replicas as f64
+    }
+}
+
+/// One MLPerf-0.6 benchmark's profile.
+pub struct ModelProfile {
+    pub name: &'static str,
+    /// Trainable parameters.
+    pub params: f64,
+    /// Forward FLOPs per example (per sentence for the NMT models).
+    pub fwd_flops_per_example: f64,
+    /// HBM activation traffic per example per core (coarse).
+    pub hbm_bytes_per_example: f64,
+    /// MXU utilization units per example (1 for image models; ≈ tokens per
+    /// sentence for sequence models — see devicesim::step_model).
+    pub util_units_per_example: f64,
+    pub train_examples: usize,
+    pub eval_examples: usize,
+    /// Eval cadence in epochs (paper: ResNet-50 every 4 epochs).
+    pub eval_interval_epochs: f64,
+    pub quality_target: f64,
+    pub quality_metric: &'static str,
+    pub optimizer: Optimizer,
+    pub epochs: EpochCurve,
+    /// Batch-size cap from convergence (Fig. 7/8).
+    pub max_batch: usize,
+    /// Max useful spatial/graph partition degree (§3).
+    pub max_mp: usize,
+}
+
+impl ModelProfile {
+    /// The Google-submission layout for a core count (Fig. 7 shape: only
+    /// ResNet-50 scales batch aggressively; the rest stay ≤2x across the
+    /// submission range and use model parallelism to keep scaling).
+    pub fn layout(&self, cores: usize) -> Layout {
+        assert!(cores >= 1);
+        let (mp, global_batch) = match self.name {
+            // ResNet-50: pure data parallel, batch 16/core up to 32K.
+            "resnet50" => (1, (16 * cores).clamp(256, 32768)),
+            // SSD (§3): spatial partitioning keeps per-replica batch ≥ 4
+            // once data parallelism alone would drop below it.
+            "ssd" => {
+                let mut mp = 1;
+                while mp < self.max_mp && 4 * (cores / mp) > self.max_batch {
+                    mp *= 2;
+                }
+                let replicas = (cores / mp).max(1);
+                (mp, (4 * replicas).clamp(1024, 2048))
+            }
+            // Mask-RCNN (§3): "on 128 and 256 cores, model parallelism is
+            // enabled across 2 and 4 cores" — mp = cores/64 capped at 4;
+            // replicas capped by the 128 batch wall.
+            "maskrcnn" => {
+                let mp = (cores / 64).clamp(1, 4).next_power_of_two();
+                let mp = if mp * 64 > cores { mp / 2 } else { mp }.max(1);
+                let replicas = (cores / mp).min(self.max_batch).max(1);
+                (mp, replicas.min(self.max_batch))
+            }
+            // Transformer (§3): global 2048, 1/core at pod scale; 1024 at
+            // the smaller submission scales (growth ≤ 2x, Fig. 7).
+            "transformer" => (1, cores.clamp(1024, 2048)),
+            // GNMT: 512 → 1024 across the range.
+            "gnmt" => (1, cores.clamp(512, 1024)),
+            _ => (1, cores),
+        };
+        let replicas = (cores / mp).min(global_batch).max(1);
+        Layout { cores, mp, replicas, global_batch }
+    }
+
+    /// Largest core count the model can actually occupy (per-replica batch
+    /// ≥ 1 with maximum model parallelism) — Mask-RCNN tops out at 512.
+    pub fn max_useful_cores(&self) -> usize {
+        self.max_batch * self.max_mp
+    }
+
+    /// Per-tensor gradient byte census (for the gradsum pipeline model).
+    pub fn gradient_bytes(&self) -> Vec<f64> {
+        match self.name {
+            "resnet50" => resnet50_gradient_bytes(),
+            "ssd" => {
+                // ResNet-34 backbone (36 convs) + 12 detection heads + BNs.
+                let mut v: Vec<f64> = Vec::new();
+                for i in 0..36 {
+                    let c = 64.0 * (1 << (i / 12)) as f64;
+                    v.push(9.0 * c * c * 4.0);
+                    v.push(c * 4.0);
+                    v.push(c * 4.0);
+                }
+                for _ in 0..12 {
+                    v.push(3.0 * 3.0 * 256.0 * 486.0 * 4.0);
+                }
+                v
+            }
+            "transformer" => {
+                // 6+6 layers, d=1024, ff=4096 (big): qkvo + 2 ff each + LNs.
+                let mut v = Vec::new();
+                v.push(33708.0 * 1024.0 * 4.0); // shared embedding
+                for _ in 0..12 {
+                    for _ in 0..4 {
+                        v.push(1024.0 * 1024.0 * 4.0);
+                    }
+                    v.push(1024.0 * 4096.0 * 4.0);
+                    v.push(4096.0 * 1024.0 * 4.0);
+                    v.push(1024.0 * 4.0);
+                    v.push(1024.0 * 4.0);
+                }
+                v
+            }
+            "gnmt" => {
+                // 8 encoder + 8 decoder LSTM layers @1024 + embeddings +
+                // attention + softmax.
+                let mut v = Vec::new();
+                v.push(32000.0 * 1024.0 * 4.0 * 2.0);
+                for _ in 0..16 {
+                    v.push(2048.0 * 4096.0 * 4.0); // w (concat in+h)
+                    v.push(4096.0 * 4.0); // bias
+                }
+                v.push(1024.0 * 32000.0 * 4.0); // softmax
+                v
+            }
+            "maskrcnn" => {
+                let mut v = resnet50_gradient_bytes();
+                // FPN + RPN + box/mask heads.
+                for _ in 0..20 {
+                    v.push(256.0 * 256.0 * 9.0 * 4.0);
+                }
+                v.push(1024.0 * 1024.0 * 4.0 * 2.0);
+                v
+            }
+            _ => vec![self.params * 4.0],
+        }
+    }
+}
+
+/// The five MLPerf-0.6 benchmarks of the paper.
+pub fn all_models() -> Vec<ModelProfile> {
+    vec![
+        ModelProfile {
+            name: "resnet50",
+            params: 25.6e6,
+            fwd_flops_per_example: 3.9e9, // 224x224 v1.5
+            hbm_bytes_per_example: 40e6,
+            util_units_per_example: 1.0,
+            train_examples: 1_281_167,
+            eval_examples: 50_000,
+            eval_interval_epochs: 4.0, // paper §2
+            quality_target: 0.759,     // MLPerf-0.6 top-1
+            quality_metric: "top-1",
+            optimizer: Optimizer::Lars,
+            // Anchors: small-batch reference ≈ 41 epochs; Table 1 shows
+            // 64-72.8 at 32K depending on the LARS variant (curve carries
+            // the reference variant; Table 1 deltas applied in the bench).
+            epochs: EpochCurve::new(
+                &[(256, 41.0), (4096, 44.0), (16384, 55.0), (32768, 68.0)],
+                None,
+            ),
+            max_batch: 32768,
+            max_mp: 1,
+        },
+        ModelProfile {
+            name: "ssd",
+            params: 25.1e6, // ResNet-34 backbone + heads
+            fwd_flops_per_example: 7.5e9, // 300x300
+            hbm_bytes_per_example: 15e6,
+            util_units_per_example: 1.0,
+            train_examples: 118_287,
+            eval_examples: 5_000,
+            eval_interval_epochs: 5.0,
+            quality_target: 0.23, // paper: mAP 0.23
+            quality_metric: "mAP",
+            optimizer: Optimizer::Sgd,
+            // Paper Fig. 8: +22% epochs 256→1024, +27% more at 2048.
+            epochs: EpochCurve::new(
+                &[(256, 50.0), (1024, 61.0), (2048, 77.5)],
+                None,
+            ),
+            max_batch: 2048,
+            max_mp: 4, // spatial partitioning up to 4 cores (§3)
+        },
+        ModelProfile {
+            name: "maskrcnn",
+            params: 44.2e6,
+            fwd_flops_per_example: 1.5e12, // ~1024px two-stage + dense FPN
+            hbm_bytes_per_example: 200e6,
+            util_units_per_example: 20.0, // huge image: ample parallelism
+            train_examples: 118_287,
+            eval_examples: 5_000,
+            eval_interval_epochs: 1.0,
+            quality_target: 0.377, // box AP target (v0.6)
+            quality_metric: "box-AP",
+            optimizer: Optimizer::Sgd,
+            epochs: EpochCurve::new(
+                &[(16, 13.0), (32, 14.5), (64, 16.5), (128, 18.4)],
+                Some(128), // paper §3: no convergence above 128
+            ),
+            max_batch: 128,
+            max_mp: 4, // stage-1 spatial + stage-2 graph partitioning (§3)
+        },
+        ModelProfile {
+            name: "transformer",
+            params: 210e6, // big model
+            fwd_flops_per_example: 1.4e10, // ≈ 2 * P * 33 tokens
+            hbm_bytes_per_example: 30e6,
+            util_units_per_example: 33.0, // ~33 tokens per sentence
+            train_examples: 4_500_000,
+            eval_examples: 3_003,
+            eval_interval_epochs: 1.0,
+            quality_target: 25.0, // BLEU
+            quality_metric: "BLEU",
+            optimizer: Optimizer::Adam,
+            epochs: EpochCurve::new(
+                &[(256, 1.6), (1024, 2.0), (2048, 2.4)],
+                None,
+            ),
+            max_batch: 2048, // paper §3: global batch 2048, 1/core
+            max_mp: 1,
+        },
+        ModelProfile {
+            name: "gnmt",
+            params: 160e6,
+            fwd_flops_per_example: 1.1e10,
+            hbm_bytes_per_example: 80e6, // RNN: memory-bound cells (§3)
+            // RNN steps serialize, but the hoisted input projection (§3)
+            // batches T steps' projections → effective rows > 1.
+            util_units_per_example: 4.0,
+            train_examples: 3_600_000,
+            eval_examples: 3_003,
+            eval_interval_epochs: 1.0,
+            quality_target: 24.0, // sacrebleu target v0.6
+            quality_metric: "BLEU",
+            optimizer: Optimizer::Adam,
+            epochs: EpochCurve::new(
+                &[(256, 1.8), (1024, 2.2), (2048, 2.8)],
+                None,
+            ),
+            max_batch: 1024,
+            max_mp: 1,
+        },
+    ]
+}
+
+pub fn model(name: &str) -> Option<ModelProfile> {
+    all_models().into_iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_models_present() {
+        let names: Vec<&str> = all_models().iter().map(|m| m.name).collect();
+        assert_eq!(names, vec!["resnet50", "ssd", "maskrcnn", "transformer", "gnmt"]);
+    }
+
+    #[test]
+    fn fig7_shape_only_resnet_scales_batch_aggressively() {
+        // Paper §4: "with the exception of ResNet-50, in all other
+        // MLPerf-0.6 models batch size only increases two times or less"
+        // across the scaling range used in the submission.
+        for m in all_models() {
+            let small = m.layout(256).global_batch;
+            let large = m.layout(2048).global_batch;
+            let growth = large as f64 / small as f64;
+            if m.name == "resnet50" {
+                assert!(growth >= 4.0, "resnet50 growth {growth}");
+            } else {
+                assert!(growth <= 2.0 + 1e-9, "{}: growth {growth}", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn resnet_pod_layout_is_32k_batch() {
+        let m = model("resnet50").unwrap();
+        let l = m.layout(2048);
+        assert_eq!(l.global_batch, 32768);
+        assert_eq!(l.mp, 1);
+        assert_eq!(l.per_replica_batch(), 16.0);
+    }
+
+    #[test]
+    fn transformer_pod_layout_batch_one_per_core() {
+        let m = model("transformer").unwrap();
+        let l = m.layout(2048);
+        assert_eq!(l.global_batch, 2048);
+        assert_eq!(l.per_replica_batch(), 1.0);
+    }
+
+    #[test]
+    fn ssd_engages_spatial_partitioning_at_scale() {
+        let m = model("ssd").unwrap();
+        assert_eq!(m.layout(256).mp, 1);
+        let l = m.layout(2048);
+        // 2048 cores exceeds the 2048-batch cap → spatial partitioning.
+        assert!(l.mp > 1, "expected mp>1, got {:?}", l);
+        assert!(l.replicas * l.mp == 2048);
+        assert!(l.global_batch <= 2048);
+    }
+
+    #[test]
+    fn maskrcnn_mp_allows_scaling_past_batch_wall() {
+        let m = model("maskrcnn").unwrap();
+        let l128 = m.layout(128);
+        let l256 = m.layout(256);
+        assert!(l256.global_batch <= 128);
+        // Paper: 128 cores → mp 2; 256 cores → mp 4.
+        assert_eq!(l128.mp, 2);
+        assert_eq!(l256.mp, 4);
+        assert_eq!(m.max_useful_cores(), 512);
+    }
+
+    #[test]
+    fn gradient_census_totals_match_params() {
+        for m in all_models() {
+            let total: f64 = m.gradient_bytes().iter().sum();
+            let expect = m.params * 4.0;
+            let ratio = total / expect;
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "{}: census {total:.2e} vs params*4 {expect:.2e}",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn per_replica_batch_at_least_one() {
+        for m in all_models() {
+            for cores in [16, 64, 256, 1024, 2048] {
+                if cores > m.max_useful_cores() {
+                    continue;
+                }
+                let l = m.layout(cores);
+                assert!(
+                    l.per_replica_batch() >= 1.0,
+                    "{} @ {cores}: {:?}",
+                    m.name,
+                    l
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! TPU-v3 pod interconnect simulation (paper Figs. 1-2): 2-D torus
+//! topology, analytic collective cost model, and an event-driven
+//! link-contention simulator that validates the analytic assumptions.
+
+pub mod cost;
+pub mod sim;
+pub mod torus;
+
+pub use cost::{ArAlgo, CostModel, GradSumModel, NetParams};
+pub use sim::{Message, NetSim};
+pub use torus::{Coord, Dir, Link, Torus};

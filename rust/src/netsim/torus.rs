@@ -1,0 +1,189 @@
+//! 2-D torus topology (paper Fig. 2: "1024 TPU-v3 chips ... interconnected
+//! by a custom high throughput 2-D torus network").
+//!
+//! Nodes are chips, addressed by (x, y). Each chip has four links (+x, -x,
+//! +y, -y) that wrap around; a TPU-v3 pod is a 32x32 torus. Routing is
+//! dimension-ordered (X then Y) with shortest wrap direction per dimension,
+//! matching how the XLA collectives schedule neighbor exchanges.
+
+/// Chip coordinate on the torus.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct Coord {
+    pub x: usize,
+    pub y: usize,
+}
+
+/// One of the four torus directions.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Dir {
+    XPlus,
+    XMinus,
+    YPlus,
+    YMinus,
+}
+
+/// A directed link: the `dir`-facing port of `from`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct Link {
+    pub from: Coord,
+    pub dir: Dir,
+}
+
+/// 2-D torus of `nx` x `ny` chips.
+#[derive(Clone, Copy, Debug)]
+pub struct Torus {
+    pub nx: usize,
+    pub ny: usize,
+}
+
+impl Torus {
+    pub fn new(nx: usize, ny: usize) -> Torus {
+        assert!(nx >= 1 && ny >= 1);
+        Torus { nx, ny }
+    }
+
+    /// Square-ish torus for a given chip count (powers of two): 1024 → 32x32.
+    pub fn for_chips(chips: usize) -> Torus {
+        assert!(chips.is_power_of_two(), "chip count must be a power of two");
+        let log = chips.trailing_zeros();
+        let nx = 1usize << (log / 2 + log % 2);
+        let ny = 1usize << (log / 2);
+        Torus::new(nx, ny)
+    }
+
+    pub fn chips(&self) -> usize {
+        self.nx * self.ny
+    }
+
+    pub fn contains(&self, c: Coord) -> bool {
+        c.x < self.nx && c.y < self.ny
+    }
+
+    /// Neighbor in a direction (with wraparound).
+    pub fn step(&self, c: Coord, dir: Dir) -> Coord {
+        match dir {
+            Dir::XPlus => Coord { x: (c.x + 1) % self.nx, y: c.y },
+            Dir::XMinus => Coord { x: (c.x + self.nx - 1) % self.nx, y: c.y },
+            Dir::YPlus => Coord { x: c.x, y: (c.y + 1) % self.ny },
+            Dir::YMinus => Coord { x: c.x, y: (c.y + self.ny - 1) % self.ny },
+        }
+    }
+
+    /// Shortest signed offset from a to b along a ring of length n.
+    fn ring_delta(n: usize, a: usize, b: usize) -> isize {
+        let fwd = (b + n - a) % n;
+        if fwd <= n / 2 {
+            fwd as isize
+        } else {
+            fwd as isize - n as isize
+        }
+    }
+
+    /// Minimal hop count between two chips.
+    pub fn hops(&self, a: Coord, b: Coord) -> usize {
+        Self::ring_delta(self.nx, a.x, b.x).unsigned_abs()
+            + Self::ring_delta(self.ny, a.y, b.y).unsigned_abs()
+    }
+
+    /// Dimension-ordered (X-then-Y) shortest route; returns the link sequence.
+    pub fn route(&self, a: Coord, b: Coord) -> Vec<Link> {
+        let mut links = Vec::new();
+        let mut cur = a;
+        let dx = Self::ring_delta(self.nx, a.x, b.x);
+        let dir = if dx >= 0 { Dir::XPlus } else { Dir::XMinus };
+        for _ in 0..dx.unsigned_abs() {
+            links.push(Link { from: cur, dir });
+            cur = self.step(cur, dir);
+        }
+        let dy = Self::ring_delta(self.ny, a.y, b.y);
+        let dir = if dy >= 0 { Dir::YPlus } else { Dir::YMinus };
+        for _ in 0..dy.unsigned_abs() {
+            links.push(Link { from: cur, dir });
+            cur = self.step(cur, dir);
+        }
+        links
+    }
+
+    /// All chips in row-major order.
+    pub fn coords(&self) -> impl Iterator<Item = Coord> + '_ {
+        (0..self.ny).flat_map(move |y| (0..self.nx).map(move |x| Coord { x, y }))
+    }
+
+    /// Row-major linear id.
+    pub fn id(&self, c: Coord) -> usize {
+        c.y * self.nx + c.x
+    }
+
+    pub fn coord(&self, id: usize) -> Coord {
+        Coord { x: id % self.nx, y: id / self.nx }
+    }
+
+    /// Network diameter (max shortest-path hops).
+    pub fn diameter(&self) -> usize {
+        self.nx / 2 + self.ny / 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pod_is_32x32() {
+        let t = Torus::for_chips(1024);
+        assert_eq!((t.nx, t.ny), (32, 32));
+        assert_eq!(t.chips(), 1024);
+    }
+
+    #[test]
+    fn non_square_power_of_two() {
+        let t = Torus::for_chips(128);
+        assert_eq!((t.nx, t.ny), (16, 8));
+    }
+
+    #[test]
+    fn wraparound_steps() {
+        let t = Torus::new(4, 4);
+        assert_eq!(t.step(Coord { x: 3, y: 0 }, Dir::XPlus), Coord { x: 0, y: 0 });
+        assert_eq!(t.step(Coord { x: 0, y: 0 }, Dir::YMinus), Coord { x: 0, y: 3 });
+    }
+
+    #[test]
+    fn hops_use_shortest_wrap() {
+        let t = Torus::new(8, 8);
+        // 0 → 7 is 1 hop backwards, not 7 forwards.
+        assert_eq!(t.hops(Coord { x: 0, y: 0 }, Coord { x: 7, y: 0 }), 1);
+        assert_eq!(t.hops(Coord { x: 0, y: 0 }, Coord { x: 4, y: 4 }), 8);
+    }
+
+    #[test]
+    fn route_matches_hops_and_reaches_target() {
+        let t = Torus::new(8, 4);
+        for a in t.coords() {
+            for b in t.coords() {
+                let r = t.route(a, b);
+                assert_eq!(r.len(), t.hops(a, b), "{a:?}->{b:?}");
+                let mut cur = a;
+                for l in &r {
+                    assert_eq!(l.from, cur);
+                    cur = t.step(cur, l.dir);
+                }
+                assert_eq!(cur, b);
+            }
+        }
+    }
+
+    #[test]
+    fn diameter_of_pod() {
+        assert_eq!(Torus::for_chips(1024).diameter(), 32);
+    }
+
+    #[test]
+    fn id_coord_round_trip() {
+        let t = Torus::new(8, 4);
+        for (i, c) in t.coords().enumerate() {
+            assert_eq!(t.id(c), i);
+            assert_eq!(t.coord(i), c);
+        }
+    }
+}

@@ -1,0 +1,311 @@
+//! Optimizers in Rust (paper §3 Table 1 / Figures 5-6).
+//!
+//! These run on the L3 hot path: after gradient summation, the update is
+//! applied either replicated (every core updates all weights) or sharded
+//! (weight-update sharding — each core updates a byte-balanced shard, see
+//! `crate::wus`). The math matches `python/compile/kernels/ref.py` —
+//! verified by the cross-layer integration test that compares against the
+//! AOT-compiled Pallas kernels at 1e-6 tolerance.
+//!
+//! LARS variants (paper Figures 5/6):
+//! * `Scaled` — MLPerf-0.6 reference: `v = m·v + (g + β·w); w -= lr·λ·v`
+//! * `Unscaled` — You et al.: `v = m·v + lr·λ·(g + β·w); w -= v`
+//!
+//! The unscaled variant converges in fewer epochs (Table 1: 70.6 vs 72.8,
+//! and 64 with tuned momentum) — reproduced in benches/table1_lars.rs.
+
+pub mod schedule;
+
+/// LARS update equation variant.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum LarsVariant {
+    /// Paper Fig. 5 (MLPerf-0.6 reference): momentum scaled by lr at apply.
+    Scaled,
+    /// Paper Fig. 6 (You et al.): trust ratio folded into the buffer.
+    Unscaled,
+}
+
+/// LARS hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct LarsConfig {
+    pub variant: LarsVariant,
+    pub eta: f32,
+    pub weight_decay: f32,
+    pub momentum: f32,
+    /// Skip LARS adaptation for bias/BN tensors (standard practice; they
+    /// get plain momentum SGD).
+    pub skip_adaptation_for_1d: bool,
+}
+
+impl Default for LarsConfig {
+    fn default() -> LarsConfig {
+        LarsConfig {
+            variant: LarsVariant::Unscaled,
+            eta: 0.001,
+            weight_decay: 1e-4,
+            momentum: 0.9,
+            skip_adaptation_for_1d: true,
+        }
+    }
+}
+
+/// Per-tensor LARS state = momentum buffer.
+#[derive(Clone, Debug, Default)]
+pub struct LarsState {
+    pub v: Vec<f32>,
+}
+
+/// One fused LARS step on a flat tensor (w and state updated in place).
+/// `is_1d` marks bias/BN tensors exempt from adaptation.
+pub fn lars_step(
+    cfg: &LarsConfig,
+    lr: f32,
+    w: &mut [f32],
+    g: &[f32],
+    state: &mut LarsState,
+    is_1d: bool,
+) {
+    assert_eq!(w.len(), g.len());
+    if state.v.is_empty() {
+        state.v = vec![0.0; w.len()];
+    }
+    assert_eq!(state.v.len(), w.len());
+
+    let lam = if cfg.skip_adaptation_for_1d && is_1d {
+        1.0
+    } else {
+        // Norms in f32 (the paper's mixed-precision rule).
+        let w_norm = l2_norm(w);
+        let g_norm = l2_norm(g);
+        cfg.eta * w_norm / (g_norm + cfg.weight_decay * w_norm + 1e-9)
+    };
+    let beta = cfg.weight_decay;
+    let m = cfg.momentum;
+    match cfg.variant {
+        LarsVariant::Scaled => {
+            for i in 0..w.len() {
+                let update = g[i] + beta * w[i];
+                state.v[i] = m * state.v[i] + update;
+                w[i] -= lr * lam * state.v[i];
+            }
+        }
+        LarsVariant::Unscaled => {
+            for i in 0..w.len() {
+                let update = g[i] + beta * w[i];
+                state.v[i] = m * state.v[i] + lr * lam * update;
+                w[i] -= state.v[i];
+            }
+        }
+    }
+}
+
+/// Adam hyper-parameters (Transformer/GNMT in the paper).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamConfig {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> AdamConfig {
+        AdamConfig { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+/// Per-tensor Adam state.
+#[derive(Clone, Debug, Default)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// One fused Adam step; `step` is 1-based.
+pub fn adam_step(
+    cfg: &AdamConfig,
+    lr: f32,
+    step: u64,
+    w: &mut [f32],
+    g: &[f32],
+    state: &mut AdamState,
+) {
+    assert_eq!(w.len(), g.len());
+    if state.m.is_empty() {
+        state.m = vec![0.0; w.len()];
+        state.v = vec![0.0; w.len()];
+    }
+    let b1 = cfg.beta1;
+    let b2 = cfg.beta2;
+    let bc1 = 1.0 - b1.powi(step as i32);
+    let bc2 = 1.0 - b2.powi(step as i32);
+    for i in 0..w.len() {
+        state.m[i] = b1 * state.m[i] + (1.0 - b1) * g[i];
+        state.v[i] = b2 * state.v[i] + (1.0 - b2) * g[i] * g[i];
+        let m_hat = state.m[i] / bc1;
+        let v_hat = state.v[i] / bc2;
+        w[i] -= lr * m_hat / (v_hat.sqrt() + cfg.eps);
+    }
+}
+
+/// Plain momentum SGD (baseline).
+pub fn sgd_momentum_step(
+    lr: f32,
+    momentum: f32,
+    w: &mut [f32],
+    g: &[f32],
+    v: &mut Vec<f32>,
+) {
+    if v.is_empty() {
+        *v = vec![0.0; w.len()];
+    }
+    for i in 0..w.len() {
+        v[i] = momentum * v[i] + g[i];
+        w[i] -= lr * v[i];
+    }
+}
+
+fn l2_norm(xs: &[f32]) -> f32 {
+    xs.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randvec(seed: u64, n: usize) -> Vec<f32> {
+        Rng::new(seed).normal_vec(n, 1.0)
+    }
+
+    #[test]
+    fn lars_scaled_matches_closed_form() {
+        // Hand-computed single element: w=2, g=0.5, v=0, lr=0.1,
+        // eta=0.01, beta=0 (so lam = eta*|w|/|g| = 0.04), m=0.9.
+        let cfg = LarsConfig {
+            variant: LarsVariant::Scaled,
+            eta: 0.01,
+            weight_decay: 0.0,
+            momentum: 0.9,
+            skip_adaptation_for_1d: false,
+        };
+        let mut w = vec![2.0f32];
+        let mut st = LarsState::default();
+        lars_step(&cfg, 0.1, &mut w, &[0.5], &mut st, false);
+        // lam = 0.01 * 2 / 0.5 = 0.04; v = 0.5; w = 2 - 0.1*0.04*0.5 = 1.998
+        assert!((w[0] - 1.998).abs() < 1e-6, "{}", w[0]);
+        assert!((st.v[0] - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn lars_unscaled_matches_closed_form() {
+        let cfg = LarsConfig {
+            variant: LarsVariant::Unscaled,
+            eta: 0.01,
+            weight_decay: 0.0,
+            momentum: 0.9,
+            skip_adaptation_for_1d: false,
+        };
+        let mut w = vec![2.0f32];
+        let mut st = LarsState::default();
+        lars_step(&cfg, 0.1, &mut w, &[0.5], &mut st, false);
+        // v = 0.1*0.04*0.5 = 0.002; w = 2 - 0.002 = 1.998
+        assert!((w[0] - 1.998).abs() < 1e-6);
+        assert!((st.v[0] - 0.002).abs() < 1e-8);
+    }
+
+    #[test]
+    fn variants_agree_on_first_step_diverge_after() {
+        // From v=0 both variants take the same first step, then diverge —
+        // the subtle difference Table 1 is about.
+        let cfg_s = LarsConfig { variant: LarsVariant::Scaled, ..Default::default() };
+        let cfg_u = LarsConfig { variant: LarsVariant::Unscaled, ..Default::default() };
+        let g1 = randvec(1, 64);
+        let g2 = randvec(2, 64);
+        let mut ws = randvec(0, 64);
+        let mut wu = ws.clone();
+        let mut ss = LarsState::default();
+        let mut su = LarsState::default();
+        lars_step(&cfg_s, 0.1, &mut ws, &g1, &mut ss, false);
+        lars_step(&cfg_u, 0.1, &mut wu, &g1, &mut su, false);
+        for (a, b) in ws.iter().zip(&wu) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        lars_step(&cfg_s, 0.1, &mut ws, &g2, &mut ss, false);
+        lars_step(&cfg_u, 0.1, &mut wu, &g2, &mut su, false);
+        let diff: f32 = ws.iter().zip(&wu).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-6, "variants should diverge once momentum is non-zero");
+    }
+
+    #[test]
+    fn scaled_momentum_couples_to_lr_changes() {
+        // The defining flaw of the scaled variant (why MLPerf's reference
+        // differs): decaying lr mid-momentum leaves a mismatched buffer.
+        // Unscaled: effective step shrinks smoothly with lr.
+        // We verify the mechanical property: after an lr drop to 0, the
+        // scaled variant stops moving entirely while unscaled keeps
+        // applying its buffered velocity.
+        let g = randvec(3, 16);
+        let mut w_s = randvec(4, 16);
+        let mut w_u = w_s.clone();
+        let cfg_s = LarsConfig { variant: LarsVariant::Scaled, ..Default::default() };
+        let cfg_u = LarsConfig { variant: LarsVariant::Unscaled, ..Default::default() };
+        let mut ss = LarsState::default();
+        let mut su = LarsState::default();
+        lars_step(&cfg_s, 1.0, &mut w_s, &g, &mut ss, false);
+        lars_step(&cfg_u, 1.0, &mut w_u, &g, &mut su, false);
+        let before_s = w_s.clone();
+        let before_u = w_u.clone();
+        lars_step(&cfg_s, 0.0, &mut w_s, &vec![0.0; 16], &mut ss, false);
+        lars_step(&cfg_u, 0.0, &mut w_u, &vec![0.0; 16], &mut su, false);
+        let moved_s: f32 = w_s.iter().zip(&before_s).map(|(a, b)| (a - b).abs()).sum();
+        let moved_u: f32 = w_u.iter().zip(&before_u).map(|(a, b)| (a - b).abs()).sum();
+        assert_eq!(moved_s, 0.0);
+        assert!(moved_u > 0.0);
+    }
+
+    #[test]
+    fn lars_skips_adaptation_for_1d() {
+        let cfg = LarsConfig::default();
+        let mut w = vec![100.0f32; 8]; // huge norm would inflate lam
+        let g = vec![1.0f32; 8];
+        let mut st = LarsState::default();
+        lars_step(&cfg, 0.1, &mut w, &g, &mut st, true);
+        // lam == 1 → v = lr * (g + beta*w) = 0.1 * (1 + 1e-4*100) = 0.101
+        assert!((st.v[0] - 0.101).abs() < 1e-6, "{}", st.v[0]);
+    }
+
+    #[test]
+    fn adam_matches_closed_form_first_step() {
+        let cfg = AdamConfig::default();
+        let mut w = vec![1.0f32];
+        let mut st = AdamState::default();
+        adam_step(&cfg, 0.001, 1, &mut w, &[0.5], &mut st);
+        // m=0.05, v=0.00025; m_hat=0.5, v_hat=0.25; step = lr*0.5/0.5 = lr
+        assert!((w[0] - (1.0 - 0.001)).abs() < 1e-6, "{}", w[0]);
+    }
+
+    #[test]
+    fn adam_step_size_bounded_by_lr() {
+        // |Δw| ⪅ lr for any gradient scale (Adam's invariance).
+        let cfg = AdamConfig::default();
+        for scale in [1e-3f32, 1.0, 1e3] {
+            let mut w = vec![0.0f32; 32];
+            let g: Vec<f32> = randvec(9, 32).iter().map(|x| x * scale).collect();
+            let mut st = AdamState::default();
+            adam_step(&cfg, 0.01, 1, &mut w, &g, &mut st);
+            for &x in &w {
+                assert!(x.abs() <= 0.0101, "scale {scale}: step {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn sgd_momentum_accumulates() {
+        let mut w = vec![0.0f32];
+        let mut v = vec![];
+        sgd_momentum_step(0.1, 0.9, &mut w, &[1.0], &mut v);
+        sgd_momentum_step(0.1, 0.9, &mut w, &[1.0], &mut v);
+        // v1=1, w=-0.1; v2=1.9, w=-0.29
+        assert!((w[0] + 0.29).abs() < 1e-6);
+    }
+}

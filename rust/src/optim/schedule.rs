@@ -1,0 +1,81 @@
+//! Learning-rate schedules (paper Table 1: base LR + warmup epochs are the
+//! tuned hyper-parameters; MLPerf's ResNet-50 reference uses linear warmup
+//! followed by polynomial decay).
+
+/// Linear warmup to `base_lr` over `warmup_epochs`, then polynomial decay
+/// to ~0 at `train_epochs` (power 2, the MLPerf ResNet-50 reference shape).
+#[derive(Clone, Copy, Debug)]
+pub struct PolySchedule {
+    pub base_lr: f32,
+    pub warmup_epochs: f32,
+    pub train_epochs: f32,
+    pub power: f32,
+    pub end_lr: f32,
+}
+
+impl PolySchedule {
+    pub fn mlperf_resnet(base_lr: f32, warmup_epochs: f32, train_epochs: f32) -> PolySchedule {
+        PolySchedule { base_lr, warmup_epochs, train_epochs, power: 2.0, end_lr: 1e-4 }
+    }
+
+    pub fn lr_at(&self, epoch: f32) -> f32 {
+        if epoch < self.warmup_epochs {
+            return self.base_lr * (epoch / self.warmup_epochs).max(0.0);
+        }
+        let span = (self.train_epochs - self.warmup_epochs).max(1e-6);
+        let frac = ((epoch - self.warmup_epochs) / span).clamp(0.0, 1.0);
+        self.end_lr + (self.base_lr - self.end_lr) * (1.0 - frac).powf(self.power)
+    }
+}
+
+/// Inverse-sqrt with warmup (Transformer / Adam; the paper tunes warmup
+/// steps and a lower peak LR for large-batch convergence).
+#[derive(Clone, Copy, Debug)]
+pub struct NoamSchedule {
+    pub peak_lr: f32,
+    pub warmup_steps: f32,
+}
+
+impl NoamSchedule {
+    pub fn lr_at(&self, step: u64) -> f32 {
+        let s = (step.max(1)) as f32;
+        let w = self.warmup_steps.max(1.0);
+        self.peak_lr * (s / w).min((w / s).sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poly_warmup_is_linear() {
+        let s = PolySchedule::mlperf_resnet(31.2, 25.0, 72.0);
+        assert_eq!(s.lr_at(0.0), 0.0);
+        assert!((s.lr_at(12.5) - 15.6).abs() < 1e-4);
+        assert!((s.lr_at(25.0) - 31.2).abs() < 1e-4);
+    }
+
+    #[test]
+    fn poly_decays_to_end_lr() {
+        let s = PolySchedule::mlperf_resnet(31.2, 25.0, 72.0);
+        assert!(s.lr_at(72.0) <= 1e-3);
+        assert!(s.lr_at(100.0) <= 1e-3); // clamped past the end
+        // Monotone decreasing after warmup.
+        let mut prev = f32::INFINITY;
+        for e in 25..=72 {
+            let lr = s.lr_at(e as f32);
+            assert!(lr <= prev);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn noam_peaks_at_warmup() {
+        let s = NoamSchedule { peak_lr: 2e-3, warmup_steps: 100.0 };
+        assert!(s.lr_at(100) >= s.lr_at(50));
+        assert!(s.lr_at(100) >= s.lr_at(400));
+        assert!((s.lr_at(100) - 2e-3).abs() < 1e-9);
+        assert!((s.lr_at(400) - 1e-3).abs() < 1e-9); // 1/sqrt(4)
+    }
+}

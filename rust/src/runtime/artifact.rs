@@ -1,0 +1,273 @@
+//! Artifact manifest: the contract between the AOT pipeline
+//! (`python/compile/aot.py`) and the Rust runtime. Parsed from
+//! `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Dtypes the AOT pipeline emits.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+}
+
+/// One input or output of an artifact.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled HLO module.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub meta: BTreeMap<String, String>,
+}
+
+/// One named parameter tensor of a model.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    /// model name → ordered parameter specs.
+    pub params: BTreeMap<String, Vec<ParamSpec>>,
+    /// model name → config key/values (as strings).
+    pub configs: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+fn io_from_json(j: &Json) -> Result<IoSpec> {
+    let name = j.get("name").and_then(Json::as_str).ok_or_else(|| anyhow!("io missing name"))?;
+    let dtype = Dtype::parse(
+        j.get("dtype").and_then(Json::as_str).ok_or_else(|| anyhow!("io missing dtype"))?,
+    )?;
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("io missing shape"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(IoSpec { name: name.to_string(), dtype, shape })
+}
+
+fn json_scalar_to_string(j: &Json) -> String {
+    match j {
+        Json::Str(s) => s.clone(),
+        other => other.dump(),
+    }
+}
+
+impl Manifest {
+    /// Load from a directory containing manifest.json.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+
+        let mut artifacts = BTreeMap::new();
+        for a in j.get("artifacts").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing file"))?
+                .to_string();
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(io_from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(io_from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let mut meta = BTreeMap::new();
+            if let Some(Json::Obj(m)) = a.get("meta") {
+                for (k, v) in m {
+                    meta.insert(k.clone(), json_scalar_to_string(v));
+                }
+            }
+            artifacts.insert(name.clone(), ArtifactMeta { name, file, inputs, outputs, meta });
+        }
+
+        let mut params = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("params") {
+            for (model, list) in m {
+                let specs = list
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|p| {
+                        let name = p
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("param missing name"))?
+                            .to_string();
+                        let shape = p
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow!("param missing shape"))?
+                            .iter()
+                            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .collect::<Result<Vec<_>>>()?;
+                        Ok(ParamSpec { name, shape })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                params.insert(model.clone(), specs);
+            }
+        }
+
+        let mut configs = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("configs") {
+            for (model, cfg) in m {
+                let mut entries = BTreeMap::new();
+                if let Json::Obj(c) = cfg {
+                    for (k, v) in c {
+                        entries.insert(k.clone(), json_scalar_to_string(v));
+                    }
+                }
+                configs.insert(model.clone(), entries);
+            }
+        }
+
+        Ok(Manifest { dir, artifacts, params, configs })
+    }
+
+    /// Default artifacts directory: `$ARTIFACTS_DIR` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("ARTIFACTS_DIR").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn model_params(&self, model: &str) -> Result<&[ParamSpec]> {
+        self.params
+            .get(model)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow!("model {model:?} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Total parameter count of a model.
+    pub fn total_params(&self, model: &str) -> Result<usize> {
+        Ok(self.model_params(model)?.iter().map(ParamSpec::numel).sum())
+    }
+
+    pub fn config_usize(&self, model: &str, key: &str) -> Result<usize> {
+        self.configs
+            .get(model)
+            .and_then(|c| c.get(key))
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| anyhow!("config {model}.{key} missing"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [
+                {"name": "m_train", "file": "m.hlo.txt",
+                 "inputs": [{"name": "w", "dtype": "f32", "shape": [4, 2]},
+                            {"name": "t", "dtype": "i32", "shape": [8]}],
+                 "outputs": [{"name": "loss", "dtype": "f32", "shape": []}],
+                 "meta": {"kind": "train_step", "model": "m"}}],
+               "params": {"m": [{"name": "w", "shape": [4, 2]}]},
+               "configs": {"m": {"batch_per_core": 8, "name": "m"}}}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("tpt_manifest_test");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.artifact("m_train").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dtype, Dtype::F32);
+        assert_eq!(a.inputs[0].numel(), 8);
+        assert_eq!(a.inputs[1].dtype, Dtype::I32);
+        assert_eq!(a.meta.get("kind").unwrap(), "train_step");
+        assert_eq!(m.total_params("m").unwrap(), 8);
+        assert_eq!(m.config_usize("m", "batch_per_core").unwrap(), 8);
+        assert!(m.hlo_path("m_train").unwrap().ends_with("m.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let dir = std::env::temp_dir().join("tpt_manifest_test2");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.model_params("nope").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

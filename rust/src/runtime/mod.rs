@@ -1,0 +1,228 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute from
+//! the training hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format (the
+//! bundled xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos).
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so each data-parallel worker
+//! thread constructs its own `Runtime` — mirroring how each TPU core owns
+//! its own executable image. Executables are cached per runtime.
+
+pub mod artifact;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+pub use artifact::{ArtifactMeta, Dtype, IoSpec, Manifest, ParamSpec};
+
+/// A host-side tensor (f32) with shape — the currency between the
+/// coordinator (collectives, optimizers) and the PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(x: f32) -> HostTensor {
+        HostTensor { shape: vec![], data: vec![x] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Per-thread PJRT runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Rc<Manifest>,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative PJRT execute time (perf accounting).
+    pub execute_seconds: RefCell<f64>,
+    pub executions: RefCell<u64>,
+}
+
+impl Runtime {
+    /// Create a runtime over the default artifacts directory.
+    pub fn create() -> Result<Runtime> {
+        Runtime::with_dir(Manifest::default_dir())
+    }
+
+    pub fn with_dir(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Rc::new(Manifest::load(dir)?);
+        Runtime::with_manifest(manifest)
+    }
+
+    pub fn with_manifest(manifest: Rc<Manifest>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            execute_seconds: RefCell::new(0.0),
+            executions: RefCell::new(0),
+        })
+    }
+
+    /// Compile (or fetch cached) an artifact.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client.compile(&comp).with_context(|| format!("compiling {name}"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on host tensors, validating shapes against the
+    /// manifest. `int_inputs` supplies values for i32 inputs (consumed in
+    /// manifest order); f32 inputs come from `inputs` (same order).
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: &[&HostTensor],
+        int_inputs: &[&[i32]],
+    ) -> Result<Vec<HostTensor>> {
+        let f32_slices: Vec<&[f32]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+        self.execute_raw(name, &f32_slices, int_inputs)
+    }
+
+    /// Zero-copy variant: f32 inputs as plain slices (shapes come from the
+    /// manifest, which is the source of truth anyway). This is the hot-path
+    /// entry the trainer uses — no per-step tensor wrapping.
+    pub fn execute_raw(
+        &self,
+        name: &str,
+        inputs: &[&[f32]],
+        int_inputs: &[&[i32]],
+    ) -> Result<Vec<HostTensor>> {
+        let meta = self.manifest.artifact(name)?.clone();
+        let exe = self.load(name)?;
+
+        let mut literals = Vec::with_capacity(meta.inputs.len());
+        let mut fi = 0;
+        let mut ii = 0;
+        for spec in &meta.inputs {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            match spec.dtype {
+                Dtype::F32 => {
+                    let t = inputs.get(fi).with_context(|| {
+                        format!("{name}: missing f32 input {} ({})", fi, spec.name)
+                    })?;
+                    if t.len() != spec.numel() {
+                        bail!(
+                            "{name}: input {} ({}) has {} elements, expected {:?}",
+                            fi, spec.name, t.len(), spec.shape
+                        );
+                    }
+                    literals.push(lit_f32(t, &dims)?);
+                    fi += 1;
+                }
+                Dtype::I32 => {
+                    let v = int_inputs.get(ii).with_context(|| {
+                        format!("{name}: missing i32 input {} ({})", ii, spec.name)
+                    })?;
+                    if v.len() != spec.numel() {
+                        bail!(
+                            "{name}: i32 input {} ({}) has {} elements, expected {:?}",
+                            ii, spec.name, v.len(), spec.shape
+                        );
+                    }
+                    literals.push(lit_i32(v, &dims)?);
+                    ii += 1;
+                }
+            }
+        }
+        if fi != inputs.len() || ii != int_inputs.len() {
+            bail!("{name}: extra inputs supplied (f32 {fi}/{}, i32 {ii}/{})",
+                  inputs.len(), int_inputs.len());
+        }
+
+        let t0 = std::time::Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let out = result[0][0].to_literal_sync()?;
+        *self.execute_seconds.borrow_mut() += t0.elapsed().as_secs_f64();
+        *self.executions.borrow_mut() += 1;
+
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let elems = out.to_tuple()?;
+        if elems.len() != meta.outputs.len() {
+            bail!("{name}: got {} outputs, manifest says {}", elems.len(), meta.outputs.len());
+        }
+        elems
+            .into_iter()
+            .zip(&meta.outputs)
+            .map(|(lit, spec)| {
+                let data: Vec<f32> = match spec.dtype {
+                    Dtype::F32 => lit.to_vec::<f32>()?,
+                    Dtype::I32 => lit.to_vec::<i32>()?.into_iter().map(|x| x as f32).collect(),
+                };
+                Ok(HostTensor::new(spec.shape.clone(), data))
+            })
+            .collect()
+    }
+
+    /// Warm the cache for a set of artifacts (init phase; excluded from the
+    /// MLPerf clock).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.load(n)?;
+        }
+        Ok(())
+    }
+}
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Shape/plumbing tests that don't need artifacts.
+    #[test]
+    fn host_tensor_shape_checked() {
+        let t = HostTensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.numel(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_bad_shape_panics() {
+        HostTensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = HostTensor::scalar(4.0);
+        assert_eq!(t.shape, Vec::<usize>::new());
+        assert_eq!(t.data, vec![4.0]);
+    }
+}

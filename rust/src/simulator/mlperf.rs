@@ -1,0 +1,303 @@
+//! End-to-end time-to-train simulation (paper Fig. 9 "MLPerf-0.6 benchmark
+//! seconds" + the §2 optimization ablations).
+//!
+//! benchmark_seconds = train_steps x step_time + evals x eval_time + infra,
+//! with every §2 technique toggleable so the benches can ablate:
+//! * 2-D vs 1-D gradient summation, pipelined vs serial gathers,
+//! * weight-update sharding on/off,
+//! * distributed in-loop eval vs side-card eval,
+//! * spatial partitioning (per the model's layout policy).
+
+use crate::devicesim::{step_model, weight_update_cost, Device, TPU_V3};
+use crate::models::registry::{Layout, ModelProfile};
+use crate::netsim::{ArAlgo, CostModel, GradSumModel, NetParams, Torus};
+use crate::spatial::plan::{maskrcnn_stage1_layers, plan, ssd_layers};
+
+/// Optimization toggles (all true = the Google submission config).
+#[derive(Clone, Copy, Debug)]
+pub struct SimOptions {
+    pub gradsum_2d: bool,
+    pub gradsum_pipelined: bool,
+    pub weight_update_sharding: bool,
+    pub distributed_eval: bool,
+    pub spatial_partitioning: bool,
+    /// Override the convergence-curve epochs (Table 1 optimizer study).
+    pub epochs_override: Option<f64>,
+}
+
+impl Default for SimOptions {
+    fn default() -> SimOptions {
+        SimOptions {
+            gradsum_2d: true,
+            gradsum_pipelined: true,
+            weight_update_sharding: true,
+            distributed_eval: true,
+            spatial_partitioning: true,
+            epochs_override: None,
+        }
+    }
+}
+
+/// Simulation output for one (model, core-count) point.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub model: &'static str,
+    pub cores: usize,
+    pub layout: Layout,
+    pub epochs: f64,
+    pub steps: f64,
+    pub step_seconds: f64,
+    pub compute_seconds: f64,
+    pub gradsum_seconds: f64,
+    pub update_seconds: f64,
+    pub eval_seconds: f64,
+    pub infra_seconds: f64,
+    /// The headline: MLPerf benchmark seconds (init excluded).
+    pub benchmark_seconds: f64,
+    pub converged: bool,
+}
+
+/// Fixed infrastructure overhead per eval in the in-loop scheme (loop
+/// switch) and per eval in the side-card scheme (checkpoint transfer) —
+/// the "infrastructure overheads [that] dominate" (§3 Transformer).
+const INLOOP_EVAL_OVERHEAD_S: f64 = 0.35;
+const SIDECARD_EVAL_OVERHEAD_S: f64 = 6.0;
+/// Cores of the fixed side-card eval slice in the baseline scheme.
+const SIDECARD_CORES: f64 = 16.0;
+
+/// Spatial-partitioning speedup for a model at partition degree mp.
+fn spatial_speedup(model: &ModelProfile, mp: usize) -> f64 {
+    if mp <= 1 {
+        return 1.0;
+    }
+    let dev = TPU_V3;
+    // Halo cost uses a small local neighborhood model.
+    let net = CostModel::new(Torus::new(2, 2), NetParams::default());
+    let layers = match model.name {
+        "ssd" => ssd_layers(),
+        "maskrcnn" => maskrcnn_stage1_layers(),
+        _ => return 1.0,
+    };
+    plan(&layers, mp, &dev, &net).speedup()
+}
+
+/// Simulate one model at `cores` TPU-v3 cores (2 cores/chip).
+pub fn simulate(model: &ModelProfile, cores: usize, opts: &SimOptions) -> SimResult {
+    let chips = (cores / 2).max(1);
+    let net = CostModel::new(Torus::for_chips(chips.next_power_of_two()), NetParams::default());
+    let dev: Device = TPU_V3;
+
+    let mut layout = model.layout(cores);
+    if !opts.spatial_partitioning {
+        // Without MP the model cannot exceed its batch-limited replica
+        // count; surplus cores idle.
+        let replicas = (cores).min(model.max_batch);
+        layout = Layout { cores, mp: 1, replicas, global_batch: layout.global_batch };
+    }
+
+    let epochs = opts
+        .epochs_override
+        .or_else(|| model.epochs.epochs(layout.global_batch))
+        .unwrap_or(f64::INFINITY);
+    let converged = epochs.is_finite();
+    let steps = (model.train_examples as f64 / layout.global_batch as f64).ceil() * epochs;
+
+    // ---- step time -------------------------------------------------------
+    let examples_per_replica = layout.per_replica_batch();
+    let mp_speed = if opts.spatial_partitioning { spatial_speedup(model, layout.mp) } else { 1.0 };
+    let base = step_model(
+        &dev,
+        &net,
+        model.fwd_flops_per_example,
+        model.hbm_bytes_per_example,
+        examples_per_replica,
+        model.util_units_per_example,
+        model.params,
+        model.optimizer.bytes_per_param(),
+        false,
+    );
+    // Model parallelism accelerates the per-replica compute.
+    let compute = base.compute / mp_speed;
+
+    // Gradient summation: schedule choice.
+    let algo = if opts.gradsum_2d { ArAlgo::Torus2D } else { ArAlgo::Ring1D };
+    let gs = GradSumModel { cost: &net, algo };
+    let tensors = model.gradient_bytes();
+    let gradsum =
+        if opts.gradsum_pipelined { gs.pipelined(&tensors) } else { gs.serial(&tensors) };
+
+    // Weight update: replicated vs sharded.
+    let uc = weight_update_cost(&dev, &net, model.params, model.optimizer.bytes_per_param(),
+                                cores);
+    let update = if opts.weight_update_sharding { uc.sharded.min(uc.replicated) }
+                 else { uc.replicated };
+
+    let step_seconds = compute + gradsum + update;
+    let train_seconds = steps * step_seconds;
+
+    // ---- evaluation ------------------------------------------------------
+    let n_evals = (epochs / model.eval_interval_epochs).ceil().max(1.0);
+    let eval_flops = model.eval_examples as f64 * model.fwd_flops_per_example;
+    let eval_one = if opts.distributed_eval {
+        // All cores share the eval work (padding overhead ≤ one stride).
+        eval_flops / (cores as f64 * dev.peak_flops * dev.mxu_efficiency)
+            + INLOOP_EVAL_OVERHEAD_S
+    } else {
+        // Side-card: fixed small slice + checkpoint shipping, serialized
+        // into the convergence path (the Amdahl bottleneck of §2).
+        eval_flops / (SIDECARD_CORES * dev.peak_flops * dev.mxu_efficiency)
+            + SIDECARD_EVAL_OVERHEAD_S
+    };
+    let eval_seconds = if converged { n_evals * eval_one } else { 0.0 };
+
+    // Fixed per-run infrastructure inside the measured window.
+    let infra_seconds = 3.0;
+
+    let benchmark_seconds = if converged {
+        train_seconds + eval_seconds + infra_seconds
+    } else {
+        f64::INFINITY
+    };
+
+    SimResult {
+        model: model.name,
+        cores,
+        layout,
+        epochs,
+        steps,
+        step_seconds,
+        compute_seconds: compute,
+        gradsum_seconds: gradsum,
+        update_seconds: update,
+        eval_seconds,
+        infra_seconds,
+        benchmark_seconds,
+        converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::registry::all_models;
+
+    fn m(name: &str) -> ModelProfile {
+        crate::models::registry::model(name).unwrap()
+    }
+
+    #[test]
+    fn resnet_pod_benchmark_seconds_order_of_magnitude() {
+        // Paper Table 1 / Fig. 9: ResNet-50 at 2048 cores ≈ 67-77 s.
+        let r = simulate(&m("resnet50"), 2048, &SimOptions::default());
+        assert!(r.converged);
+        assert!(
+            (30.0..200.0).contains(&r.benchmark_seconds),
+            "resnet50@2048: {:.1}s",
+            r.benchmark_seconds
+        );
+    }
+
+    #[test]
+    fn all_optimizations_help_at_pod_scale() {
+        for model in all_models() {
+            let cores = model.max_useful_cores().min(2048);
+            let full = simulate(&model, cores, &SimOptions::default());
+            if !full.converged {
+                continue;
+            }
+            for (label, opts) in [
+                ("serial gradsum",
+                 SimOptions { gradsum_pipelined: false, ..Default::default() }),
+                ("1-D gradsum", SimOptions { gradsum_2d: false, ..Default::default() }),
+                ("no WUS",
+                 SimOptions { weight_update_sharding: false, ..Default::default() }),
+                ("side-card eval",
+                 SimOptions { distributed_eval: false, ..Default::default() }),
+            ] {
+                let ablated = simulate(&model, cores, &opts);
+                assert!(
+                    ablated.benchmark_seconds >= full.benchmark_seconds - 1e-9,
+                    "{} @ {cores}: {label} should not be faster ({} vs {})",
+                    model.name,
+                    ablated.benchmark_seconds,
+                    full.benchmark_seconds
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn strong_scaling_monotone_until_model_limit() {
+        // More cores → less time (the paper's headline), within each
+        // model's useful range.
+        for model in all_models() {
+            let mut prev = f64::INFINITY;
+            for cores in [64, 128, 256, 512, 1024, 2048] {
+                if cores > model.max_useful_cores() {
+                    break;
+                }
+                let r = simulate(&model, cores, &SimOptions::default());
+                if !r.converged {
+                    continue;
+                }
+                assert!(
+                    r.benchmark_seconds < prev * 1.05,
+                    "{} @ {cores}: {:.1}s vs prev {:.1}s",
+                    model.name,
+                    r.benchmark_seconds,
+                    prev
+                );
+                prev = r.benchmark_seconds;
+            }
+        }
+    }
+
+    #[test]
+    fn scaling_is_sublinear_at_the_far_end() {
+        // Fig. 9's diminishing returns: 2x cores buys <2x speedup at pod
+        // scale (epochs grow with batch + fixed overheads).
+        let a = simulate(&m("resnet50"), 1024, &SimOptions::default());
+        let b = simulate(&m("resnet50"), 2048, &SimOptions::default());
+        let speedup = a.benchmark_seconds / b.benchmark_seconds;
+        assert!(speedup > 1.0 && speedup < 2.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn maskrcnn_dnf_past_its_batch_wall_without_mp() {
+        let model = m("maskrcnn");
+        let no_mp = SimOptions { spatial_partitioning: false, ..Default::default() };
+        let with_mp = simulate(&model, 256, &SimOptions::default());
+        let without = simulate(&model, 256, &no_mp);
+        assert!(with_mp.converged);
+        // Without MP the extra cores idle: slower than with MP.
+        assert!(without.benchmark_seconds > with_mp.benchmark_seconds);
+    }
+
+    #[test]
+    fn transformer_eval_overhead_dominates_at_scale_without_distribution() {
+        // §3: "the eval and infrastructure overheads dominate the
+        // end-to-end convergence time" — visible as the side-card ablation
+        // hurting Transformer badly at pod scale.
+        let model = m("transformer");
+        let full = simulate(&model, 2048, &SimOptions::default());
+        let side = simulate(
+            &model,
+            2048,
+            &SimOptions { distributed_eval: false, ..Default::default() },
+        );
+        let penalty = side.benchmark_seconds / full.benchmark_seconds;
+        assert!(penalty > 1.10, "side-card eval penalty {penalty}");
+    }
+
+    #[test]
+    fn update_share_shrinks_with_wus() {
+        let model = m("transformer");
+        let full = simulate(&model, 2048, &SimOptions::default());
+        let no_wus = simulate(
+            &model,
+            2048,
+            &SimOptions { weight_update_sharding: false, ..Default::default() },
+        );
+        assert!(full.update_seconds < no_wus.update_seconds * 0.6);
+    }
+}

@@ -1,0 +1,8 @@
+//! MLPerf-0.6 pod simulator: combines the model inventories, the TPU-v3
+//! roofline, the torus collective model and the convergence curves into
+//! end-to-end time-to-train estimates — the generator behind Figs. 7-9 and
+//! Table 1.
+
+pub mod mlperf;
+
+pub use mlperf::{simulate, SimOptions, SimResult};

@@ -1,0 +1,9 @@
+//! Spatial partitioning (paper §2 Fig. 3, §3): planner with halo/imbalance
+//! cost model (reproduces Fig. 10) and a real stripe-partitioned conv
+//! executor validated against the unpartitioned computation.
+
+pub mod exec;
+pub mod plan;
+
+pub use exec::{conv2d, conv2d_striped, conv2d_striped_gather, stripe_rows};
+pub use plan::{maskrcnn_stage1_layers, plan, ssd_layers, ConvLayer, SpatialPlan};

@@ -1,0 +1,219 @@
+//! Spatial-partitioning planner (paper §2 Fig. 3, §3 SSD/Mask-RCNN).
+//!
+//! Partitions a conv stack's spatial (height) dimension over `k` cores and
+//! models the resulting speedup, accounting for the three costs the paper
+//! names for SSD:
+//!   1. halo-exchange communication per partitioned layer,
+//!   2. all-reduce calls for distributed batch norm,
+//!   3. load imbalance from ops that stay on spatial worker 0,
+//! plus the parallelism floor: layers whose spatial extent is smaller than
+//! the partition count cannot be split ("relatively small spatial
+//! dimensions ... limited parallelism from spatial partitioning of the
+//! deeper layers").
+
+use crate::devicesim::Device;
+use crate::netsim::CostModel;
+
+/// One convolutional layer's shape (square spatial).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvLayer {
+    pub spatial: usize,   // H = W
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub kernel: usize,    // K (square)
+    pub stride: usize,
+}
+
+impl ConvLayer {
+    /// Forward FLOPs for one example.
+    pub fn flops(&self) -> f64 {
+        let out_sp = (self.spatial / self.stride).max(1) as f64;
+        2.0 * out_sp * out_sp * self.in_ch as f64 * self.out_ch as f64
+            * (self.kernel * self.kernel) as f64
+    }
+
+    /// Halo rows each neighbor needs for this layer (K/2 each side).
+    pub fn halo_rows(&self) -> usize {
+        self.kernel / 2
+    }
+
+    /// Bytes of one halo transfer (one side), bf16 activations.
+    pub fn halo_bytes(&self) -> f64 {
+        (self.halo_rows() * self.spatial * self.in_ch) as f64 * 2.0
+    }
+
+    /// Can this layer be split `k` ways along height?
+    pub fn splittable(&self, k: usize) -> bool {
+        self.spatial >= 2 * k
+    }
+}
+
+/// SSD300's conv stack, coarsely (spatial 300 → 1; the deeper layers are
+/// exactly the ones that stop being splittable).
+pub fn ssd_layers() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer { spatial: 300, in_ch: 3, out_ch: 64, kernel: 7, stride: 2 },
+        ConvLayer { spatial: 150, in_ch: 64, out_ch: 128, kernel: 3, stride: 2 },
+        ConvLayer { spatial: 75, in_ch: 128, out_ch: 256, kernel: 3, stride: 2 },
+        ConvLayer { spatial: 38, in_ch: 256, out_ch: 256, kernel: 3, stride: 1 },
+        ConvLayer { spatial: 38, in_ch: 256, out_ch: 512, kernel: 3, stride: 2 },
+        ConvLayer { spatial: 19, in_ch: 512, out_ch: 512, kernel: 3, stride: 1 },
+        ConvLayer { spatial: 19, in_ch: 512, out_ch: 256, kernel: 3, stride: 2 },
+        ConvLayer { spatial: 10, in_ch: 256, out_ch: 256, kernel: 3, stride: 2 },
+        ConvLayer { spatial: 5, in_ch: 256, out_ch: 256, kernel: 3, stride: 2 },
+        ConvLayer { spatial: 3, in_ch: 256, out_ch: 128, kernel: 3, stride: 2 },
+        ConvLayer { spatial: 1, in_ch: 128, out_ch: 128, kernel: 1, stride: 1 },
+    ]
+}
+
+/// Mask-RCNN stage-1 stack (ResNet-50 backbone @ 1024px, coarser).
+pub fn maskrcnn_stage1_layers() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer { spatial: 1024, in_ch: 3, out_ch: 64, kernel: 7, stride: 2 },
+        ConvLayer { spatial: 512, in_ch: 64, out_ch: 256, kernel: 3, stride: 2 },
+        ConvLayer { spatial: 256, in_ch: 256, out_ch: 512, kernel: 3, stride: 2 },
+        ConvLayer { spatial: 128, in_ch: 512, out_ch: 1024, kernel: 3, stride: 2 },
+        ConvLayer { spatial: 64, in_ch: 1024, out_ch: 2048, kernel: 3, stride: 2 },
+        ConvLayer { spatial: 32, in_ch: 2048, out_ch: 256, kernel: 3, stride: 1 },
+    ]
+}
+
+/// Plan + cost estimate for a `k`-way spatial partition.
+#[derive(Clone, Debug)]
+pub struct SpatialPlan {
+    pub k: usize,
+    /// Per-layer: was it partitioned?
+    pub split: Vec<bool>,
+    pub t_single: f64,
+    pub t_partitioned: f64,
+}
+
+impl SpatialPlan {
+    pub fn speedup(&self) -> f64 {
+        self.t_single / self.t_partitioned
+    }
+
+    pub fn efficiency(&self) -> f64 {
+        self.speedup() / self.k as f64
+    }
+}
+
+/// Fraction of per-layer work that is unsharded and lands on spatial
+/// worker 0 (the paper's "some TF operations are not sharded ... resulting
+/// in a load-imbalance").
+pub const UNSHARDED_FRACTION: f64 = 0.05;
+
+/// Per-layer distributed batch-norm all-reduce payload: 2 moments per
+/// channel, f32.
+fn bn_allreduce_bytes(l: &ConvLayer) -> f64 {
+    l.out_ch as f64 * 2.0 * 4.0
+}
+
+/// Plan a k-way spatial partition of `layers` and estimate the time of one
+/// example's forward+backward on the device model.
+pub fn plan(layers: &[ConvLayer], k: usize, dev: &Device, net: &CostModel) -> SpatialPlan {
+    assert!(k >= 1);
+    let mut t_single = 0.0;
+    let mut t_part = 0.0;
+    let mut split = Vec::with_capacity(layers.len());
+    for l in layers {
+        // fwd+bwd ≈ 3x fwd.
+        let t_layer = 3.0 * l.flops() / (dev.peak_flops * dev.mxu_efficiency);
+        t_single += t_layer;
+        if k == 1 {
+            split.push(false);
+            continue;
+        }
+        if l.splittable(k) {
+            split.push(true);
+            let sharded = t_layer * (1.0 - UNSHARDED_FRACTION) / k as f64
+                + t_layer * UNSHARDED_FRACTION; // worker-0 serial part
+            // Halo both directions, fwd and bwd; overlapping neighbors.
+            let halo = 2.0 * net.halo_exchange(l.halo_bytes(), 2);
+            // Distributed BN all-reduce across the k spatial workers.
+            let bn = net.all_gather(bn_allreduce_bytes(l)) * 2.0;
+            t_part += sharded + halo + bn;
+        } else {
+            split.push(false);
+            // Unsplittable layer runs replicated (no speedup).
+            t_part += t_layer;
+        }
+    }
+    if k == 1 {
+        t_part = t_single;
+    }
+    SpatialPlan { k, split, t_single, t_partitioned: t_part }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devicesim::TPU_V3;
+    use crate::netsim::{NetParams, Torus};
+
+    fn net() -> CostModel {
+        CostModel::new(Torus::new(2, 2), NetParams::default())
+    }
+
+    #[test]
+    fn ssd_4way_speedup_matches_paper() {
+        // Paper Fig. 10: "a speedup of 1.6x on 4 TPU accelerator cores
+        // with model-parallelism" for SSD.
+        let p = plan(&ssd_layers(), 4, &TPU_V3, &net());
+        let s = p.speedup();
+        assert!((1.4..1.9).contains(&s), "SSD 4-way speedup {s}");
+    }
+
+    #[test]
+    fn ssd_2way_more_efficient_than_4way() {
+        // Efficiency decays with k (halo + imbalance grow).
+        let p2 = plan(&ssd_layers(), 2, &TPU_V3, &net());
+        let p4 = plan(&ssd_layers(), 4, &TPU_V3, &net());
+        assert!(p2.efficiency() > p4.efficiency());
+        assert!(p2.speedup() > 1.0 && p4.speedup() > p2.speedup());
+    }
+
+    #[test]
+    fn deep_layers_not_split() {
+        // Paper: "The deeper layers of SSD have smaller spatial dimensions
+        // ... limited parallelism from spatial partitioning."
+        let p = plan(&ssd_layers(), 4, &TPU_V3, &net());
+        assert!(p.split[0], "300x300 layer must split");
+        assert!(!*p.split.last().unwrap(), "1x1 layer must not split");
+        let n_split = p.split.iter().filter(|&&s| s).count();
+        assert!(n_split < p.split.len(), "some layers must stay replicated");
+    }
+
+    #[test]
+    fn maskrcnn_partitions_better_than_ssd() {
+        // Mask-RCNN's 1024px images keep spatial dims large longer →
+        // spatial partitioning scales better (Fig. 10 shows Mask-RCNN
+        // gaining from mp too).
+        let ssd = plan(&ssd_layers(), 4, &TPU_V3, &net());
+        let mrcnn = plan(&maskrcnn_stage1_layers(), 4, &TPU_V3, &net());
+        assert!(mrcnn.speedup() > ssd.speedup());
+    }
+
+    #[test]
+    fn k1_is_identity() {
+        let p = plan(&ssd_layers(), 1, &TPU_V3, &net());
+        assert_eq!(p.speedup(), 1.0);
+    }
+
+    #[test]
+    fn speedup_never_exceeds_k() {
+        for k in [2, 4, 8] {
+            let p = plan(&ssd_layers(), k, &TPU_V3, &net());
+            assert!(p.speedup() <= k as f64 + 1e-9, "k={k}: {}", p.speedup());
+        }
+    }
+
+    #[test]
+    fn halo_bytes_scale_with_kernel() {
+        let l3 = ConvLayer { spatial: 64, in_ch: 32, out_ch: 32, kernel: 3, stride: 1 };
+        let l7 = ConvLayer { kernel: 7, ..l3 };
+        assert_eq!(l3.halo_rows(), 1);
+        assert_eq!(l7.halo_rows(), 3);
+        assert!(l7.halo_bytes() > l3.halo_bytes());
+    }
+}

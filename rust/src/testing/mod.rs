@@ -1,0 +1,226 @@
+//! Property-testing mini-framework with shrinking (no proptest crate in
+//! the offline build).
+//!
+//! `forall(cases, gen, prop)` runs `prop` on `cases` random inputs; on
+//! failure it greedily shrinks the input via the value's [`Shrink`] impl
+//! and panics with the minimal counterexample. The distributed-invariants
+//! suite (rust/tests/dist_invariants.rs) uses this for collective/sharding
+//! properties.
+
+use crate::util::rng::Rng;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate shrinks, in decreasing preference (empty = atomic).
+    fn shrinks(&self) -> Vec<Self>;
+}
+
+impl Shrink for usize {
+    fn shrinks(&self) -> Vec<usize> {
+        let mut v = Vec::new();
+        if *self > 0 {
+            v.push(self / 2);
+            v.push(self - 1);
+        }
+        v.dedup();
+        v
+    }
+}
+
+impl Shrink for u64 {
+    fn shrinks(&self) -> Vec<u64> {
+        let mut v = Vec::new();
+        if *self > 0 {
+            v.push(self / 2);
+            v.push(self - 1);
+        }
+        v.dedup();
+        v
+    }
+}
+
+impl Shrink for f32 {
+    fn shrinks(&self) -> Vec<f32> {
+        let mut v = Vec::new();
+        if *self != 0.0 {
+            v.push(0.0);
+            v.push(self / 2.0);
+            if self.fract() != 0.0 {
+                v.push(self.trunc());
+            }
+        }
+        v
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrinks(&self) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        let n = self.len();
+        if n == 0 {
+            return out;
+        }
+        // Halves first (fast length reduction)...
+        out.push(self[..n / 2].to_vec());
+        out.push(self[n / 2..].to_vec());
+        // ...then drop one element...
+        if n <= 8 {
+            for i in 0..n {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+        }
+        // ...then shrink one element.
+        for i in 0..n.min(4) {
+            for s in self[i].shrinks() {
+                let mut v = self.clone();
+                v[i] = s;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrinks(&self) -> Vec<(A, B)> {
+        let mut out: Vec<(A, B)> =
+            self.0.shrinks().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrinks().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Outcome of a property check.
+pub type PropResult = Result<(), String>;
+
+/// Run a property over random inputs; shrink + panic on failure.
+pub fn forall<T, G, P>(cases: usize, mut gen: G, mut prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    let seed = std::env::var("PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (minimal, min_msg) = shrink_loop(input, msg, &mut prop);
+            panic!(
+                "property failed (case {case}, seed {seed}):\n  minimal input: {minimal:?}\n  error: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink, P: FnMut(&T) -> PropResult>(
+    mut cur: T,
+    mut msg: String,
+    prop: &mut P,
+) -> (T, String) {
+    let mut budget = 2000;
+    'outer: loop {
+        for cand in cur.shrinks() {
+            budget -= 1;
+            if budget == 0 {
+                return (cur, msg);
+            }
+            if let Err(m) = prop(&cand) {
+                cur = cand;
+                msg = m;
+                continue 'outer;
+            }
+        }
+        return (cur, msg);
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            50,
+            |rng| rng.below(100) as usize,
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        // Property: all values < 10. Minimal counterexample is exactly 10.
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                200,
+                |rng| rng.below(1000) as usize,
+                |&x| {
+                    if x < 10 {
+                        Ok(())
+                    } else {
+                        Err(format!("{x} >= 10"))
+                    }
+                },
+            );
+        });
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("minimal input: 10"), "{msg}");
+    }
+
+    #[test]
+    fn vec_shrinking_reduces_length() {
+        // Property: no vector contains 7. Minimal counterexample: [7].
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                300,
+                |rng| (0..rng.below(20) as usize).map(|_| rng.below(10) as usize).collect::<Vec<_>>(),
+                |v| {
+                    if v.contains(&7) {
+                        Err("contains 7".into())
+                    } else {
+                        Ok(())
+                    }
+                },
+            );
+        });
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("minimal input: [7]"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_given_seed_env() {
+        // Same default seed → same generated sequence (documented contract).
+        let mut first = Vec::new();
+        forall(5, |rng| rng.next_u64(), |&x| {
+            first.push(x);
+            Ok(())
+        });
+        let mut second = Vec::new();
+        forall(5, |rng| rng.next_u64(), |&x| {
+            second.push(x);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

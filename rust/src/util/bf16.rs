@@ -1,0 +1,140 @@
+//! Software bfloat16 (paper §2: "We use mixed precision with the bfloat16
+//! precision in all our benchmark runs").
+//!
+//! bf16 is the top 16 bits of an IEEE-754 f32 (8-bit exponent, 7-bit
+//! mantissa). The conversion uses round-to-nearest-even, matching TPU
+//! hardware. Gradient *summation* follows the paper's rule: bf16 payloads on
+//! the wire, f32 accumulation ("all non-convolutional operations (e.g. ...
+//! gradient summation) use 32-bit floating point numbers" — we expose both a
+//! bf16-payload mode for wire-volume modelling and f32 accumulate for math).
+
+/// A bfloat16 value, stored as its raw 16-bit pattern.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+#[repr(transparent)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+
+    /// Convert from f32 with round-to-nearest-even (TPU semantics).
+    #[inline]
+    pub fn from_f32(x: f32) -> Bf16 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // Quiet the NaN, keep the payload's top bits.
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        // Round to nearest even on the truncated 16 bits.
+        let round_bit = 0x0000_8000u32;
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(round_bit - 1 + lsb);
+        Bf16((rounded >> 16) as u16)
+    }
+
+    /// Truncation conversion (no rounding) — what naive ports do; kept for
+    /// the precision-loss tests.
+    #[inline]
+    pub fn from_f32_truncate(x: f32) -> Bf16 {
+        Bf16((x.to_bits() >> 16) as u16)
+    }
+
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+/// Round-trip an f32 slice through bf16 in place (wire emulation).
+pub fn round_slice_bf16(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = Bf16::from_f32(*x).to_f32();
+    }
+}
+
+/// Pack an f32 slice into bf16 wire format (2 bytes/element).
+pub fn pack_bf16(xs: &[f32]) -> Vec<Bf16> {
+    xs.iter().map(|&x| Bf16::from_f32(x)).collect()
+}
+
+/// Unpack bf16 wire data, accumulating into an f32 buffer
+/// (`acc += unpacked`) — the paper's f32-accumulate summation rule.
+pub fn accumulate_bf16(acc: &mut [f32], wire: &[Bf16]) {
+    assert_eq!(acc.len(), wire.len());
+    for (a, w) in acc.iter_mut().zip(wire) {
+        *a += w.to_f32();
+    }
+}
+
+/// Max relative error introduced by one bf16 rounding (2^-8 mantissa ulp).
+pub const BF16_MAX_REL_ERR: f32 = 1.0 / 256.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_round_trip() {
+        for x in [0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 1024.0, f32::INFINITY] {
+            assert_eq!(Bf16::from_f32(x).to_f32(), x);
+        }
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+
+    #[test]
+    fn rounding_error_bounded() {
+        let mut worst = 0.0f32;
+        for i in 0..10_000 {
+            let x = (i as f32 - 5000.0) * 0.001_237 + 0.000_413;
+            if x == 0.0 {
+                continue;
+            }
+            let rel = ((Bf16::from_f32(x).to_f32() - x) / x).abs();
+            worst = worst.max(rel);
+        }
+        assert!(worst <= BF16_MAX_REL_ERR, "worst={worst}");
+    }
+
+    #[test]
+    fn round_nearest_even_beats_truncation() {
+        // Statistical check: RNE has ~zero mean error; truncation biases
+        // toward zero magnitude.
+        let mut sum_rne = 0.0f64;
+        let mut sum_trunc = 0.0f64;
+        for i in 1..20_000 {
+            let x = i as f32 * 0.000_777 + 1.0;
+            sum_rne += (Bf16::from_f32(x).to_f32() - x) as f64;
+            sum_trunc += (Bf16::from_f32_truncate(x).to_f32() - x) as f64;
+        }
+        assert!(sum_rne.abs() < sum_trunc.abs() / 10.0,
+                "rne={sum_rne} trunc={sum_trunc}");
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        // 1.0 + 2^-8 is exactly halfway between two bf16 values; RNE picks
+        // the even mantissa (which here is 1.0).
+        let x = f32::from_bits(0x3f80_8000);
+        assert_eq!(Bf16::from_f32(x).to_f32(), 1.0);
+        // While anything above the tie rounds up.
+        let y = f32::from_bits(0x3f80_8001);
+        assert!(Bf16::from_f32(y).to_f32() > 1.0);
+    }
+
+    #[test]
+    fn accumulate_in_f32_is_exact_for_wire_values() {
+        let xs = vec![1.5f32, -2.25, 0.125];
+        let wire = pack_bf16(&xs);
+        let mut acc = vec![10.0f32; 3];
+        accumulate_bf16(&mut acc, &wire);
+        assert_eq!(acc, vec![11.5, 7.75, 10.125]);
+    }
+
+    #[test]
+    fn wire_is_half_the_bytes() {
+        assert_eq!(std::mem::size_of::<Bf16>(), 2);
+    }
+}

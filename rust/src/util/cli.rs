@@ -1,0 +1,190 @@
+//! Tiny declarative CLI argument parser (no clap in the offline build).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional args
+//! and subcommands; generates usage text. The launcher (`main.rs`) and every
+//! example binary share this.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<ArgSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Cli {
+        Cli { name, about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Cli {
+        self.specs.push(ArgSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Cli {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let d = spec
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<24} {}{}\n", spec.name, spec.help, d));
+        }
+        s
+    }
+
+    /// Parse a raw token list (without argv[0]).
+    pub fn parse_tokens(&self, tokens: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = tokens.iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag, takes no value"));
+                    }
+                    args.flags.push(key.to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| format!("--{key} requires a value"))?,
+                    };
+                    args.values.insert(key.to_string(), val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment; prints usage and exits on error.
+    pub fn parse(&self) -> Args {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_tokens(&tokens) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("test", "t")
+            .opt("cores", "8", "core count")
+            .opt("lr", "0.1", "learning rate")
+            .flag("verbose", "chatty")
+    }
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse_tokens(&[]).unwrap();
+        assert_eq!(a.get_usize("cores", 0), 8);
+        assert_eq!(a.get_f64("lr", 0.0), 0.1);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cli().parse_tokens(&toks(&["--cores", "16", "--lr=0.5"])).unwrap();
+        assert_eq!(a.get_usize("cores", 0), 16);
+        assert_eq!(a.get_f64("lr", 0.0), 0.5);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = cli().parse_tokens(&toks(&["train", "--verbose", "extra"])).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["train", "extra"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cli().parse_tokens(&toks(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cli().parse_tokens(&toks(&["--cores"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cli().parse_tokens(&toks(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cli().usage();
+        assert!(u.contains("--cores") && u.contains("default: 8"));
+    }
+}

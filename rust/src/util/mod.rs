@@ -1,0 +1,11 @@
+//! Shared substrate utilities: PRNG, JSON, bfloat16, CLI parsing, timing.
+//!
+//! Everything here is written in-repo because the offline build environment
+//! only ships the `xla` crate closure (see DESIGN.md "Offline-dependency
+//! note").
+
+pub mod bf16;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,280 @@
+//! Property-based invariants of the distributed substrates, driven by the
+//! in-repo shrinking framework (`tpu_pod_train::testing`).
+//!
+//! These are the "it must hold for every shape" contracts: collectives
+//! compute exact sums for any world size and payload, sharding plans
+//! partition exactly, the eval sharder covers each example once, packers
+//! round-trip, bf16 error stays bounded.
+
+use tpu_pod_train::collectives::{
+    chunk_range, gradsum_pipelined, gradsum_serial, ring_all_reduce, FlatView, Placement,
+};
+use tpu_pod_train::data::bucket::{batch_bucketized, batch_sequential, total_waste};
+use tpu_pod_train::data::synthetic::TranslationTask;
+use tpu_pod_train::evaluation::EvalSharding;
+use tpu_pod_train::fabric::run_spmd;
+use tpu_pod_train::testing::forall;
+use tpu_pod_train::util::bf16::{Bf16, BF16_MAX_REL_ERR};
+use tpu_pod_train::util::rng::Rng;
+use tpu_pod_train::wus::ShardPlan;
+
+#[test]
+fn prop_chunk_ranges_partition_exactly() {
+    forall(
+        300,
+        |rng| (rng.below(10_000) as usize, rng.below(64) as usize + 1),
+        |&(len, n)| {
+            let mut covered = 0;
+            for c in 0..n {
+                let r = chunk_range(len, n, c);
+                if r.start != covered {
+                    return Err(format!("gap at chunk {c}"));
+                }
+                covered = r.end;
+            }
+            if covered != len {
+                return Err(format!("covered {covered} != len {len}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ring_all_reduce_exact_sums() {
+    forall(
+        25,
+        |rng| {
+            let world = 1usize << rng.below(4); // 1..8
+            let len = rng.below(200) as usize + 1;
+            (world, len)
+        },
+        |&(world, len)| {
+            let out = run_spmd(world, |ep| {
+                let group: Vec<usize> = (0..world).collect();
+                let mut data: Vec<f32> =
+                    (0..len).map(|i| ((ep.rank * 13 + i) % 7) as f32).collect();
+                ring_all_reduce(ep, &group, &mut data);
+                data
+            });
+            for i in 0..len {
+                let expect: f32 = (0..world).map(|r| ((r * 13 + i) % 7) as f32).sum();
+                for (r, row) in out.iter().enumerate() {
+                    if (row[i] - expect).abs() > 1e-4 {
+                        return Err(format!("rank {r} elt {i}: {} != {expect}", row[i]));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gradsum_modes_agree_and_sum() {
+    forall(
+        15,
+        |rng| {
+            let world = 1usize << (rng.below(3) + 1); // 2,4,8
+            let ntensors = rng.below(8) as usize + 1;
+            let sizes: Vec<usize> =
+                (0..ntensors).map(|_| rng.below(40) as usize + 1).collect();
+            let quantum = rng.below(64) as usize + 1;
+            (world, (sizes, quantum))
+        },
+        |&(world, (ref sizes, quantum))| {
+            let sizes_in = sizes.clone();
+            let make = move |rank: usize| -> Vec<Vec<f32>> {
+                sizes_in
+                    .iter()
+                    .enumerate()
+                    .map(|(t, &s)| {
+                        (0..s).map(|i| ((rank * 3 + t * 5 + i) % 9) as f32 - 4.0).collect()
+                    })
+                    .collect()
+            };
+            let out = run_spmd(world, move |ep| {
+                let place = Placement::new(world);
+                let mut a = make(ep.rank);
+                let mut b = make(ep.rank);
+                gradsum_serial(ep, &place, &mut a);
+                gradsum_pipelined(ep, &place, &mut b, quantum);
+                (a, b)
+            });
+            for (r, (a, b)) in out.iter().enumerate() {
+                for (ti, s) in sizes.iter().enumerate() {
+                    for i in 0..*s {
+                        let expect: f32 = (0..world)
+                            .map(|rr| ((rr * 3 + ti * 5 + i) % 9) as f32 - 4.0)
+                            .sum();
+                        if (a[ti][i] - expect).abs() > 1e-3 {
+                            return Err(format!("serial rank {r} t{ti}[{i}]"));
+                        }
+                        if (b[ti][i] - expect).abs() > 1e-3 {
+                            return Err(format!(
+                                "pipelined rank {r} t{ti}[{i}]: {} != {expect} (q={quantum})",
+                                b[ti][i]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_flatview_pack_unpack_roundtrip() {
+    forall(
+        200,
+        |rng| {
+            let sizes: Vec<usize> =
+                (0..rng.below(6) + 1).map(|_| rng.below(30) as usize + 1).collect();
+            let total: usize = sizes.iter().sum();
+            let start = rng.below(total as u64) as usize;
+            let end = start + 1 + rng.below((total - start) as u64) as usize;
+            (sizes, (start, end))
+        },
+        |&(ref sizes, (start, end))| {
+            if sizes.is_empty() {
+                return Ok(());
+            }
+            let total: usize = sizes.iter().sum();
+            if total == 0 || end > total || start >= end {
+                return Ok(()); // shrinking may produce degenerate inputs
+            }
+            let mut tensors: Vec<Vec<f32>> = sizes
+                .iter()
+                .enumerate()
+                .map(|(t, &s)| (0..s).map(|i| (t * 100 + i) as f32).collect())
+                .collect();
+            let orig = tensors.clone();
+            let mut view =
+                FlatView::new(tensors.iter_mut().map(|t| t.as_mut_slice()).collect());
+            let mut buf = vec![0.0f32; end - start];
+            view.pack(start, end, &mut buf);
+            // Unpack the packed data back — must be identity.
+            view.unpack(start, end, &buf);
+            drop(view);
+            if tensors != orig {
+                return Err("pack/unpack not identity".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shard_plan_partitions_and_balances() {
+    forall(
+        300,
+        |rng| {
+            let sizes: Vec<usize> =
+                (0..rng.below(12) + 1).map(|_| rng.below(5000) as usize).collect();
+            let shards = rng.below(64) as usize + 1;
+            (sizes, shards)
+        },
+        |&(ref sizes, shards)| {
+            if shards == 0 {
+                return Ok(());
+            }
+            let plan = ShardPlan::balanced(sizes, shards);
+            let total: usize = sizes.iter().sum();
+            if plan.total != total {
+                return Err("total mismatch".into());
+            }
+            let mut covered = 0;
+            for r in &plan.ranges {
+                if r.start != covered {
+                    return Err("gap".into());
+                }
+                covered = r.end;
+            }
+            if covered != total {
+                return Err("incomplete cover".into());
+            }
+            let max = plan.ranges.iter().map(|r| r.len()).max().unwrap();
+            let min = plan.ranges.iter().map(|r| r.len()).min().unwrap();
+            if max > min + 1 {
+                return Err(format!("imbalance {max} vs {min}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_eval_sharding_covers_exactly_once() {
+    forall(
+        300,
+        |rng| {
+            (
+                rng.below(500) as usize + 1,
+                (rng.below(16) as usize + 1, rng.below(16) as usize + 1),
+            )
+        },
+        |&(n, (cores, batch))| {
+            if cores == 0 || batch == 0 {
+                return Ok(());
+            }
+            let s = EvalSharding::new(n, cores, batch);
+            let mut seen = vec![0u32; n];
+            for step in 0..s.steps() {
+                for core in 0..cores {
+                    let c = s.chunk(core, step);
+                    for (i, &g) in c.indices.iter().enumerate() {
+                        if c.mask[i] == 1.0 {
+                            if g >= n {
+                                return Err(format!("index {g} out of range"));
+                            }
+                            seen[g] += 1;
+                        }
+                    }
+                }
+            }
+            if seen.iter().any(|&x| x != 1) {
+                return Err("coverage not exactly-once".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bf16_error_bounded() {
+    forall(
+        2000,
+        |rng| rng.normal_f32(0.0, 100.0),
+        |&x| {
+            if x == 0.0 || !x.is_finite() {
+                return Ok(());
+            }
+            let rel = ((Bf16::from_f32(x).to_f32() - x) / x).abs();
+            if rel > BF16_MAX_REL_ERR {
+                return Err(format!("rel err {rel} for {x}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bucketization_never_increases_waste() {
+    forall(
+        20,
+        |rng| (rng.below(1000) as usize + 64, rng.below(1_000_000)),
+        |&(n, seed)| {
+            let task = TranslationTask::default();
+            let pairs = task.pairs(&mut Rng::new(seed), n);
+            let batch = 16;
+            let seq = total_waste(&batch_sequential(pairs.clone(), batch));
+            let mut rng = Rng::new(seed ^ 1);
+            let buck = total_waste(&batch_bucketized(pairs, batch, 256, &mut rng));
+            if buck > seq + 0.02 {
+                return Err(format!("bucketized waste {buck} > sequential {seq}"));
+            }
+            Ok(())
+        },
+    );
+}
