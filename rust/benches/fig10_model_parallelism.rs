@@ -1,18 +1,16 @@
 //! Figure 10 reproduction: "Speedup with model parallelism" — SSD 1.6x on
-//! 4 cores; Mask-RCNN speedups at mp 2 and 4. Uses the spatial-partition
-//! planner (halo + distributed-BN + load-imbalance model) plus a REAL
-//! stripe-partitioned convolution wallclock measurement on the fabric.
+//! 4 cores; Mask-RCNN speedups at mp 2 and 4. The planner numbers come
+//! from the scenario engine (`scenario::model_parallel_speedup`); a REAL
+//! stripe-partitioned convolution wallclock measurement on the fabric
+//! validates the halo protocol.
 
 use tpu_pod_train::benchkit::{Bench, Table};
-use tpu_pod_train::devicesim::TPU_V3;
 use tpu_pod_train::fabric::run_spmd;
-use tpu_pod_train::netsim::{CostModel, NetParams, Torus};
-use tpu_pod_train::spatial::plan::{maskrcnn_stage1_layers, plan, ssd_layers};
+use tpu_pod_train::scenario::model_parallel_speedup;
 use tpu_pod_train::spatial::{conv2d, conv2d_striped};
 use tpu_pod_train::util::rng::Rng;
 
 fn main() {
-    let net = CostModel::new(Torus::new(2, 2), NetParams::default());
     let mut t = Table::new(
         "Fig. 10: model-parallel speedup (planner model)",
         &["model", "mp", "speedup", "paper"],
@@ -20,10 +18,8 @@ fn main() {
     let paper: &[(&str, usize, &str)] =
         &[("ssd", 2, "—"), ("ssd", 4, "1.6x"), ("maskrcnn", 2, ">1x"), ("maskrcnn", 4, ">2x")];
     for &(name, mp, pap) in paper {
-        let layers = if name == "ssd" { ssd_layers() } else { maskrcnn_stage1_layers() };
-        let p = plan(&layers, mp, &TPU_V3, &net);
-        t.row(&[name.to_string(), mp.to_string(), format!("{:.2}x", p.speedup()),
-                pap.to_string()]);
+        let speedup = model_parallel_speedup(name, mp).expect("known model");
+        t.row(&[name.to_string(), mp.to_string(), format!("{speedup:.2}x"), pap.to_string()]);
     }
     t.print();
 

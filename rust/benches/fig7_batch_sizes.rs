@@ -1,35 +1,37 @@
 //! Figure 7 reproduction: "Batch sizes used in scaling MLPerf models" —
 //! the global batch each model uses at each pod slice, showing that only
 //! ResNet-50 scales its batch aggressively while the others grow ≤2x and
-//! lean on model parallelism instead.
+//! lean on model parallelism instead. Driven by the scenario sweep engine
+//! (`scenario::fig7_scenarios`).
 
 use tpu_pod_train::benchkit::Table;
-use tpu_pod_train::models::all_models;
+use tpu_pod_train::models::model;
+use tpu_pod_train::scenario::{fig7_scenarios, run_scenario};
 
 fn main() {
-    let slices = [128usize, 256, 512, 1024, 2048];
     let mut t = Table::new(
         "Fig. 7: global batch size vs TPU-v3 cores",
         &["model", "128", "256", "512", "1024", "2048", "growth"],
     );
-    for m in all_models() {
-        let mut row = vec![m.name.to_string()];
+    for s in fig7_scenarios() {
+        let m = model(&s.model).unwrap();
+        let recs = run_scenario(&s).expect("scenario");
+        let mut row = vec![s.model.clone()];
         let mut first = None;
         let mut last = None;
-        for &cores in &slices {
-            if cores > m.max_useful_cores() {
+        for r in &recs {
+            if r.cores > m.max_useful_cores() {
                 row.push("—".into());
                 continue;
             }
-            let l = m.layout(cores);
             if first.is_none() {
-                first = Some(l.global_batch);
+                first = Some(r.global_batch);
             }
-            last = Some(l.global_batch);
-            row.push(if l.mp > 1 {
-                format!("{} (mp{})", l.global_batch, l.mp)
+            last = Some(r.global_batch);
+            row.push(if r.mp > 1 {
+                format!("{} (mp{})", r.global_batch, r.mp)
             } else {
-                l.global_batch.to_string()
+                r.global_batch.to_string()
             });
         }
         let growth = last.unwrap() as f64 / first.unwrap() as f64;

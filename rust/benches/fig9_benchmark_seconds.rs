@@ -1,26 +1,25 @@
 //! Figure 9 reproduction: "MLPerf-0.6 benchmark seconds" — simulated
 //! time-to-train for the five models across pod slices with all §2
-//! optimizations enabled, plus the paper-scale summary row.
+//! optimizations enabled, plus the paper-scale summary row. Driven by the
+//! scenario sweep engine (`scenario::fig9_scenarios`).
 
 use tpu_pod_train::benchkit::Table;
-use tpu_pod_train::models::all_models;
-use tpu_pod_train::simulator::{simulate, SimOptions};
+use tpu_pod_train::models::{all_models, model};
+use tpu_pod_train::scenario::{fig9_scenarios, run_scenario, ScalingScenario};
 
 fn main() {
-    let slices = [64usize, 128, 256, 512, 1024, 2048];
     let mut t = Table::new(
         "Fig. 9: benchmark seconds vs TPU-v3 cores (simulated)",
         &["model", "64", "128", "256", "512", "1024", "2048"],
     );
-    for m in all_models() {
-        let mut row = vec![m.name.to_string()];
-        for &cores in &slices {
-            if cores > m.max_useful_cores() {
-                row.push("—".into());
-                continue;
-            }
-            let r = simulate(&m, cores, &SimOptions::default());
-            row.push(if r.converged {
+    for s in fig9_scenarios() {
+        let m = model(&s.model).unwrap();
+        let recs = run_scenario(&s).expect("scenario");
+        let mut row = vec![s.model.clone()];
+        for r in &recs {
+            row.push(if r.cores > m.max_useful_cores() {
+                "—".into()
+            } else if r.converged {
                 format!("{:.0}", r.benchmark_seconds)
             } else {
                 "DNF".into()
@@ -38,7 +37,10 @@ fn main() {
                   ("transformer", "~51"), ("gnmt", "~108")];
     for (m, (_, pub_s)) in all_models().iter().zip(public) {
         let cores = m.max_useful_cores().min(2048);
-        let r = simulate(m, cores, &SimOptions::default());
+        let s = ScalingScenario::submission(m.name, vec![cores / 2])
+            .named(format!("fig9-summary-{}", m.name));
+        let recs = run_scenario(&s).expect("scenario");
+        let r = &recs[0];
         t2.row(&[
             m.name.to_string(),
             cores.to_string(),

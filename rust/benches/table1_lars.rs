@@ -2,43 +2,40 @@
 //! batch 32K for the three optimizer configurations.
 //!
 //! Two layers of evidence:
-//!  1. the pod simulator converts each configuration's epochs-to-converge
-//!     into benchmark seconds (the paper's table rows);
+//!  1. the scenario engine converts each configuration's epochs-to-converge
+//!     into benchmark seconds (`scenario::table1_scenarios`);
 //!  2. a REAL LARS experiment on the mini-CNN (examples/lars_study.rs digs
 //!     deeper) validates that both variants train and that the unscaled
-//!     family reaches higher accuracy under a decaying schedule.
+//!     family reaches higher accuracy under a decaying schedule (skips
+//!     with a message when AOT artifacts are absent).
 
 use tpu_pod_train::benchkit::Table;
 use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
-use tpu_pod_train::models::model;
 use tpu_pod_train::optim::{LarsConfig, LarsVariant};
-use tpu_pod_train::simulator::{simulate, SimOptions};
+use tpu_pod_train::scenario::{table1_scenarios, SweepRunner};
 
 fn main() {
     // --- simulated Table 1 (paper rows: 76.9 / 72.4 / 67.1 s) ------------
-    let resnet = model("resnet50").unwrap();
+    let report = SweepRunner::new(table1_scenarios()).run().expect("table1 sweep");
+    // Display metadata per row; the epochs column comes from the record
+    // itself (the value that actually drove the simulated seconds).
     let rows = [
-        ("Scaled momentum", 31.2, 25.0, 72.8),
-        ("Unscaled momentum", 31.2, 25.0, 70.6),
-        ("Unscaled momentum (tuned)", 29.0, 18.0, 64.0),
+        ("Scaled momentum", 31.2, 25.0),
+        ("Unscaled momentum", 31.2, 25.0),
+        ("Unscaled momentum (tuned)", 29.0, 18.0),
     ];
+    let paper = [76.9, 72.4, 67.1];
     let mut t = Table::new(
         "Table 1: ResNet-50 on 2048 TPU cores, batch 32K",
         &["Optimizer", "Base LR", "Warmup Ep", "Train Ep", "sim seconds", "paper seconds"],
     );
-    let paper = [76.9, 72.4, 67.1];
-    for ((name, lr, warmup, epochs), paper_s) in rows.iter().zip(paper) {
-        let r = simulate(
-            &resnet,
-            2048,
-            &SimOptions { epochs_override: Some(*epochs), ..Default::default() },
-        );
+    for (((name, lr, warmup), paper_s), rec) in rows.iter().zip(paper).zip(&report.records) {
         t.row(&[
             name.to_string(),
             format!("{lr}"),
             format!("{warmup}"),
-            format!("{epochs}"),
-            format!("{:.1}", r.benchmark_seconds),
+            format!("{}", rec.epochs),
+            format!("{:.1}", rec.benchmark_seconds),
             format!("{paper_s}"),
         ]);
     }
@@ -49,6 +46,7 @@ fn main() {
         "Live check (cnn_mini, 2 cores, warmup+decay, hard task): top-1 at step 40 / 400",
         &["variant", "acc @ step 40", "acc @ step 400"],
     );
+    let mut live_ok = true;
     for (label, variant, momentum) in [
         ("scaled", LarsVariant::Scaled, 0.9f32),
         ("unscaled", LarsVariant::Unscaled, 0.9),
@@ -72,10 +70,19 @@ fn main() {
             quality_target: None,
             warmup_steps: 80,
         };
-        let rep = train(&cfg).expect("train");
+        let rep = match train(&cfg) {
+            Ok(rep) => rep,
+            Err(e) => {
+                println!("\n(live check skipped: {e:#})");
+                live_ok = false;
+                break;
+            }
+        };
         let at40 = rep.evals.iter().find(|e| e.step == 40).map(|e| e.accuracy).unwrap_or(0.0);
         let last = rep.evals.last().map(|e| e.accuracy).unwrap_or(0.0);
         t2.row(&[label.to_string(), format!("{at40:.3}"), format!("{last:.3}")]);
     }
-    t2.print();
+    if live_ok {
+        t2.print();
+    }
 }

@@ -168,17 +168,16 @@ where
     F: Fn(&mut Endpoint) -> T + Sync,
 {
     let endpoints = fabric(world);
-    crossbeam_utils::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         let handles: Vec<_> = endpoints
             .into_iter()
             .map(|mut ep| {
                 let f = &f;
-                scope.spawn(move |_| f(&mut ep))
+                scope.spawn(move || f(&mut ep))
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
     })
-    .expect("spmd scope panicked")
 }
 
 #[cfg(test)]

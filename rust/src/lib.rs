@@ -12,6 +12,30 @@
 //! * L2/L1 (python/, build-time only) — JAX model fwd/bwd + Pallas kernels,
 //!   AOT-lowered to `artifacts/*.hlo.txt` and executed via PJRT from
 //!   [`runtime`].
+//!
+//! # Scenario sweeps & test matrix
+//!
+//! The paper's actual experiment is a *sweep*: each MLPerf model across
+//! pod slices (16 → 1024 chips) with weight-update sharding, spatial
+//! partitioning, gradient-summation schedule and optimizer co-tuned per
+//! point. The [`scenario`] module is that experiment driver:
+//! [`scenario::ScalingScenario`] declares a sweep, a
+//! [`scenario::SweepRunner`] executes the grid, and each point's
+//! [`scenario::SweepRecord`] carries the layout, the step-time
+//! decomposition, shard imbalance, a contention-checked collective time
+//! and the predicted benchmark seconds. `tpu-pod-train sweep` emits the
+//! JSON report; `rust/src/scenario/README.md` maps sweeps to the paper's
+//! figures.
+//!
+//! The test matrix:
+//! * unit tests inside every module (the substrate contracts),
+//! * `rust/tests/dist_invariants.rs` — property-based distributed
+//!   invariants with shrinking (collective sums, shard-plan partitioning,
+//!   halo round-trips) via [`testing::forall`],
+//! * `rust/tests/scenario_golden.rs` — golden-trace fixtures pinning one
+//!   sweep point per model plus strong-scaling monotonicity checks,
+//! * `rust/tests/integration.rs` — the real-trainer loop; skips cleanly
+//!   when `artifacts/` is absent (run `make artifacts` to enable).
 
 pub mod benchkit;
 pub mod checkpoint;
@@ -27,6 +51,7 @@ pub mod models;
 pub mod optim;
 pub mod netsim;
 pub mod runtime;
+pub mod scenario;
 pub mod simulator;
 pub mod spatial;
 pub mod testing;

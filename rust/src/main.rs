@@ -4,6 +4,8 @@
 //! * `train`    — run the real data-parallel trainer on the in-process pod
 //!                (AOT artifacts via PJRT; see `make artifacts`).
 //! * `simulate` — TPU-v3 pod time-to-train simulation for one MLPerf model.
+//! * `sweep`    — scenario sweep engine: models × pod slices, JSON report
+//!                (the Figs. 7-10 / Table 1 experiment driver).
 //! * `submit`   — full simulated MLPerf-0.6 submission (all five models,
 //!                Fig. 9-style table).
 //! * `info`     — list artifacts, models and device constants.
@@ -14,6 +16,7 @@ use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
 use tpu_pod_train::models::{all_models, model};
 use tpu_pod_train::optim::{AdamConfig, LarsConfig, LarsVariant};
 use tpu_pod_train::runtime::Manifest;
+use tpu_pod_train::scenario::{BatchSchedule, GradSumChoice, ScalingScenario, SweepRunner};
 use tpu_pod_train::simulator::{simulate, SimOptions};
 use tpu_pod_train::util::cli::Cli;
 
@@ -24,12 +27,13 @@ fn main() {
     let code = match cmd {
         "train" => cmd_train(&rest),
         "simulate" => cmd_simulate(&rest),
+        "sweep" => cmd_sweep(&rest),
         "submit" => cmd_submit(&rest),
         "info" => cmd_info(),
         _ => {
             eprintln!(
                 "tpu-pod-train — MLPerf-0.6 TPU-v3 pod reproduction\n\n\
-                 Usage: tpu-pod-train <train|simulate|submit|info> [options]\n\
+                 Usage: tpu-pod-train <train|simulate|sweep|submit|info> [options]\n\
                  Run a subcommand with --help for its options."
             );
             2
@@ -169,6 +173,7 @@ fn cmd_simulate(tokens: &[String]) -> i32 {
         distributed_eval: !a.flag("no-dist-eval"),
         spatial_partitioning: !a.flag("no-spatial"),
         epochs_override: None,
+        layout_override: None,
     };
     let r = simulate(&m, a.get_usize("cores", 2048), &opts);
     println!("{name} @ {} cores: layout {:?}", r.cores, r.layout);
@@ -185,6 +190,97 @@ fn cmd_simulate(tokens: &[String]) -> i32 {
         "  eval {:.1}s, infra {:.1}s → benchmark {:.1}s",
         r.eval_seconds, r.infra_seconds, r.benchmark_seconds
     );
+    0
+}
+
+fn cmd_sweep(tokens: &[String]) -> i32 {
+    let cli = Cli::new("sweep", "pod-scale scenario sweep (Figs. 7-10 / Table 1 engine)")
+        .opt("model", "resnet50", "resnet50|ssd|maskrcnn|transformer|gnmt|all")
+        .opt("chips", "16,64,256,1024", "comma-separated TPU-v3 chip counts (2 cores/chip)")
+        .opt("batch", "0", "fixed global batch (0 = submission layout policy)")
+        .opt("out", "", "also write the JSON report to this file")
+        .flag("serial-gradsum", "expose the non-contiguous gathers (no pipelining)")
+        .flag("no-2d", "use the 1-D ring gradient-summation schedule")
+        .flag("no-wus", "disable weight-update sharding")
+        .flag("no-dist-eval", "use side-card evaluation")
+        .flag("no-spatial", "disable spatial partitioning")
+        .flag("table", "print a human-readable table before the JSON report");
+    let a = match cli.parse_tokens(tokens) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let mut chips = Vec::new();
+    for tok in a.get_or("chips", "").split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        match tok.parse::<usize>() {
+            Ok(c) => chips.push(c),
+            Err(_) => {
+                eprintln!("bad chip count {tok:?} (expected e.g. --chips 16,64,256,1024)");
+                return 2;
+            }
+        }
+    }
+    let model_arg = a.get_or("model", "resnet50");
+    let names: Vec<String> = if model_arg == "all" {
+        all_models().iter().map(|m| m.name.to_string()).collect()
+    } else {
+        vec![model_arg]
+    };
+    let gradsum = match (!a.flag("no-2d"), !a.flag("serial-gradsum")) {
+        (true, true) => GradSumChoice::Pipelined2D,
+        (true, false) => GradSumChoice::Serial2D,
+        (false, true) => GradSumChoice::Pipelined1D,
+        (false, false) => GradSumChoice::Serial1D,
+    };
+    let batch_raw = a.get_or("batch", "0");
+    let batch: usize = match batch_raw.trim().parse() {
+        Ok(b) => b,
+        Err(_) => {
+            eprintln!("bad --batch value {batch_raw:?} (expected a nonnegative integer)");
+            return 2;
+        }
+    };
+    let scenarios: Vec<ScalingScenario> = names
+        .iter()
+        .map(|name| {
+            let mut s = ScalingScenario::submission(name, chips.clone())
+                .named(format!("sweep-{name}"));
+            if batch > 0 {
+                s = s.with_batch(BatchSchedule::Fixed(batch));
+            }
+            s.gradsum = gradsum;
+            s.weight_update_sharding = !a.flag("no-wus");
+            s.distributed_eval = !a.flag("no-dist-eval");
+            s.spatial_partitioning = !a.flag("no-spatial");
+            s
+        })
+        .collect();
+    let report = match SweepRunner::new(scenarios).run() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("sweep error: {e}");
+            return 2;
+        }
+    };
+    if a.flag("table") {
+        report.table("Scenario sweep").print();
+        println!();
+    }
+    println!("{}", report.dump());
+    let out = a.get_or("out", "");
+    if !out.is_empty() {
+        if let Err(e) = report.write(&out) {
+            eprintln!("writing {out}: {e}");
+            return 1;
+        }
+        eprintln!("report written to {out}");
+    }
     0
 }
 

@@ -47,6 +47,7 @@ impl Layout {
 }
 
 /// One MLPerf-0.6 benchmark's profile.
+#[derive(Clone, Debug)]
 pub struct ModelProfile {
     pub name: &'static str,
     /// Trainable parameters.

@@ -1,7 +1,7 @@
 //! PJRT runtime: load AOT artifacts (HLO text), compile once, execute from
 //! the training hot path.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! Pattern follows the xla_extension load_hlo flow: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute`. HLO *text* is the interchange format (the
 //! bundled xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos).
@@ -9,8 +9,14 @@
 //! `PjRtClient` is `Rc`-based (not `Send`), so each data-parallel worker
 //! thread constructs its own `Runtime` — mirroring how each TPU core owns
 //! its own executable image. Executables are cached per runtime.
+//!
+//! In the offline build the `xla` binding is the in-tree stub
+//! ([`mod@xla`]): client construction fails with a clear message and every
+//! artifact-dependent caller degrades gracefully (integration tests skip,
+//! the simulator/scenario layers never come near it).
 
 pub mod artifact;
+mod xla;
 
 use std::cell::RefCell;
 use std::collections::HashMap;

@@ -1,0 +1,110 @@
+//! Offline stand-in for the `xla` PJRT binding crate.
+//!
+//! The real binding (xla_extension: `PjRtClient` → `HloModuleProto` →
+//! `XlaComputation` → compile → execute) is not part of the offline build
+//! closure. This module mirrors the API surface `runtime` uses so the
+//! crate compiles and tests without it; [`PjRtClient::cpu`] fails with a
+//! clear message, so every artifact-dependent path (the real trainer, the
+//! integration tests) reports "PJRT backend not available" instead of a
+//! link error, while artifact-independent subsystems (simulator, scenario
+//! sweeps, collectives, netsim) never touch it.
+//!
+//! Re-enabling real execution is a two-line change: delete the
+//! `mod xla;` declaration in `runtime/mod.rs` and add the real `xla`
+//! crate to rust/Cargo.toml.
+
+use std::path::Path;
+
+/// Error type for every stub operation.
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable() -> XlaError {
+    XlaError(
+        "PJRT backend not available in this offline build (the `xla` binding crate is \
+         not vendored); artifact execution requires the real runtime — see \
+         rust/src/runtime/xla.rs"
+            .to_string(),
+    )
+}
+
+/// Stub PJRT client: construction always fails, so nothing downstream of
+/// it can be reached.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// Stub HLO module proto (the real one parses HLO text).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// Stub XLA computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Stub host literal.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}

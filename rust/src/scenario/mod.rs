@@ -1,0 +1,271 @@
+//! Pod-scale scenario sweep engine — the experiment driver behind the
+//! paper's Figs. 7-10 and Table 1.
+//!
+//! The repo models every §2 ingredient separately (the pod simulator, the
+//! torus cost model, weight-update sharding plans, the spatial-partition
+//! planner); this module composes them into *declarative* experiments:
+//!
+//! * [`ScalingScenario`] — one model × a set of pod slices (chip counts)
+//!   × a batch schedule × the §2 optimization toggles. Validated up
+//!   front, so a sweep either runs completely or fails with a message.
+//! * [`SweepRunner`] / [`run_scenario`] — execute the scenario grid; each
+//!   point yields a [`SweepRecord`] (layout, step-time decomposition,
+//!   shard imbalance, contention-checked collective time, predicted
+//!   epochs-to-quality, benchmark seconds).
+//! * [`SweepReport`] — the record set with JSON serialization
+//!   (`tpu-pod-train sweep` writes these; golden-trace tests pin them).
+//!
+//! How sweeps map to the paper:
+//!
+//! * Fig. 7 (batch vs cores): [`presets::fig7_scenarios`] — submission
+//!   batch schedule, read `global_batch`/`mp` per point.
+//! * Fig. 8 (epochs vs batch): [`presets::fig8_scenarios`] — fixed-batch
+//!   schedule, read `epochs` (the convergence-curve prediction).
+//! * Fig. 9 (benchmark seconds): [`presets::fig9_scenarios`] — read
+//!   `benchmark_seconds` across slices.
+//! * Fig. 10 (model parallelism): [`presets::model_parallel_speedup`].
+//! * Table 1 (LARS variants): [`presets::table1_scenarios`] — optimizer
+//!   override with per-variant epochs-to-converge.
+
+pub mod presets;
+pub mod runner;
+
+pub use presets::{
+    fig7_scenarios, fig8_scenarios, fig9_scenarios, model_parallel_speedup, paper_chip_slices,
+    table1_scenarios,
+};
+pub use runner::{
+    gradsum_contention_makespan, run_scenario, sweep_point, SweepRecord, SweepReport, SweepRunner,
+};
+
+use crate::models::registry::{model, Layout, ModelProfile, Optimizer};
+use crate::simulator::SimOptions;
+
+/// How the global batch is chosen at each sweep point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchSchedule {
+    /// The Google-submission layout policy (`ModelProfile::layout`,
+    /// Fig. 7 shape: only ResNet-50 scales its batch aggressively).
+    Submission,
+    /// The same global batch at every chip count (strong-scaling and
+    /// Fig. 8 epochs-vs-batch studies).
+    Fixed(usize),
+}
+
+/// Gradient-summation schedule under sweep (§2 ablation axes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GradSumChoice {
+    /// The submission configuration: 2-D torus schedule, pipelined
+    /// non-contiguous gathers/scatters.
+    Pipelined2D,
+    /// 2-D schedule, fully exposed gathers (the paper's baseline).
+    Serial2D,
+    /// Single 1-D ring, pipelined.
+    Pipelined1D,
+    /// Single 1-D ring, exposed (the pre-[19] worst case).
+    Serial1D,
+}
+
+impl GradSumChoice {
+    pub fn is_2d(self) -> bool {
+        matches!(self, GradSumChoice::Pipelined2D | GradSumChoice::Serial2D)
+    }
+
+    pub fn is_pipelined(self) -> bool {
+        matches!(self, GradSumChoice::Pipelined2D | GradSumChoice::Pipelined1D)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            GradSumChoice::Pipelined2D => "2d-pipelined",
+            GradSumChoice::Serial2D => "2d-serial",
+            GradSumChoice::Pipelined1D => "1d-pipelined",
+            GradSumChoice::Serial1D => "1d-serial",
+        }
+    }
+}
+
+/// Optimizer selection for a sweep (Table 1 optimizer studies replace the
+/// model's default optimizer and its epochs-to-converge).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OptimizerChoice {
+    /// The model profile's own optimizer and convergence curve.
+    ModelDefault,
+    /// Force an optimizer (update-traffic model) and optionally pin the
+    /// epochs-to-converge (Table 1 rows differ only in epochs).
+    Override { optimizer: Optimizer, epochs: Option<f64> },
+}
+
+/// One declarative sweep: a model swept across TPU-v3 pod slices with a
+/// batch schedule and the §2 technique toggles.
+#[derive(Clone, Debug)]
+pub struct ScalingScenario {
+    /// Report label (e.g. "fig9-resnet50").
+    pub name: String,
+    /// Registry key: resnet50 | ssd | maskrcnn | transformer | gnmt.
+    pub model: String,
+    /// TPU-v3 chip counts (2 cores per chip); powers of two, e.g.
+    /// `[16, 64, 256, 1024]` spans one rack to the full pod.
+    pub chips: Vec<usize>,
+    pub batch: BatchSchedule,
+    pub optimizer: OptimizerChoice,
+    pub gradsum: GradSumChoice,
+    pub weight_update_sharding: bool,
+    pub distributed_eval: bool,
+    pub spatial_partitioning: bool,
+}
+
+impl ScalingScenario {
+    /// The submission configuration (every §2 optimization on) for a model
+    /// across the given chip counts.
+    pub fn submission(model_name: &str, chips: Vec<usize>) -> ScalingScenario {
+        ScalingScenario {
+            name: format!("{model_name}-submission"),
+            model: model_name.to_string(),
+            chips,
+            batch: BatchSchedule::Submission,
+            optimizer: OptimizerChoice::ModelDefault,
+            gradsum: GradSumChoice::Pipelined2D,
+            weight_update_sharding: true,
+            distributed_eval: true,
+            spatial_partitioning: true,
+        }
+    }
+
+    pub fn named(mut self, name: impl Into<String>) -> ScalingScenario {
+        self.name = name.into();
+        self
+    }
+
+    pub fn with_batch(mut self, batch: BatchSchedule) -> ScalingScenario {
+        self.batch = batch;
+        self
+    }
+
+    /// Check the spec and resolve the model profile.
+    pub fn validate(&self) -> Result<ModelProfile, String> {
+        let m = model(&self.model)
+            .ok_or_else(|| format!("scenario {:?}: unknown model {:?}", self.name, self.model))?;
+        if self.chips.is_empty() {
+            return Err(format!("scenario {:?}: empty chip list", self.name));
+        }
+        for &c in &self.chips {
+            if c == 0 || !c.is_power_of_two() {
+                return Err(format!(
+                    "scenario {:?}: chip count {c} must be a nonzero power of two",
+                    self.name
+                ));
+            }
+        }
+        if let BatchSchedule::Fixed(b) = self.batch {
+            if b == 0 {
+                return Err(format!("scenario {:?}: fixed global batch must be > 0", self.name));
+            }
+        }
+        Ok(m)
+    }
+
+    /// The effective model profile after any optimizer override.
+    pub fn profile(&self) -> Result<ModelProfile, String> {
+        let mut m = self.validate()?;
+        if let OptimizerChoice::Override { optimizer, .. } = self.optimizer {
+            m.optimizer = optimizer;
+        }
+        Ok(m)
+    }
+
+    /// Simulator options for one sweep point at `cores` TPU-v3 cores.
+    pub fn sim_options(&self, cores: usize) -> SimOptions {
+        let layout_override = match self.batch {
+            BatchSchedule::Submission => None,
+            BatchSchedule::Fixed(global_batch) => Some(fixed_batch_layout(cores, global_batch)),
+        };
+        let epochs_override = match self.optimizer {
+            OptimizerChoice::Override { epochs, .. } => epochs,
+            OptimizerChoice::ModelDefault => None,
+        };
+        SimOptions {
+            gradsum_2d: self.gradsum.is_2d(),
+            gradsum_pipelined: self.gradsum.is_pipelined(),
+            weight_update_sharding: self.weight_update_sharding,
+            distributed_eval: self.distributed_eval,
+            spatial_partitioning: self.spatial_partitioning,
+            epochs_override,
+            layout_override,
+        }
+    }
+}
+
+/// Pure data-parallel layout for a fixed global batch (strong scaling):
+/// replicas are capped by the batch (surplus cores idle), no model
+/// parallelism.
+///
+/// Known limitation: when `cores > global_batch` the simulator still
+/// prices weight-update sharding, distributed eval and the torus
+/// collectives over all `cores`, not the participating replicas — see
+/// ROADMAP.md "Idle-core accounting".
+pub fn fixed_batch_layout(cores: usize, global_batch: usize) -> Layout {
+    let replicas = cores.min(global_batch).max(1);
+    Layout { cores, mp: 1, replicas, global_batch }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submission_scenario_validates() {
+        let s = ScalingScenario::submission("resnet50", vec![16, 64, 256, 1024]);
+        let m = s.validate().unwrap();
+        assert_eq!(m.name, "resnet50");
+        assert_eq!(s.gradsum, GradSumChoice::Pipelined2D);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let s = ScalingScenario::submission("alexnet", vec![16]);
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn bad_chip_counts_rejected() {
+        assert!(ScalingScenario::submission("ssd", vec![]).validate().is_err());
+        assert!(ScalingScenario::submission("ssd", vec![48]).validate().is_err());
+        assert!(ScalingScenario::submission("ssd", vec![0]).validate().is_err());
+    }
+
+    #[test]
+    fn zero_fixed_batch_rejected() {
+        let s = ScalingScenario::submission("ssd", vec![16]).with_batch(BatchSchedule::Fixed(0));
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn optimizer_override_changes_profile() {
+        let mut s = ScalingScenario::submission("resnet50", vec![16]);
+        s.optimizer =
+            OptimizerChoice::Override { optimizer: Optimizer::Adam, epochs: Some(50.0) };
+        let m = s.profile().unwrap();
+        assert_eq!(m.optimizer, Optimizer::Adam);
+        let opts = s.sim_options(32);
+        assert_eq!(opts.epochs_override, Some(50.0));
+    }
+
+    #[test]
+    fn fixed_batch_layout_caps_replicas() {
+        let l = fixed_batch_layout(2048, 128);
+        assert_eq!(l.replicas, 128);
+        assert_eq!(l.mp, 1);
+        assert_eq!(l.per_replica_batch(), 1.0);
+        let l = fixed_batch_layout(32, 32768);
+        assert_eq!(l.replicas, 32);
+        assert_eq!(l.per_replica_batch(), 1024.0);
+    }
+
+    #[test]
+    fn gradsum_choice_axes() {
+        assert!(GradSumChoice::Pipelined2D.is_2d() && GradSumChoice::Pipelined2D.is_pipelined());
+        assert!(!GradSumChoice::Serial1D.is_2d() && !GradSumChoice::Serial1D.is_pipelined());
+        assert_eq!(GradSumChoice::Serial2D.label(), "2d-serial");
+    }
+}

@@ -1,0 +1,130 @@
+//! Canned scenarios reproducing the paper's figures — the benches
+//! (benches/fig7..fig10, table1) and the `sweep` subcommand build on
+//! these instead of hand-rolling simulator calls.
+
+use crate::models::registry::{all_models, model, Optimizer};
+use crate::simulator::spatial_speedup;
+
+use super::{BatchSchedule, OptimizerChoice, ScalingScenario};
+
+/// The pod-slice ladder the paper's scaling figures sweep (chips; 2 cores
+/// per chip, so 32 → 1024 chips is 64 → 2048 cores).
+pub fn paper_chip_slices() -> Vec<usize> {
+    vec![32, 64, 128, 256, 512, 1024]
+}
+
+/// Fig. 7 "Batch sizes used in scaling MLPerf models": submission layout
+/// per model across the submission slice range (128 → 2048 cores).
+pub fn fig7_scenarios() -> Vec<ScalingScenario> {
+    all_models()
+        .iter()
+        .map(|m| {
+            ScalingScenario::submission(m.name, vec![64, 128, 256, 512, 1024])
+                .named(format!("fig7-{}", m.name))
+        })
+        .collect()
+}
+
+/// Fig. 8 "Training epochs to converge when scaling to a larger batch
+/// size": one fixed-batch scenario per (model, batch) point. The chip
+/// count only sets the layout; the epochs prediction depends on the batch
+/// alone.
+pub fn fig8_scenarios(batches: &[usize]) -> Vec<ScalingScenario> {
+    let mut out = Vec::new();
+    for m in all_models() {
+        for &b in batches {
+            out.push(
+                ScalingScenario::submission(m.name, vec![64])
+                    .with_batch(BatchSchedule::Fixed(b))
+                    .named(format!("fig8-{}-b{b}", m.name)),
+            );
+        }
+    }
+    out
+}
+
+/// Fig. 9 "MLPerf-0.6 benchmark seconds": submission configuration per
+/// model across 64 → 2048 cores.
+pub fn fig9_scenarios() -> Vec<ScalingScenario> {
+    all_models()
+        .iter()
+        .map(|m| {
+            ScalingScenario::submission(m.name, paper_chip_slices())
+                .named(format!("fig9-{}", m.name))
+        })
+        .collect()
+}
+
+/// Fig. 10 "Speedup with model parallelism": the spatial-partition
+/// planner's speedup for a model at partition degree `mp` (None for an
+/// unknown model).
+pub fn model_parallel_speedup(model_name: &str, mp: usize) -> Option<f64> {
+    model(model_name).map(|m| spatial_speedup(&m, mp))
+}
+
+/// Table 1 "ResNet-50 on 2048 TPU cores, batch 32K": the three LARS
+/// configurations differ (for the simulator) only in epochs-to-converge.
+pub fn table1_scenarios() -> Vec<ScalingScenario> {
+    [("scaled-momentum", 72.8), ("unscaled-momentum", 70.6), ("unscaled-momentum-tuned", 64.0)]
+        .into_iter()
+        .map(|(label, epochs)| {
+            let mut s = ScalingScenario::submission("resnet50", vec![1024]);
+            s.name = format!("table1-{label}");
+            s.optimizer =
+                OptimizerChoice::Override { optimizer: Optimizer::Lars, epochs: Some(epochs) };
+            s
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::SweepRunner;
+
+    #[test]
+    fn fig9_covers_all_models_and_slices() {
+        let scenarios = fig9_scenarios();
+        assert_eq!(scenarios.len(), 5);
+        let report = SweepRunner::new(scenarios).run().unwrap();
+        assert_eq!(report.records.len(), 5 * paper_chip_slices().len());
+    }
+
+    #[test]
+    fn fig8_epochs_depend_only_on_batch() {
+        // SSD anchors from the paper: 50 → 61 → 77.5 epochs.
+        let scenarios = fig8_scenarios(&[256, 1024, 2048]);
+        let report = SweepRunner::new(scenarios).run().unwrap();
+        let ssd: Vec<f64> = report
+            .records
+            .iter()
+            .filter(|r| r.model == "ssd")
+            .map(|r| r.epochs)
+            .collect();
+        assert_eq!(ssd.len(), 3);
+        assert!((ssd[0] - 50.0).abs() < 1e-9);
+        assert!((ssd[1] - 61.0).abs() < 1e-9);
+        assert!((ssd[2] - 77.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig10_speedups_match_paper_shape() {
+        let s4 = model_parallel_speedup("ssd", 4).unwrap();
+        assert!((1.4..1.9).contains(&s4), "SSD 4-way speedup {s4}");
+        let m4 = model_parallel_speedup("maskrcnn", 4).unwrap();
+        assert!(m4 > s4, "Mask-RCNN partitions better: {m4} vs {s4}");
+        assert!(model_parallel_speedup("nope", 4).is_none());
+    }
+
+    #[test]
+    fn table1_rows_order_by_epochs() {
+        let report = SweepRunner::new(table1_scenarios()).run().unwrap();
+        assert_eq!(report.records.len(), 3);
+        // Fewer epochs → fewer benchmark seconds, same step time.
+        assert!(report.records[0].benchmark_seconds > report.records[1].benchmark_seconds);
+        assert!(report.records[1].benchmark_seconds > report.records[2].benchmark_seconds);
+        assert!(
+            (report.records[0].step_seconds - report.records[2].step_seconds).abs() < 1e-12
+        );
+    }
+}

@@ -23,6 +23,9 @@ pub struct SimOptions {
     pub spatial_partitioning: bool,
     /// Override the convergence-curve epochs (Table 1 optimizer study).
     pub epochs_override: Option<f64>,
+    /// Override the submission layout policy (scenario sweeps with a fixed
+    /// global batch use this for strong-scaling studies).
+    pub layout_override: Option<Layout>,
 }
 
 impl Default for SimOptions {
@@ -34,6 +37,7 @@ impl Default for SimOptions {
             distributed_eval: true,
             spatial_partitioning: true,
             epochs_override: None,
+            layout_override: None,
         }
     }
 }
@@ -55,6 +59,8 @@ pub struct SimResult {
     /// The headline: MLPerf benchmark seconds (init excluded).
     pub benchmark_seconds: f64,
     pub converged: bool,
+    /// Spatial-partition speedup of the chosen mp degree (1.0 = pure DP).
+    pub spatial_speedup: f64,
 }
 
 /// Fixed infrastructure overhead per eval in the in-loop scheme (loop
@@ -65,8 +71,9 @@ const SIDECARD_EVAL_OVERHEAD_S: f64 = 6.0;
 /// Cores of the fixed side-card eval slice in the baseline scheme.
 const SIDECARD_CORES: f64 = 16.0;
 
-/// Spatial-partitioning speedup for a model at partition degree mp.
-fn spatial_speedup(model: &ModelProfile, mp: usize) -> f64 {
+/// Spatial-partitioning speedup for a model at partition degree mp
+/// (public: the scenario sweep engine and the Fig. 10 bench reuse it).
+pub fn spatial_speedup(model: &ModelProfile, mp: usize) -> f64 {
     if mp <= 1 {
         return 1.0;
     }
@@ -93,6 +100,9 @@ pub fn simulate(model: &ModelProfile, cores: usize, opts: &SimOptions) -> SimRes
         // count; surplus cores idle.
         let replicas = (cores).min(model.max_batch);
         layout = Layout { cores, mp: 1, replicas, global_batch: layout.global_batch };
+    }
+    if let Some(l) = opts.layout_override {
+        layout = l;
     }
 
     let epochs = opts
@@ -173,6 +183,7 @@ pub fn simulate(model: &ModelProfile, cores: usize, opts: &SimOptions) -> SimRes
         infra_seconds,
         benchmark_seconds,
         converged,
+        spatial_speedup: mp_speed,
     }
 }
 

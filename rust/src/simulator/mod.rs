@@ -5,4 +5,4 @@
 
 pub mod mlperf;
 
-pub use mlperf::{simulate, SimOptions, SimResult};
+pub use mlperf::{simulate, spatial_speedup, SimOptions, SimResult};

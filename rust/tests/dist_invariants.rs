@@ -7,7 +7,8 @@
 //! round-trip, bf16 error stays bounded.
 
 use tpu_pod_train::collectives::{
-    chunk_range, gradsum_pipelined, gradsum_serial, ring_all_reduce, FlatView, Placement,
+    chunk_range, gradsum_pipelined, gradsum_serial, halo_exchange, ring_all_reduce, FlatView,
+    Placement,
 };
 use tpu_pod_train::data::bucket::{batch_bucketized, batch_sequential, total_waste};
 use tpu_pod_train::data::synthetic::TranslationTask;
@@ -253,6 +254,172 @@ fn prop_bf16_error_bounded() {
             let rel = ((Bf16::from_f32(x).to_f32() - x) / x).abs();
             if rel > BF16_MAX_REL_ERR {
                 return Err(format!("rel err {rel} for {x}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The §2 gradient-summation contract at the edges of the quantum axis:
+/// pipelined (any pack granularity) ≡ serial ≡ the local reference sum,
+/// including the degenerate world of one.
+#[test]
+fn prop_gradsum_extreme_quanta_match_local_reference() {
+    forall(
+        10,
+        |rng| {
+            let world = 1usize << rng.below(3); // 1, 2, 4
+            let ntensors = rng.below(5) as usize + 1;
+            let sizes: Vec<usize> =
+                (0..ntensors).map(|_| rng.below(25) as usize + 1).collect();
+            (world, sizes)
+        },
+        |&(world, ref sizes)| {
+            // Shrinking may propose worlds the torus placement rejects
+            // (0, 3, ...); skip them so a failure still shrinks cleanly.
+            if world == 0 || !world.is_power_of_two() {
+                return Ok(());
+            }
+            let total: usize = sizes.iter().sum();
+            let sizes_in = sizes.clone();
+            let make = move |rank: usize| -> Vec<Vec<f32>> {
+                sizes_in
+                    .iter()
+                    .enumerate()
+                    .map(|(t, &s)| {
+                        (0..s).map(|i| ((rank * 7 + t * 3 + i) % 11) as f32 - 5.0).collect()
+                    })
+                    .collect()
+            };
+            for quantum in [1usize, total.max(1), 4 * total.max(1)] {
+                let out = run_spmd(world, {
+                    let make = make.clone();
+                    move |ep| {
+                        let place = Placement::new(world);
+                        let mut serial = make(ep.rank);
+                        let mut pipelined = make(ep.rank);
+                        gradsum_serial(ep, &place, &mut serial);
+                        gradsum_pipelined(ep, &place, &mut pipelined, quantum);
+                        (serial, pipelined)
+                    }
+                });
+                for (r, (serial, pipelined)) in out.iter().enumerate() {
+                    for (ti, &s) in sizes.iter().enumerate() {
+                        for i in 0..s {
+                            let reference: f32 = (0..world)
+                                .map(|rr| ((rr * 7 + ti * 3 + i) % 11) as f32 - 5.0)
+                                .sum();
+                            if (serial[ti][i] - reference).abs() > 1e-3 {
+                                return Err(format!(
+                                    "serial rank {r} t{ti}[{i}] != local reference (q={quantum})"
+                                ));
+                            }
+                            if (pipelined[ti][i] - reference).abs() > 1e-3 {
+                                return Err(format!(
+                                    "pipelined rank {r} t{ti}[{i}] != local reference (q={quantum})"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `ShardPlan::balanced` contracts beyond gap-free coverage: the
+/// `imbalance()` metric respects the ceil/floor bound, and per tensor the
+/// shard overlaps are disjoint, in order, and cover the tensor exactly.
+#[test]
+fn prop_shard_plan_imbalance_bound_and_overlap_partition() {
+    forall(
+        200,
+        |rng| {
+            let sizes: Vec<usize> =
+                (0..rng.below(10) + 1).map(|_| rng.below(4000) as usize).collect();
+            let shards = rng.below(64) as usize + 1;
+            (sizes, shards)
+        },
+        |&(ref sizes, shards)| {
+            // Generated shards are >= 1, but shrinking can propose 0;
+            // skip it (the bound below would divide by zero).
+            if shards == 0 {
+                return Ok(());
+            }
+            let plan = ShardPlan::balanced(sizes, shards);
+            let total: usize = sizes.iter().sum();
+            if total >= shards {
+                let floor = total / shards;
+                let bound = (floor + 1) as f64 / floor as f64;
+                if plan.imbalance() > bound + 1e-12 {
+                    return Err(format!(
+                        "imbalance {} exceeds ceil/floor bound {bound}",
+                        plan.imbalance()
+                    ));
+                }
+            }
+            for (ti, &size) in sizes.iter().enumerate() {
+                let mut covered = 0usize;
+                for r in &plan.ranges {
+                    if let Some(o) = plan.tensor_overlap(ti, r) {
+                        if o.start != covered {
+                            return Err(format!(
+                                "tensor {ti}: overlap gap at {covered} (got {:?})",
+                                o
+                            ));
+                        }
+                        covered = o.end;
+                    }
+                }
+                if covered != size {
+                    return Err(format!("tensor {ti}: covered {covered} != size {size}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Halo-exchange round-trip identity: bouncing the received halos straight
+/// back must return every worker's own boundary rows unchanged (the halo
+/// protocol is a pure transport — no aliasing, no reordering).
+#[test]
+fn prop_halo_exchange_roundtrip_identity() {
+    forall(
+        15,
+        |rng| {
+            let world = rng.below(4) as usize + 2; // 2..5 stripes
+            let rows = rng.below(8) as usize + 1; // halo payload length
+            (world, (rows, rng.next_u64()))
+        },
+        |&(world, (rows, seed))| {
+            let out = run_spmd(world, move |ep| {
+                let group: Vec<usize> = (0..world).collect();
+                let mut rng = Rng::new(seed).fold_in(ep.rank as u64);
+                let top: Vec<f32> = (0..rows).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let bottom: Vec<f32> =
+                    (0..rows).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let pos = ep.rank;
+                let (above, below) = halo_exchange(
+                    ep,
+                    &group,
+                    (pos > 0).then_some(&top[..]),
+                    (pos + 1 < world).then_some(&bottom[..]),
+                    false,
+                );
+                // Bounce: send the received halos straight back.
+                let (above2, below2) =
+                    halo_exchange(ep, &group, above.as_deref(), below.as_deref(), false);
+                (top, bottom, above2, below2)
+            });
+            for (r, (top, bottom, above2, below2)) in out.iter().enumerate() {
+                if r > 0 && above2.as_ref() != Some(top) {
+                    return Err(format!("rank {r}: top rows did not round-trip"));
+                }
+                if r + 1 < world && below2.as_ref() != Some(bottom) {
+                    return Err(format!("rank {r}: bottom rows did not round-trip"));
+                }
             }
             Ok(())
         },

@@ -3,6 +3,10 @@
 //! distributed eval) on the in-process pod.
 //!
 //! Requires `make artifacts` (the Makefile runs it before `cargo test`).
+//! On a clean checkout without `artifacts/` (or in the offline build,
+//! where the PJRT backend is a stub) every test here skips with a message
+//! instead of failing — the artifact-independent suites (unit tests,
+//! dist_invariants, scenario_golden) are the tier-1 signal.
 
 use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
 use tpu_pod_train::optim::{
@@ -11,8 +15,34 @@ use tpu_pod_train::optim::{
 use tpu_pod_train::runtime::{HostTensor, Runtime};
 use tpu_pod_train::util::rng::Rng;
 
+/// True when the AOT artifacts and a working PJRT backend are available.
+/// Tests run from the crate root (rust/); artifacts/ lives there. Probed
+/// once per test binary (the PJRT client probe is not free).
+fn artifacts_available() -> bool {
+    static AVAILABLE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *AVAILABLE.get_or_init(|| {
+        // The manifest may exist while the PJRT backend is the offline stub.
+        std::path::Path::new("artifacts/manifest.json").exists()
+            && Runtime::with_dir("artifacts").is_ok()
+    })
+}
+
+/// Skip the calling test (early-return) when artifacts are unusable,
+/// printing why (visible with `cargo test -- --nocapture`).
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!(
+                "skipping {}: artifacts/ absent or PJRT unavailable (run `make artifacts` \
+                 with the real xla binding to enable)",
+                module_path!()
+            );
+            return;
+        }
+    };
+}
+
 fn runtime() -> Runtime {
-    // Tests run from the crate root; artifacts/ lives there.
     Runtime::with_dir("artifacts").expect("run `make artifacts` first")
 }
 
@@ -26,6 +56,7 @@ fn randvec(seed: u64, n: usize) -> Vec<f32> {
 
 #[test]
 fn rust_lars_matches_pallas_artifact_both_variants() {
+    require_artifacts!();
     let rt = runtime();
     let n = 16384;
     for (scaled, art) in [(true, "lars_scaled_16384"), (false, "lars_unscaled_16384")] {
@@ -67,6 +98,7 @@ fn rust_lars_matches_pallas_artifact_both_variants() {
 
 #[test]
 fn rust_adam_matches_pallas_artifact() {
+    require_artifacts!();
     let rt = runtime();
     let n = 16384;
     let w0 = randvec(10, n);
@@ -108,6 +140,7 @@ fn rust_adam_matches_pallas_artifact() {
 
 #[test]
 fn attention_artifact_executes() {
+    require_artifacts!();
     let rt = runtime();
     let (b, h, s, d) = (8, 4, 64, 32);
     let n = b * h * s * d;
@@ -124,6 +157,7 @@ fn attention_artifact_executes() {
 
 #[test]
 fn lstm_artifact_state_bounded() {
+    require_artifacts!();
     let rt = runtime();
     let (b, h) = (8, 128);
     let xp = HostTensor::new(vec![b, 4 * h], randvec(30, b * 4 * h));
@@ -141,6 +175,7 @@ fn lstm_artifact_state_bounded() {
 
 #[test]
 fn trainer_loss_decreases_tiny_transformer() {
+    require_artifacts!();
     let mut cfg = TrainConfig::quick("transformer_tiny", 2, 40);
     cfg.opt = OptChoice::Adam { cfg: AdamConfig::default(), lr: 3e-3 };
     let rep = train(&cfg).unwrap();
@@ -155,6 +190,7 @@ fn trainer_loss_decreases_tiny_transformer() {
 
 #[test]
 fn trainer_wus_matches_replicated_trajectory() {
+    require_artifacts!();
     // Weight-update sharding is an execution strategy: the loss trajectory
     // must match the replicated optimizer to f32 tolerance.
     let mut base = TrainConfig::quick("transformer_tiny", 4, 10);
@@ -170,6 +206,7 @@ fn trainer_wus_matches_replicated_trajectory() {
 
 #[test]
 fn trainer_gradsum_modes_agree() {
+    require_artifacts!();
     let mut serial = TrainConfig::quick("transformer_tiny", 4, 8);
     serial.gradsum = GradSumMode::Serial;
     let mut pipe = serial.clone();
@@ -183,6 +220,7 @@ fn trainer_gradsum_modes_agree() {
 
 #[test]
 fn trainer_cnn_lars_reaches_quality_target() {
+    require_artifacts!();
     // Mini-CNN on the planted-feature image task with unscaled-momentum
     // LARS: must hit 60% top-1 (10 classes, alpha=2 — easily separable).
     let cfg = TrainConfig {
@@ -210,6 +248,7 @@ fn trainer_cnn_lars_reaches_quality_target() {
 
 #[test]
 fn trainer_eval_metrics_independent_of_core_count() {
+    require_artifacts!();
     // Distributed eval must give the same metrics at any core count
     // (padding/masking invariance) when the model state is identical.
     let mk = |cores| {
@@ -229,6 +268,7 @@ fn trainer_eval_metrics_independent_of_core_count() {
 
 #[test]
 fn trainer_single_core_works() {
+    require_artifacts!();
     let rep = train(&TrainConfig::quick("transformer_tiny", 1, 3)).unwrap();
     assert_eq!(rep.step_losses.len(), 3);
     assert!(rep.params_total > 100_000);
