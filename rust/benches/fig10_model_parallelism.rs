@@ -5,7 +5,10 @@
 //! validates the halo protocol.
 
 use tpu_pod_train::benchkit::{Bench, Table};
+use tpu_pod_train::costs::spatial_factors;
+use tpu_pod_train::devicesim::TPU_V3;
 use tpu_pod_train::fabric::run_spmd;
+use tpu_pod_train::models::model;
 use tpu_pod_train::scenario::model_parallel_speedup;
 use tpu_pod_train::spatial::{conv2d, conv2d_striped};
 use tpu_pod_train::util::rng::Rng;
@@ -13,13 +16,20 @@ use tpu_pod_train::util::rng::Rng;
 fn main() {
     let mut t = Table::new(
         "Fig. 10: model-parallel speedup (planner model)",
-        &["model", "mp", "speedup", "paper"],
+        &["model", "mp", "speedup", "halo+BN share", "paper"],
     );
     let paper: &[(&str, usize, &str)] =
         &[("ssd", 2, "—"), ("ssd", 4, "1.6x"), ("maskrcnn", 2, ">1x"), ("maskrcnn", 4, ">2x")];
     for &(name, mp, pap) in paper {
         let speedup = model_parallel_speedup(name, mp).expect("known model");
-        t.row(&[name.to_string(), mp.to_string(), format!("{speedup:.2}x"), pap.to_string()]);
+        let f = spatial_factors(&model(name).unwrap(), mp, &TPU_V3);
+        t.row(&[
+            name.to_string(),
+            mp.to_string(),
+            format!("{speedup:.2}x"),
+            format!("{:.0}%", 100.0 * f.comm_fraction),
+            pap.to_string(),
+        ]);
     }
     t.print();
 

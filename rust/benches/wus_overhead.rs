@@ -5,6 +5,7 @@
 //! overhead at scale, on both the device model and the real fabric.
 
 use tpu_pod_train::benchkit::{fmt_ratio, Table};
+use tpu_pod_train::costs::{PodLayout, StepCostModel, WeightUpdatePhase};
 use tpu_pod_train::devicesim::{step_model, weight_update_cost, TPU_V3};
 use tpu_pod_train::fabric::run_spmd;
 use tpu_pod_train::models::model;
@@ -25,26 +26,54 @@ fn main() {
         ("transformer", 1.0, 33.0, "≈45%"),
     ] {
         let m = model(name).unwrap();
-        let s = step_model(&TPU_V3, &net, m.fwd_flops_per_example,
-                           m.hbm_bytes_per_example, ex, units, m.params,
-                           m.optimizer.bytes_per_param(), false);
-        t.row(&[name.to_string(), format!("{ex}"),
-                format!("{:.1}%", 100.0 * s.update_fraction()), paper.to_string()]);
+        let s = step_model(
+            &TPU_V3,
+            &net,
+            m.fwd_flops_per_example,
+            m.hbm_bytes_per_example,
+            ex,
+            units,
+            m.params,
+            m.optimizer.bytes_per_param(),
+            false,
+        );
+        t.row(&[
+            name.to_string(),
+            format!("{ex}"),
+            format!("{:.1}%", 100.0 * s.update_fraction()),
+            paper.to_string(),
+        ]);
     }
     t.print();
 
+    // Priced through the participation-aware costs layer: one shard per
+    // participating core, the all-gather on the participating torus. The
+    // WeightUpdatePhase picks min(replicated, sharded) when sharding is
+    // on, so the "chosen" column is what simulate() actually charges.
     let mut t2 = Table::new(
-        "Modeled update time: replicated vs sharded (ms)",
-        &["model", "cores", "replicated", "sharded+allgather", "win"],
+        "Modeled update time: replicated vs sharded (ms, costs::WeightUpdatePhase)",
+        &["model", "shards", "replicated", "sharded+allgather", "chosen", "win"],
     );
     for (name, cores) in [("resnet50", 2048usize), ("transformer", 2048), ("gnmt", 1024)] {
         let m = model(name).unwrap();
-        let uc = weight_update_cost(&TPU_V3, &net, m.params,
-                                    m.optimizer.bytes_per_param(), cores);
-        t2.row(&[name.to_string(), cores.to_string(),
-                 format!("{:.3}", uc.replicated * 1e3),
-                 format!("{:.3}", uc.sharded * 1e3),
-                 fmt_ratio(uc.replicated / uc.sharded)]);
+        let pod = PodLayout::from_layout(&m.layout(cores));
+        let np = NetParams::default();
+        let uc = weight_update_cost(
+            &TPU_V3,
+            &CostModel::new(pod.participating_torus(), np),
+            m.params,
+            m.optimizer.bytes_per_param(),
+            pod.update_shards(),
+        );
+        let chosen = WeightUpdatePhase { dev: TPU_V3, net: np, sharding: true }.cost(&m, &pod);
+        t2.row(&[
+            name.to_string(),
+            chosen.cores.to_string(),
+            format!("{:.3}", uc.replicated * 1e3),
+            format!("{:.3}", uc.sharded * 1e3),
+            format!("{:.3}", chosen.seconds * 1e3),
+            fmt_ratio(uc.replicated / uc.sharded),
+        ]);
     }
     t2.print();
 

@@ -1,0 +1,135 @@
+//! Participation-aware pod layout: which cores actually take part in each
+//! phase of a training step.
+//!
+//! A machine allocation (`cores`) and the layout the batch policy chose
+//! (`replicas` x `mp`) need not coincide: with a fixed global batch and
+//! more cores than examples (strong-scaling sweeps, the no-spatial
+//! ablation), the surplus cores hold no replica and do **no** work. The
+//! seed simulator nevertheless priced gradient summation, weight-update
+//! sharding and distributed evaluation over ALL cores, so surplus cores
+//! kept shrinking those phases — the ROADMAP "Idle-core accounting" bug.
+//! [`PodLayout`] is the fix: every phase cost is priced over the
+//! *participating* core set this type derives.
+
+use crate::models::registry::Layout;
+use crate::netsim::Torus;
+
+/// Core-participation view of a [`Layout`] on a TPU-v3 pod slice
+/// (2 cores per chip).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PodLayout {
+    /// Machine cores allocated to the job (the pod slice).
+    pub cores: usize,
+    /// Spatial/graph model-parallel degree within one replica.
+    pub mp: usize,
+    /// Data-parallel replica count.
+    pub replicas: usize,
+    pub global_batch: usize,
+}
+
+impl PodLayout {
+    pub fn from_layout(l: &Layout) -> PodLayout {
+        PodLayout { cores: l.cores, mp: l.mp, replicas: l.replicas, global_batch: l.global_batch }
+    }
+
+    /// Cores that hold a replica shard and do per-step work.
+    pub fn participating_cores(&self) -> usize {
+        (self.replicas * self.mp).min(self.cores).max(1)
+    }
+
+    /// Cores idling because the batch cannot occupy them.
+    pub fn surplus_cores(&self) -> usize {
+        self.cores - self.participating_cores().min(self.cores)
+    }
+
+    pub fn per_replica_batch(&self) -> f64 {
+        self.global_batch as f64 / self.replicas as f64
+    }
+
+    /// Gradient summation runs over every core holding gradients: the
+    /// data-parallel replicas times their spatial workers (spatial
+    /// partitioning replicates the weights, so each spatial worker holds a
+    /// full gradient set).
+    pub fn gradsum_cores(&self) -> usize {
+        self.participating_cores()
+    }
+
+    /// Weight-update sharding distributes the optimizer over the cores
+    /// that hold weights — the participating set, one shard per core.
+    pub fn update_shards(&self) -> usize {
+        self.participating_cores()
+    }
+
+    /// Distributed in-loop evaluation shares the eval set over the cores
+    /// running the train loop.
+    pub fn eval_cores(&self) -> usize {
+        self.participating_cores()
+    }
+
+    /// Halo exchange happens inside one spatial-partition group.
+    pub fn halo_group(&self) -> usize {
+        self.mp
+    }
+
+    /// Torus spanned by the participating cores (surplus chips carry no
+    /// collective traffic). Rounded up to the nearest power-of-two slice,
+    /// matching how pod slices are allocated.
+    pub fn participating_torus(&self) -> Torus {
+        Torus::for_chips((self.participating_cores() / 2).max(1).next_power_of_two())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout(cores: usize, mp: usize, replicas: usize, batch: usize) -> PodLayout {
+        PodLayout::from_layout(&Layout { cores, mp, replicas, global_batch: batch })
+    }
+
+    #[test]
+    fn fully_occupied_pod_has_no_surplus() {
+        let p = layout(2048, 1, 2048, 32768);
+        assert_eq!(p.participating_cores(), 2048);
+        assert_eq!(p.surplus_cores(), 0);
+        assert_eq!(p.participating_torus().chips(), 1024);
+    }
+
+    #[test]
+    fn batch_limited_layout_exposes_surplus() {
+        // GNMT at the full pod: 1024 replicas on 2048 cores.
+        let p = layout(2048, 1, 1024, 1024);
+        assert_eq!(p.participating_cores(), 1024);
+        assert_eq!(p.surplus_cores(), 1024);
+        assert_eq!(p.participating_torus().chips(), 512);
+    }
+
+    #[test]
+    fn model_parallel_groups_count_toward_participation() {
+        // Mask-RCNN at 2048 cores: 128 replicas x mp 4 = 512 active.
+        let p = layout(2048, 4, 128, 128);
+        assert_eq!(p.participating_cores(), 512);
+        assert_eq!(p.surplus_cores(), 1536);
+        assert_eq!(p.halo_group(), 4);
+        assert_eq!(p.gradsum_cores(), 512);
+        assert_eq!(p.update_shards(), 512);
+        assert_eq!(p.participating_torus().chips(), 256);
+    }
+
+    #[test]
+    fn degenerate_single_core() {
+        let p = layout(1, 1, 1, 4);
+        assert_eq!(p.participating_cores(), 1);
+        assert_eq!(p.surplus_cores(), 0);
+        assert_eq!(p.participating_torus().chips(), 1);
+    }
+
+    #[test]
+    fn participation_never_exceeds_allocation() {
+        // A hand-built override can claim more replicas than cores; the
+        // participating set is clamped to the machine.
+        let p = layout(64, 1, 128, 128);
+        assert_eq!(p.participating_cores(), 64);
+        assert_eq!(p.surplus_cores(), 0);
+    }
+}

@@ -1,0 +1,32 @@
+//! Participation-aware cost-model layer (the pricing substrate behind the
+//! pod simulator, the paper-figure benches and the scenario sweep runner).
+//!
+//! The paper's headline numbers (Figs. 7-10, Table 1) depend on pricing
+//! each §2 technique over the cores that actually participate in it:
+//! gradient summation over the replicas' torus, weight-update sharding
+//! over the shard group, halo exchange over the spatial-partition group,
+//! distributed eval over the cores running the train loop. This module
+//! makes that attribution a first-class layer:
+//!
+//! * [`PodLayout`] — a layout's participation view: participating vs
+//!   surplus cores, per-phase group sizes, the participating torus.
+//! * [`Phase`] / [`PhaseCost`] — the §2 phase taxonomy (compute, halo,
+//!   gradsum, weight update, eval, infra) with per-group pricing.
+//! * [`StepCostModel`] — the per-phase pricing trait; implementations are
+//!   backed by `devicesim`, `netsim::{CostModel, GradSumModel}`,
+//!   `wus::ShardPlan`, `evaluation::EvalSharding` and the `spatial`
+//!   planner.
+//! * [`CostStack`] / [`StepBreakdown`] — composition + the resulting
+//!   price list, consumed by `simulator::simulate()` and serialized per
+//!   sweep point by `scenario::SweepRecord`.
+
+pub mod layout;
+pub mod phases;
+
+pub use layout::PodLayout;
+pub use phases::{
+    shard_imbalance, spatial_factors, ComputePhase, CostConfig, CostStack, EvalPhase,
+    GradSumPhase, HaloPhase, InfraPhase, Phase, PhaseCost, SpatialFactors, StepBreakdown,
+    StepCostModel, WeightUpdatePhase, INFRA_SECONDS, INLOOP_EVAL_OVERHEAD_S, SIDECARD_CORES,
+    SIDECARD_EVAL_OVERHEAD_S,
+};

@@ -1,0 +1,511 @@
+//! Per-phase step cost models ([`StepCostModel`]) and their composition
+//! ([`CostStack`]): the single pricing path behind `simulate()`, the
+//! paper-figure benches and the scenario sweep runner.
+//!
+//! Each §2 technique is priced over the core set that actually
+//! participates in it (see [`PodLayout`]):
+//!
+//! | phase | backed by | participating set |
+//! |---|---|---|
+//! | Compute | `devicesim` roofline + `spatial` planner | replicas x mp |
+//! | Halo | `spatial` planner comm split | the mp group |
+//! | GradSum | `netsim::GradSumModel` on the participating torus | replicas x mp |
+//! | WeightUpdate | `devicesim::weight_update_cost` + `wus::ShardPlan` | one shard per participating core |
+//! | Eval | `evaluation::EvalSharding` padding arithmetic | participating cores (or the 16-core side-card) |
+//! | Infra | fixed run overhead | the whole allocation |
+
+use crate::devicesim::{weight_update_cost, Device, TPU_V3};
+use crate::evaluation::EvalSharding;
+use crate::models::registry::ModelProfile;
+use crate::netsim::{ArAlgo, CostModel, GradSumModel, NetParams, Torus};
+use crate::spatial::plan::{maskrcnn_stage1_layers, plan, ssd_layers};
+use crate::wus::ShardPlan;
+
+use super::PodLayout;
+
+/// Fixed infrastructure overhead per eval in the in-loop scheme (loop
+/// switch) and per eval in the side-card scheme (checkpoint transfer) —
+/// the "infrastructure overheads [that] dominate" (paper §3 Transformer).
+pub const INLOOP_EVAL_OVERHEAD_S: f64 = 0.35;
+pub const SIDECARD_EVAL_OVERHEAD_S: f64 = 6.0;
+/// Cores of the fixed side-card eval slice in the baseline scheme.
+pub const SIDECARD_CORES: usize = 16;
+/// Fixed per-run infrastructure inside the measured window.
+pub const INFRA_SECONDS: f64 = 3.0;
+
+/// Step/run phases of the §2 cost decomposition.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Phase {
+    Compute,
+    Halo,
+    GradSum,
+    WeightUpdate,
+    Eval,
+    Infra,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 6] = [
+        Phase::Compute,
+        Phase::Halo,
+        Phase::GradSum,
+        Phase::WeightUpdate,
+        Phase::Eval,
+        Phase::Infra,
+    ];
+
+    /// Per-training-step phases (the rest are per-run / per-eval).
+    pub fn per_step(self) -> bool {
+        matches!(self, Phase::Compute | Phase::Halo | Phase::GradSum | Phase::WeightUpdate)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            Phase::Halo => "halo",
+            Phase::GradSum => "gradsum",
+            Phase::WeightUpdate => "update",
+            Phase::Eval => "eval",
+            Phase::Infra => "infra",
+        }
+    }
+}
+
+/// One phase's price: seconds per occurrence (per training step for step
+/// phases, per eval pass for Eval, per run for Infra) and the core group
+/// it was priced over.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PhaseCost {
+    pub phase: Phase,
+    pub seconds: f64,
+    /// Size of the participating group this phase was priced over.
+    pub cores: usize,
+}
+
+/// A phase cost model: prices one §2 technique over its participating
+/// core set.
+pub trait StepCostModel {
+    fn phase(&self) -> Phase;
+    fn cost(&self, m: &ModelProfile, pod: &PodLayout) -> PhaseCost;
+}
+
+/// Configuration for the standard §2 stack (every ablation axis of the
+/// paper plus the device/network constants).
+#[derive(Clone, Copy, Debug)]
+pub struct CostConfig {
+    pub dev: Device,
+    pub net: NetParams,
+    pub gradsum_algo: ArAlgo,
+    pub gradsum_pipelined: bool,
+    pub weight_update_sharding: bool,
+    pub distributed_eval: bool,
+    pub spatial_partitioning: bool,
+}
+
+impl Default for CostConfig {
+    /// The Google-submission configuration: every §2 optimization on.
+    fn default() -> CostConfig {
+        CostConfig {
+            dev: TPU_V3,
+            net: NetParams::default(),
+            gradsum_algo: ArAlgo::Torus2D,
+            gradsum_pipelined: true,
+            weight_update_sharding: true,
+            distributed_eval: true,
+            spatial_partitioning: true,
+        }
+    }
+}
+
+/// Spatial-partitioning factors for a model at partition degree `mp`:
+/// overall speedup of the partitioned step and the fraction of the
+/// partitioned step spent on halo + distributed-BN communication.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpatialFactors {
+    pub speedup: f64,
+    pub comm_fraction: f64,
+}
+
+impl SpatialFactors {
+    pub const IDENTITY: SpatialFactors = SpatialFactors { speedup: 1.0, comm_fraction: 0.0 };
+}
+
+/// Plan a model's spatial partition at degree `mp` and return its factors
+/// (identity for mp <= 1 or models without a partitionable stack).
+pub fn spatial_factors(m: &ModelProfile, mp: usize, dev: &Device) -> SpatialFactors {
+    if mp <= 1 {
+        return SpatialFactors::IDENTITY;
+    }
+    // Halo cost uses a small local neighborhood model.
+    let net = CostModel::new(Torus::new(2, 2), NetParams::default());
+    let layers = match m.name {
+        "ssd" => ssd_layers(),
+        "maskrcnn" => maskrcnn_stage1_layers(),
+        _ => return SpatialFactors::IDENTITY,
+    };
+    let p = plan(&layers, mp, dev, &net);
+    SpatialFactors { speedup: p.speedup(), comm_fraction: p.comm_fraction() }
+}
+
+/// Weight-update shard imbalance (max/min shard elements) over the
+/// model's gradient tensor census at `shards` shards — the contiguous
+/// element-balanced plan of `wus::ShardPlan` (paper §2 Fig. 4).
+pub fn shard_imbalance(m: &ModelProfile, shards: usize) -> f64 {
+    let sizes: Vec<usize> =
+        m.gradient_bytes().iter().map(|&b| ((b / 4.0) as usize).max(1)).collect();
+    ShardPlan::balanced(&sizes, shards.max(1)).imbalance()
+}
+
+/// Per-replica forward+backward compute time on the device roofline
+/// before any spatial partitioning (fwd + bwd ~ 3x fwd FLOPs; MXU
+/// utilization degrades at small per-core batch).
+fn replica_compute_seconds(dev: &Device, m: &ModelProfile, pod: &PodLayout) -> f64 {
+    let epr = pod.per_replica_batch();
+    dev.compute_time_batched(
+        3.0 * m.fwd_flops_per_example * epr,
+        m.hbm_bytes_per_example * epr,
+        epr * m.util_units_per_example,
+    )
+}
+
+/// Compute phase: the roofline step time, accelerated by the spatial
+/// partition (communication share excluded — that is [`HaloPhase`]).
+pub struct ComputePhase {
+    pub dev: Device,
+    pub spatial_partitioning: bool,
+}
+
+impl StepCostModel for ComputePhase {
+    fn phase(&self) -> Phase {
+        Phase::Compute
+    }
+
+    fn cost(&self, m: &ModelProfile, pod: &PodLayout) -> PhaseCost {
+        let raw = replica_compute_seconds(&self.dev, m, pod);
+        let f = if self.spatial_partitioning {
+            spatial_factors(m, pod.mp, &self.dev)
+        } else {
+            SpatialFactors::IDENTITY
+        };
+        PhaseCost {
+            phase: Phase::Compute,
+            seconds: raw / f.speedup * (1.0 - f.comm_fraction),
+            cores: pod.participating_cores(),
+        }
+    }
+}
+
+/// Halo phase: the spatial partition's halo-exchange + distributed-BN
+/// communication share, priced over the mp group.
+pub struct HaloPhase {
+    pub dev: Device,
+    pub spatial_partitioning: bool,
+}
+
+impl StepCostModel for HaloPhase {
+    fn phase(&self) -> Phase {
+        Phase::Halo
+    }
+
+    fn cost(&self, m: &ModelProfile, pod: &PodLayout) -> PhaseCost {
+        let f = if self.spatial_partitioning {
+            spatial_factors(m, pod.mp, &self.dev)
+        } else {
+            SpatialFactors::IDENTITY
+        };
+        let seconds = if f.comm_fraction > 0.0 {
+            replica_compute_seconds(&self.dev, m, pod) / f.speedup * f.comm_fraction
+        } else {
+            0.0
+        };
+        PhaseCost { phase: Phase::Halo, seconds, cores: pod.halo_group() }
+    }
+}
+
+/// Gradient-summation phase: the §2 schedule over the participating
+/// torus (surplus chips carry no all-reduce traffic).
+pub struct GradSumPhase {
+    pub net: NetParams,
+    pub algo: ArAlgo,
+    pub pipelined: bool,
+}
+
+impl StepCostModel for GradSumPhase {
+    fn phase(&self) -> Phase {
+        Phase::GradSum
+    }
+
+    fn cost(&self, m: &ModelProfile, pod: &PodLayout) -> PhaseCost {
+        let net = CostModel::new(pod.participating_torus(), self.net);
+        let gs = GradSumModel { cost: &net, algo: self.algo };
+        let tensors = m.gradient_bytes();
+        let seconds = if self.pipelined {
+            gs.pipelined(&tensors)
+        } else {
+            gs.serial(&tensors)
+        };
+        PhaseCost { phase: Phase::GradSum, seconds, cores: pod.gradsum_cores() }
+    }
+}
+
+/// Weight-update phase: replicated vs sharded (one `wus::ShardPlan` shard
+/// per participating core; the all-gather rides the participating torus).
+pub struct WeightUpdatePhase {
+    pub dev: Device,
+    pub net: NetParams,
+    pub sharding: bool,
+}
+
+impl StepCostModel for WeightUpdatePhase {
+    fn phase(&self) -> Phase {
+        Phase::WeightUpdate
+    }
+
+    fn cost(&self, m: &ModelProfile, pod: &PodLayout) -> PhaseCost {
+        let shards = pod.update_shards();
+        let net = CostModel::new(pod.participating_torus(), self.net);
+        let uc =
+            weight_update_cost(&self.dev, &net, m.params, m.optimizer.bytes_per_param(), shards);
+        let seconds = if self.sharding {
+            uc.sharded.min(uc.replicated)
+        } else {
+            uc.replicated
+        };
+        PhaseCost { phase: Phase::WeightUpdate, seconds, cores: shards }
+    }
+}
+
+/// Evaluation phase: one eval pass, sharded over the participating cores
+/// (in-loop) or the fixed side-card slice, with `EvalSharding`'s padding
+/// arithmetic (padding overhead <= one stride — paper §2).
+pub struct EvalPhase {
+    pub dev: Device,
+    pub distributed: bool,
+}
+
+impl StepCostModel for EvalPhase {
+    fn phase(&self) -> Phase {
+        Phase::Eval
+    }
+
+    fn cost(&self, m: &ModelProfile, pod: &PodLayout) -> PhaseCost {
+        let (cores, overhead) = if self.distributed {
+            (pod.eval_cores(), INLOOP_EVAL_OVERHEAD_S)
+        } else {
+            (SIDECARD_CORES, SIDECARD_EVAL_OVERHEAD_S)
+        };
+        let sharding = EvalSharding::new(m.eval_examples, cores, 1);
+        let per_core_examples = sharding.padded_per_core() as f64;
+        let seconds = per_core_examples * m.fwd_flops_per_example
+            / (self.dev.peak_flops * self.dev.mxu_efficiency)
+            + overhead;
+        PhaseCost { phase: Phase::Eval, seconds, cores }
+    }
+}
+
+/// Fixed per-run infrastructure inside the measured window.
+pub struct InfraPhase;
+
+impl StepCostModel for InfraPhase {
+    fn phase(&self) -> Phase {
+        Phase::Infra
+    }
+
+    fn cost(&self, _m: &ModelProfile, pod: &PodLayout) -> PhaseCost {
+        PhaseCost { phase: Phase::Infra, seconds: INFRA_SECONDS, cores: pod.cores }
+    }
+}
+
+/// A composed set of phase models — evaluate them all against one
+/// (model, layout) point to get the full [`StepBreakdown`].
+pub struct CostStack {
+    pub phases: Vec<Box<dyn StepCostModel>>,
+}
+
+impl CostStack {
+    /// The standard §2 stack for a configuration.
+    pub fn standard(cfg: &CostConfig) -> CostStack {
+        CostStack {
+            phases: vec![
+                Box::new(ComputePhase {
+                    dev: cfg.dev,
+                    spatial_partitioning: cfg.spatial_partitioning,
+                }),
+                Box::new(HaloPhase {
+                    dev: cfg.dev,
+                    spatial_partitioning: cfg.spatial_partitioning,
+                }),
+                Box::new(GradSumPhase {
+                    net: cfg.net,
+                    algo: cfg.gradsum_algo,
+                    pipelined: cfg.gradsum_pipelined,
+                }),
+                Box::new(WeightUpdatePhase {
+                    dev: cfg.dev,
+                    net: cfg.net,
+                    sharding: cfg.weight_update_sharding,
+                }),
+                Box::new(EvalPhase { dev: cfg.dev, distributed: cfg.distributed_eval }),
+                Box::new(InfraPhase),
+            ],
+        }
+    }
+
+    /// Price every phase for one (model, layout) point.
+    pub fn breakdown(&self, m: &ModelProfile, pod: &PodLayout) -> StepBreakdown {
+        StepBreakdown { phases: self.phases.iter().map(|p| p.cost(m, pod)).collect() }
+    }
+}
+
+/// The per-phase price list for one (model, layout) point.
+#[derive(Clone, Debug, Default)]
+pub struct StepBreakdown {
+    pub phases: Vec<PhaseCost>,
+}
+
+impl StepBreakdown {
+    pub fn get(&self, phase: Phase) -> Option<&PhaseCost> {
+        self.phases.iter().find(|c| c.phase == phase)
+    }
+
+    /// Seconds of a phase (0 when the stack lacks it).
+    pub fn seconds(&self, phase: Phase) -> f64 {
+        self.get(phase).map(|c| c.seconds).unwrap_or(0.0)
+    }
+
+    /// Participating cores of a phase (0 when the stack lacks it).
+    pub fn cores(&self, phase: Phase) -> usize {
+        self.get(phase).map(|c| c.cores).unwrap_or(0)
+    }
+
+    /// One synchronous training step: the sum of the per-step phases.
+    pub fn step_seconds(&self) -> f64 {
+        self.phases.iter().filter(|c| c.phase.per_step()).map(|c| c.seconds).sum()
+    }
+
+    /// End-to-end seconds for a run of `steps` training steps and `evals`
+    /// evaluation passes (plus the fixed infra overhead).
+    pub fn benchmark_seconds(&self, steps: f64, evals: f64) -> f64 {
+        steps * self.step_seconds()
+            + evals * self.seconds(Phase::Eval)
+            + self.seconds(Phase::Infra)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::registry::{model, Layout};
+
+    fn pod(cores: usize, mp: usize, replicas: usize, batch: usize) -> PodLayout {
+        PodLayout::from_layout(&Layout { cores, mp, replicas, global_batch: batch })
+    }
+
+    #[test]
+    fn standard_stack_covers_every_phase() {
+        let stack = CostStack::standard(&CostConfig::default());
+        let m = model("resnet50").unwrap();
+        let bd = stack.breakdown(&m, &pod(2048, 1, 2048, 32768));
+        for phase in Phase::ALL {
+            assert!(bd.get(phase).is_some(), "{phase:?} missing");
+        }
+        assert!(bd.step_seconds() > 0.0);
+        assert_eq!(bd.seconds(Phase::Infra), INFRA_SECONDS);
+    }
+
+    #[test]
+    fn surplus_cores_do_not_change_step_phase_pricing() {
+        // The tentpole bug fix: pricing depends on the participating set
+        // only, so the same layout on a bigger machine costs the same.
+        let stack = CostStack::standard(&CostConfig::default());
+        let m = model("resnet50").unwrap();
+        let occupied = stack.breakdown(&m, &pod(512, 1, 512, 8192));
+        let surplus = stack.breakdown(&m, &pod(2048, 1, 512, 8192));
+        let step_phases =
+            [Phase::Compute, Phase::Halo, Phase::GradSum, Phase::WeightUpdate, Phase::Eval];
+        for phase in step_phases {
+            assert_eq!(
+                occupied.seconds(phase),
+                surplus.seconds(phase),
+                "{phase:?} priced over surplus cores"
+            );
+            assert_eq!(occupied.cores(phase), surplus.cores(phase));
+        }
+        assert_eq!(occupied.step_seconds(), surplus.step_seconds());
+    }
+
+    #[test]
+    fn phases_are_priced_over_their_groups() {
+        let stack = CostStack::standard(&CostConfig::default());
+        let m = model("maskrcnn").unwrap();
+        let p = pod(2048, 4, 128, 128);
+        let bd = stack.breakdown(&m, &p);
+        assert_eq!(bd.cores(Phase::Compute), 512);
+        assert_eq!(bd.cores(Phase::GradSum), 512);
+        assert_eq!(bd.cores(Phase::WeightUpdate), 512);
+        assert_eq!(bd.cores(Phase::Eval), 512);
+        assert_eq!(bd.cores(Phase::Halo), 4);
+        assert_eq!(bd.cores(Phase::Infra), 2048);
+        assert!(bd.seconds(Phase::Halo) > 0.0, "mp 4 must pay halo");
+    }
+
+    #[test]
+    fn compute_plus_halo_equals_spatially_accelerated_step() {
+        // The halo split is attribution-only: compute + halo must equal
+        // the raw roofline time divided by the plan speedup.
+        let m = model("ssd").unwrap();
+        let p = pod(2048, 4, 512, 2048);
+        let stack = CostStack::standard(&CostConfig::default());
+        let bd = stack.breakdown(&m, &p);
+        let raw = replica_compute_seconds(&TPU_V3, &m, &p);
+        let f = spatial_factors(&m, 4, &TPU_V3);
+        assert!(f.speedup > 1.0 && f.comm_fraction > 0.0);
+        let expect = raw / f.speedup;
+        let got = bd.seconds(Phase::Compute) + bd.seconds(Phase::Halo);
+        assert!((got - expect).abs() < 1e-12 * expect, "{got} vs {expect}");
+    }
+
+    #[test]
+    fn sidecard_eval_is_priced_over_the_sidecard() {
+        let m = model("transformer").unwrap();
+        let p = pod(2048, 1, 2048, 2048);
+        let dist = EvalPhase { dev: TPU_V3, distributed: true }.cost(&m, &p);
+        let side = EvalPhase { dev: TPU_V3, distributed: false }.cost(&m, &p);
+        assert_eq!(dist.cores, 2048);
+        assert_eq!(side.cores, SIDECARD_CORES);
+        assert!(side.seconds > dist.seconds);
+    }
+
+    #[test]
+    fn eval_padding_rounds_up_to_a_stride() {
+        // 50000 examples over 2048 cores: 25 per core, not 24.41.
+        let m = model("resnet50").unwrap();
+        let p = pod(2048, 1, 2048, 32768);
+        let c = EvalPhase { dev: TPU_V3, distributed: true }.cost(&m, &p);
+        let per_core = 25.0;
+        let expect = per_core * m.fwd_flops_per_example
+            / (TPU_V3.peak_flops * TPU_V3.mxu_efficiency)
+            + INLOOP_EVAL_OVERHEAD_S;
+        assert!((c.seconds - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn spatial_factors_identity_for_pure_dp_models() {
+        let m = model("resnet50").unwrap();
+        assert_eq!(spatial_factors(&m, 1, &TPU_V3), SpatialFactors::IDENTITY);
+        assert_eq!(spatial_factors(&m, 4, &TPU_V3), SpatialFactors::IDENTITY);
+        let ssd = model("ssd").unwrap();
+        let f = spatial_factors(&ssd, 4, &TPU_V3);
+        assert!((1.4..1.9).contains(&f.speedup), "SSD 4-way speedup {}", f.speedup);
+        assert!(f.comm_fraction > 0.0 && f.comm_fraction < 1.0);
+    }
+
+    #[test]
+    fn shard_imbalance_uses_participating_shards() {
+        let m = model("resnet50").unwrap();
+        let i = shard_imbalance(&m, 2048);
+        assert!(i >= 1.0 && i < 1.01, "{i}");
+        // More shards over the same census cannot reduce imbalance.
+        assert!(shard_imbalance(&m, 4096) >= i - 1e-12);
+    }
+}

@@ -4,7 +4,10 @@
 //! Used by the pod simulator to estimate per-step compute time and the
 //! optimizer weight-update overhead that motivates weight-update sharding
 //! (§2: LARS ≈6% of step @2048 cores on ResNet-50; Adam ≈45% on
-//! Transformer).
+//! Transformer). End-to-end pricing goes through `costs::CostStack`
+//! (`ComputePhase` / `WeightUpdatePhase` wrap this roofline over the
+//! participating core set); the raw helpers here take an explicit torus
+//! and shard count for micro-studies.
 
 use crate::netsim::{ArAlgo, CostModel};
 

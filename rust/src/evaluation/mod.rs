@@ -55,6 +55,12 @@ impl EvalSharding {
         self.steps() * self.stride()
     }
 
+    /// Padded examples each core evaluates — what the cost layer
+    /// (`costs::EvalPhase`) charges per core, padding included.
+    pub fn padded_per_core(&self) -> usize {
+        self.steps() * self.per_core_batch
+    }
+
     /// The chunk core `core` evaluates at eval step `step`.
     pub fn chunk(&self, core: usize, step: usize) -> EvalChunk {
         assert!(core < self.cores && step < self.steps());
@@ -146,8 +152,16 @@ mod tests {
     fn exact_multiple_needs_no_padding() {
         let s = EvalSharding::new(64, 4, 8);
         assert_eq!(s.padded_examples(), 64);
+        assert_eq!(s.padded_per_core(), 16);
         let c = s.chunk(3, 1);
         assert!(c.mask.iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn padded_per_core_covers_the_dataset() {
+        let s = EvalSharding::new(50000, 2048, 1);
+        assert_eq!(s.padded_per_core(), 25);
+        assert!(s.padded_per_core() * s.cores >= s.eval_examples);
     }
 
     #[test]

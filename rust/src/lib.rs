@@ -13,7 +13,16 @@
 //!   AOT-lowered to `artifacts/*.hlo.txt` and executed via PJRT from
 //!   [`runtime`].
 //!
-//! # Scenario sweeps & test matrix
+//! # Cost attribution, scenario sweeps & test matrix
+//!
+//! All pricing flows through the participation-aware [`costs`] layer:
+//! [`costs::PodLayout`] derives the participating core set from a layout
+//! (`replicas × mp`; surplus cores idle), and a [`costs::CostStack`] of
+//! per-phase [`costs::StepCostModel`]s prices compute, halo, gradient
+//! summation, the weight update, eval and infra each over its own group —
+//! backed by [`devicesim`], [`netsim`], [`wus`], [`evaluation`] and
+//! [`spatial`]. No phase is priced over raw machine cores, so
+//! fixed-batch strong-scaling sweeps cannot overstate scaling.
 //!
 //! The paper's actual experiment is a *sweep*: each MLPerf model across
 //! pod slices (16 → 1024 chips) with weight-update sharding, spatial
@@ -21,11 +30,13 @@
 //! point. The [`scenario`] module is that experiment driver:
 //! [`scenario::ScalingScenario`] declares a sweep, a
 //! [`scenario::SweepRunner`] executes the grid, and each point's
-//! [`scenario::SweepRecord`] carries the layout, the step-time
-//! decomposition, shard imbalance, a contention-checked collective time
-//! and the predicted benchmark seconds. `tpu-pod-train sweep` emits the
-//! JSON report; `rust/src/scenario/README.md` maps sweeps to the paper's
-//! figures.
+//! [`scenario::SweepRecord`] carries the layout, participating vs surplus
+//! cores, the per-phase step-time attribution (with each phase's group
+//! size), shard imbalance, a contention-checked collective time and the
+//! predicted benchmark seconds. `tpu-pod-train sweep` emits the JSON
+//! report and `sweep --compare baseline.json` diffs it against a prior
+//! run (nonzero exit on regression); `rust/src/scenario/README.md` maps
+//! sweeps to the paper's figures and documents the attribution schema.
 //!
 //! The test matrix:
 //! * unit tests inside every module (the substrate contracts),
@@ -42,6 +53,7 @@ pub mod checkpoint;
 pub mod collectives;
 pub mod config;
 pub mod coordinator;
+pub mod costs;
 pub mod data;
 pub mod devicesim;
 pub mod evaluation;

@@ -16,7 +16,9 @@ use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
 use tpu_pod_train::models::{all_models, model};
 use tpu_pod_train::optim::{AdamConfig, LarsConfig, LarsVariant};
 use tpu_pod_train::runtime::Manifest;
-use tpu_pod_train::scenario::{BatchSchedule, GradSumChoice, ScalingScenario, SweepRunner};
+use tpu_pod_train::scenario::{
+    compare_reports, BatchSchedule, GradSumChoice, ScalingScenario, SweepReport, SweepRunner,
+};
 use tpu_pod_train::simulator::{simulate, SimOptions};
 use tpu_pod_train::util::cli::Cli;
 
@@ -178,14 +180,29 @@ fn cmd_simulate(tokens: &[String]) -> i32 {
     let r = simulate(&m, a.get_usize("cores", 2048), &opts);
     println!("{name} @ {} cores: layout {:?}", r.cores, r.layout);
     println!(
-        "  epochs {:.1}, steps {:.0}, step {:.2} ms (compute {:.2} / gradsum {:.2} / update {:.2})",
+        "  participating {} cores ({} surplus/idle)",
+        r.participating_cores, r.surplus_cores
+    );
+    println!(
+        "  epochs {:.1}, steps {:.0}, step {:.2} ms \
+         (compute {:.2} / halo {:.2} / gradsum {:.2} / update {:.2})",
         r.epochs,
         r.steps,
         r.step_seconds * 1e3,
         r.compute_seconds * 1e3,
+        r.halo_seconds * 1e3,
         r.gradsum_seconds * 1e3,
         r.update_seconds * 1e3
     );
+    println!("  per-phase groups:");
+    for c in &r.phases {
+        println!(
+            "    {:<8} {:>12.4} ms over {} cores",
+            c.phase.label(),
+            c.seconds * 1e3,
+            c.cores
+        );
+    }
     println!(
         "  eval {:.1}s, infra {:.1}s → benchmark {:.1}s",
         r.eval_seconds, r.infra_seconds, r.benchmark_seconds
@@ -199,6 +216,8 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
         .opt("chips", "16,64,256,1024", "comma-separated TPU-v3 chip counts (2 cores/chip)")
         .opt("batch", "0", "fixed global batch (0 = submission layout policy)")
         .opt("out", "", "also write the JSON report to this file")
+        .opt("compare", "", "baseline SweepReport JSON to diff against (exit 1 on regression)")
+        .opt("tolerance", "0.02", "relative benchmark-seconds regression tolerance for --compare")
         .flag("serial-gradsum", "expose the non-contiguous gathers (no pipelining)")
         .flag("no-2d", "use the 1-D ring gradient-summation schedule")
         .flag("no-wus", "disable weight-update sharding")
@@ -280,6 +299,34 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
             return 1;
         }
         eprintln!("report written to {out}");
+    }
+    let baseline_path = a.get_or("compare", "");
+    if !baseline_path.is_empty() {
+        let baseline = match SweepReport::load(&baseline_path) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("loading baseline: {e}");
+                return 2;
+            }
+        };
+        let tolerance = a.get_f64("tolerance", 0.02);
+        let cmp = compare_reports(&baseline, &report, tolerance);
+        cmp.table().print();
+        if cmp.only_in_base + cmp.only_in_new > 0 {
+            eprintln!(
+                "note: {} baseline point(s) unmatched, {} new point(s) unmatched",
+                cmp.only_in_base, cmp.only_in_new
+            );
+        }
+        let regressions = cmp.regressions();
+        if regressions > 0 {
+            eprintln!(
+                "{regressions} point(s) regressed beyond {:.1}% tolerance",
+                100.0 * tolerance
+            );
+            return 1;
+        }
+        eprintln!("no regressions beyond {:.1}% tolerance", 100.0 * tolerance);
     }
     0
 }

@@ -6,6 +6,12 @@
 //! Constants are public TPU-v3 figures; absolute times are estimates, but
 //! the *ratios* the paper reports (pipelined vs. serial, 1-D vs. 2-D) fall
 //! out of the structure, which is what the benches assert.
+//!
+//! The simulator consumes this model through `costs::GradSumPhase`, which
+//! builds the [`CostModel`] over the *participating* torus of a layout
+//! (surplus chips carry no all-reduce traffic); the event-driven
+//! contention check in `scenario::gradsum_contention_makespan` validates
+//! the 4-phase 2-D schedule's overlap assumptions link by link.
 
 use super::torus::Torus;
 

@@ -9,11 +9,14 @@
 //!   × a batch schedule × the §2 optimization toggles. Validated up
 //!   front, so a sweep either runs completely or fails with a message.
 //! * [`SweepRunner`] / [`run_scenario`] — execute the scenario grid; each
-//!   point yields a [`SweepRecord`] (layout, step-time decomposition,
+//!   point yields a [`SweepRecord`] (layout, participating vs surplus
+//!   cores, per-phase step-time attribution with each phase's group size,
 //!   shard imbalance, contention-checked collective time, predicted
 //!   epochs-to-quality, benchmark seconds).
 //! * [`SweepReport`] — the record set with JSON serialization
-//!   (`tpu-pod-train sweep` writes these; golden-trace tests pin them).
+//!   (`tpu-pod-train sweep` writes these; golden-trace tests pin them),
+//!   plus [`compare_reports`] — the `sweep --compare baseline.json` diff
+//!   engine every perf PR uses to prove its win.
 //!
 //! How sweeps map to the paper:
 //!
@@ -35,7 +38,8 @@ pub use presets::{
     table1_scenarios,
 };
 pub use runner::{
-    gradsum_contention_makespan, run_scenario, sweep_point, SweepRecord, SweepReport, SweepRunner,
+    compare_reports, gradsum_contention_makespan, run_scenario, sweep_point, PointDiff,
+    SweepComparison, SweepRecord, SweepReport, SweepRunner,
 };
 
 use crate::models::registry::{model, Layout, ModelProfile, Optimizer};
@@ -149,12 +153,17 @@ impl ScalingScenario {
         if self.chips.is_empty() {
             return Err(format!("scenario {:?}: empty chip list", self.name));
         }
-        for &c in &self.chips {
+        for (i, &c) in self.chips.iter().enumerate() {
             if c == 0 || !c.is_power_of_two() {
                 return Err(format!(
                     "scenario {:?}: chip count {c} must be a nonzero power of two",
                     self.name
                 ));
+            }
+            // Duplicate points would collide in reports and in the
+            // `sweep --compare` (scenario, chips) match keys.
+            if self.chips[..i].contains(&c) {
+                return Err(format!("scenario {:?}: duplicate chip count {c}", self.name));
             }
         }
         if let BatchSchedule::Fixed(b) = self.batch {
@@ -200,10 +209,11 @@ impl ScalingScenario {
 /// replicas are capped by the batch (surplus cores idle), no model
 /// parallelism.
 ///
-/// Known limitation: when `cores > global_batch` the simulator still
-/// prices weight-update sharding, distributed eval and the torus
-/// collectives over all `cores`, not the participating replicas — see
-/// ROADMAP.md "Idle-core accounting".
+/// When `cores > global_batch`, the surplus cores hold no replica; the
+/// `costs::PodLayout` participation accounting prices every phase over
+/// the `replicas * mp` participating cores, so idle cores buy no
+/// gradsum/update/eval time (the record reports them as
+/// `surplus_cores`).
 pub fn fixed_batch_layout(cores: usize, global_batch: usize) -> Layout {
     let replicas = cores.min(global_batch).max(1);
     Layout { cores, mp: 1, replicas, global_batch }
@@ -232,6 +242,7 @@ mod tests {
         assert!(ScalingScenario::submission("ssd", vec![]).validate().is_err());
         assert!(ScalingScenario::submission("ssd", vec![48]).validate().is_err());
         assert!(ScalingScenario::submission("ssd", vec![0]).validate().is_err());
+        assert!(ScalingScenario::submission("ssd", vec![64, 64]).validate().is_err());
     }
 
     #[test]

@@ -1,13 +1,15 @@
 //! Sweep execution: run a [`ScalingScenario`] grid point-by-point, record
-//! the full step-time decomposition per point, and serialize JSON reports
-//! (the `sweep` subcommand's output and the golden-trace test fixtures).
+//! the full per-phase step-time attribution per point, and serialize JSON
+//! reports (the `sweep` subcommand's output and the golden-trace test
+//! fixtures). Also the `sweep --compare` diff engine: load a prior
+//! [`SweepReport`] and report per-point benchmark and per-phase deltas.
 
 use crate::benchkit::Table;
+use crate::costs::{shard_imbalance, Phase};
 use crate::models::registry::ModelProfile;
 use crate::netsim::{Dir, Message, NetParams, NetSim, Torus};
 use crate::simulator::simulate;
 use crate::util::json::{obj, Json};
-use crate::wus::ShardPlan;
 
 use super::ScalingScenario;
 
@@ -24,24 +26,35 @@ pub struct SweepRecord {
     pub replicas: usize,
     pub global_batch: usize,
     pub per_replica_batch: f64,
+    /// Cores that hold a replica shard and do per-step work; every phase
+    /// below is priced over its participating group, never raw `cores`.
+    pub participating_cores: usize,
+    pub surplus_cores: usize,
     /// Predicted epochs-to-quality (infinite = does not converge).
     pub epochs: f64,
     pub steps: f64,
     pub step_seconds: f64,
     pub compute_seconds: f64,
+    /// Spatial-partition halo + distributed-BN communication per step.
+    pub halo_seconds: f64,
     pub gradsum_seconds: f64,
     pub update_seconds: f64,
     pub eval_seconds: f64,
     pub infra_seconds: f64,
     pub benchmark_seconds: f64,
     pub converged: bool,
-    /// Weight-update shard imbalance (max/min shard elements) at this
-    /// core count, from the model's gradient tensor census.
+    /// Group sizes each phase was priced over (per-phase attribution).
+    pub gradsum_cores: usize,
+    pub update_shards: usize,
+    pub eval_cores: usize,
+    /// Weight-update shard imbalance (max/min shard elements) over the
+    /// participating shards, from the model's gradient tensor census.
     pub shard_imbalance: f64,
     /// Spatial-partition speedup of the chosen mp degree (1.0 = pure DP).
     pub spatial_speedup: f64,
     /// Contention-validated gradient all-reduce time from the
-    /// event-driven link simulator (see [`gradsum_contention_makespan`]).
+    /// event-driven link simulator (see [`gradsum_contention_makespan`]),
+    /// over the participating torus.
     pub collective_makespan_seconds: f64,
 }
 
@@ -65,20 +78,75 @@ impl SweepRecord {
             ("replicas", Json::from(self.replicas)),
             ("global_batch", Json::from(self.global_batch)),
             ("per_replica_batch", num(self.per_replica_batch)),
+            ("participating_cores", Json::from(self.participating_cores)),
+            ("surplus_cores", Json::from(self.surplus_cores)),
             ("epochs", num(self.epochs)),
             ("steps", num(self.steps)),
             ("step_seconds", num(self.step_seconds)),
             ("compute_seconds", num(self.compute_seconds)),
+            ("halo_seconds", num(self.halo_seconds)),
             ("gradsum_seconds", num(self.gradsum_seconds)),
             ("update_seconds", num(self.update_seconds)),
             ("eval_seconds", num(self.eval_seconds)),
             ("infra_seconds", num(self.infra_seconds)),
             ("benchmark_seconds", num(self.benchmark_seconds)),
             ("converged", Json::Bool(self.converged)),
+            ("gradsum_cores", Json::from(self.gradsum_cores)),
+            ("update_shards", Json::from(self.update_shards)),
+            ("eval_cores", Json::from(self.eval_cores)),
             ("shard_imbalance", num(self.shard_imbalance)),
             ("spatial_speedup", num(self.spatial_speedup)),
             ("collective_makespan_seconds", num(self.collective_makespan_seconds)),
         ])
+    }
+
+    /// Parse a record back from report JSON. Null numerics (DNF points)
+    /// become infinity; keys absent from older-schema baselines become
+    /// NaN ("unknown"), which the compare engine skips.
+    pub fn from_json(j: &Json) -> Result<SweepRecord, String> {
+        let text = |k: &str| -> Result<String, String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(String::from)
+                .ok_or_else(|| format!("record missing string field {k:?}"))
+        };
+        let num = |k: &str| -> f64 {
+            match j.get(k) {
+                Some(Json::Num(x)) => *x,
+                Some(Json::Null) => f64::INFINITY,
+                _ => f64::NAN,
+            }
+        };
+        let int = |k: &str| j.get(k).and_then(Json::as_usize).unwrap_or(0);
+        Ok(SweepRecord {
+            scenario: text("scenario")?,
+            model: text("model")?,
+            chips: int("chips"),
+            cores: int("cores"),
+            mp: int("mp"),
+            replicas: int("replicas"),
+            global_batch: int("global_batch"),
+            per_replica_batch: num("per_replica_batch"),
+            participating_cores: int("participating_cores"),
+            surplus_cores: int("surplus_cores"),
+            epochs: num("epochs"),
+            steps: num("steps"),
+            step_seconds: num("step_seconds"),
+            compute_seconds: num("compute_seconds"),
+            halo_seconds: num("halo_seconds"),
+            gradsum_seconds: num("gradsum_seconds"),
+            update_seconds: num("update_seconds"),
+            eval_seconds: num("eval_seconds"),
+            infra_seconds: num("infra_seconds"),
+            benchmark_seconds: num("benchmark_seconds"),
+            converged: j.get("converged").and_then(Json::as_bool).unwrap_or(false),
+            gradsum_cores: int("gradsum_cores"),
+            update_shards: int("update_shards"),
+            eval_cores: int("eval_cores"),
+            shard_imbalance: num("shard_imbalance"),
+            spatial_speedup: num("spatial_speedup"),
+            collective_makespan_seconds: num("collective_makespan_seconds"),
+        })
     }
 }
 
@@ -91,7 +159,7 @@ pub struct SweepReport {
 impl SweepReport {
     pub fn to_json(&self) -> Json {
         obj(vec![
-            ("version", Json::from(1usize)),
+            ("version", Json::from(2usize)),
             ("records", Json::Arr(self.records.iter().map(SweepRecord::to_json).collect())),
         ])
     }
@@ -105,20 +173,44 @@ impl SweepReport {
         std::fs::write(path, self.dump())
     }
 
+    /// Parse a report produced by [`SweepReport::dump`] (any schema
+    /// version — missing per-phase fields read as unknown).
+    pub fn parse(text: &str) -> Result<SweepReport, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let records = j
+            .get("records")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "report has no records array".to_string())?;
+        let records: Result<Vec<SweepRecord>, String> =
+            records.iter().map(SweepRecord::from_json).collect();
+        Ok(SweepReport { records: records? })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<SweepReport, String> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        SweepReport::parse(&text)
+    }
+
     /// Human-readable summary table (one row per point).
     pub fn table(&self, title: &str) -> Table {
         let mut t = Table::new(
             title,
-            &["scenario", "chips", "cores", "batch", "mp", "epochs", "step ms", "bench s"],
+            &["scenario", "chips", "active/cores", "batch", "mp", "epochs", "step ms", "bench s"],
         );
         for r in &self.records {
             t.row(&[
                 r.scenario.clone(),
                 r.chips.to_string(),
-                r.cores.to_string(),
+                format!("{}/{}", r.participating_cores, r.cores),
                 r.global_batch.to_string(),
                 r.mp.to_string(),
-                if r.epochs.is_finite() { format!("{:.1}", r.epochs) } else { "DNF".into() },
+                if r.epochs.is_finite() {
+                    format!("{:.1}", r.epochs)
+                } else {
+                    "DNF".into()
+                },
                 format!("{:.3}", r.step_seconds * 1e3),
                 if r.benchmark_seconds.is_finite() {
                     format!("{:.1}", r.benchmark_seconds)
@@ -180,43 +272,85 @@ pub fn sweep_point(s: &ScalingScenario, m: &ModelProfile, chips: usize) -> Sweep
         replicas: r.layout.replicas,
         global_batch: r.layout.global_batch,
         per_replica_batch: r.layout.per_replica_batch(),
+        participating_cores: r.participating_cores,
+        surplus_cores: r.surplus_cores,
         epochs: r.epochs,
         steps: r.steps,
         step_seconds: r.step_seconds,
         compute_seconds: r.compute_seconds,
+        halo_seconds: r.halo_seconds,
         gradsum_seconds: r.gradsum_seconds,
         update_seconds: r.update_seconds,
         eval_seconds: r.eval_seconds,
         infra_seconds: r.infra_seconds,
         benchmark_seconds: r.benchmark_seconds,
         converged: r.converged,
-        shard_imbalance: shard_imbalance(m, cores),
+        gradsum_cores: r.phase_cores(Phase::GradSum),
+        update_shards: r.phase_cores(Phase::WeightUpdate),
+        eval_cores: r.phase_cores(Phase::Eval),
+        shard_imbalance: shard_imbalance(m, r.participating_cores),
         spatial_speedup: r.spatial_speedup,
         collective_makespan_seconds: gradsum_contention_makespan(
             m.params * 4.0,
-            chips,
+            (r.participating_cores / 2).max(1),
             s.gradsum.is_2d(),
         ),
     }
 }
 
-/// Weight-update shard imbalance at `cores` shards over the model's
-/// gradient tensor census (paper §2 Fig. 4: contiguous element-balanced
-/// shards of the flat parameter space).
-fn shard_imbalance(m: &ModelProfile, cores: usize) -> f64 {
-    let sizes: Vec<usize> =
-        m.gradient_bytes().iter().map(|&b| ((b / 4.0) as usize).max(1)).collect();
-    ShardPlan::balanced(&sizes, cores.max(1)).imbalance()
+/// One ring step under contention: every chip ships half a `chunk_bytes`
+/// payload to each neighbor along `dir_plus`/`dir_minus` simultaneously
+/// (the bidirectional ring the analytic model assumes). Returns the
+/// event-driven makespan of the batch.
+fn bidirectional_ring_step(
+    torus: &Torus,
+    ring_len: usize,
+    dir_plus: Dir,
+    dir_minus: Dir,
+    chunk_bytes: f64,
+    p: &NetParams,
+) -> f64 {
+    if ring_len <= 1 {
+        return 0.0;
+    }
+    let mut sim = NetSim::new(*torus, p.link_bw, p.link_latency);
+    let msgs: Vec<Message> = torus
+        .coords()
+        .flat_map(|c| {
+            [
+                Message {
+                    src: c,
+                    dst: torus.step(c, dir_plus),
+                    bytes: chunk_bytes / 2.0,
+                    ready_at: 0.0,
+                },
+                Message {
+                    src: c,
+                    dst: torus.step(c, dir_minus),
+                    bytes: chunk_bytes / 2.0,
+                    ready_at: 0.0,
+                },
+            ]
+        })
+        .collect();
+    sim.makespan(&msgs)
 }
 
 /// Contention check from the event-driven link simulator, matching the
 /// scenario's gradient-summation schedule.
 ///
-/// * 2-D (`two_d = true`): one ring step of phase 1 is every chip
-///   shipping a 1/nx payload chunk to its +x neighbor simultaneously; the
-///   analytic model assumes those transfers overlap perfectly, and
-///   [`NetSim`] verifies it (the makespan of the batch equals one
-///   transfer). The full all-reduce is `2(nx-1) + 2(ny-1)` such steps.
+/// * 2-D (`two_d = true`): the full 4-phase schedule of
+///   `CostModel::all_reduce(ArAlgo::Torus2D, ..)` — reduce-scatter along
+///   the X rings (`nx - 1` bidirectional steps of `1/nx` chunks), reduce-
+///   scatter of the shard along the Y rings (`ny - 1` steps of
+///   `1/(nx*ny)` chunks), then the two matching all-gather phases in
+///   reverse. Every step is simulated as a batch of simultaneous
+///   neighbor transfers; the analytic model assumes they overlap
+///   perfectly and [`NetSim`] verifies it (the makespan of each batch
+///   equals one transfer), so with both torus dimensions >= 4 the total
+///   equals the analytic time minus its per-phase software overheads.
+///   On a 2-wide dimension the +/- half-chunks fold onto one link under
+///   shortest-path routing and honestly serialize.
 /// * 1-D (`two_d = false`): the single ring over all chips in row-major
 ///   order, `2(n-1)` steps of 1/n chunks; the wrap hop at each row end
 ///   crosses two links (the embedding cost the 2-D schedule avoids),
@@ -228,18 +362,28 @@ pub fn gradsum_contention_makespan(payload_bytes: f64, chips: usize, two_d: bool
         return 0.0;
     }
     let p = NetParams::default();
-    let mut sim = NetSim::new(torus, p.link_bw, p.link_latency);
     if two_d {
-        let bytes = payload_bytes / torus.nx as f64;
-        let msgs: Vec<Message> = torus
-            .coords()
-            .map(|c| Message { src: c, dst: torus.step(c, Dir::XPlus), bytes, ready_at: 0.0 })
-            .collect();
-        let one_step = sim.makespan(&msgs);
-        let ring_steps = 2 * (torus.nx - 1) + 2 * torus.ny.saturating_sub(1);
-        one_step * ring_steps as f64
+        let x_step = bidirectional_ring_step(
+            &torus,
+            torus.nx,
+            Dir::XPlus,
+            Dir::XMinus,
+            payload_bytes / torus.nx as f64,
+            &p,
+        );
+        let y_step = bidirectional_ring_step(
+            &torus,
+            torus.ny,
+            Dir::YPlus,
+            Dir::YMinus,
+            payload_bytes / (torus.nx * torus.ny) as f64,
+            &p,
+        );
+        // Phases 1+4 ride the X rings, phases 2+3 the Y rings.
+        2.0 * ((torus.nx - 1) as f64 * x_step + (torus.ny - 1) as f64 * y_step)
     } else {
         let bytes = payload_bytes / n as f64;
+        let mut sim = NetSim::new(torus, p.link_bw, p.link_latency);
         let msgs: Vec<Message> = (0..n)
             .map(|i| Message {
                 src: torus.coord(i),
@@ -251,6 +395,143 @@ pub fn gradsum_contention_makespan(payload_bytes: f64, chips: usize, two_d: bool
         let one_step = sim.makespan(&msgs);
         one_step * (2 * (n - 1)) as f64
     }
+}
+
+/// One point's diff between a baseline and a new report.
+#[derive(Clone, Debug)]
+pub struct PointDiff {
+    pub scenario: String,
+    pub chips: usize,
+    pub base_benchmark: f64,
+    pub new_benchmark: f64,
+    /// (phase label, base seconds, new seconds) for the per-phase fields.
+    pub phase_deltas: Vec<(&'static str, f64, f64)>,
+    pub regression: bool,
+}
+
+impl PointDiff {
+    /// Relative benchmark-seconds change (positive = slower).
+    pub fn benchmark_delta(&self) -> f64 {
+        rel_delta(self.base_benchmark, self.new_benchmark)
+    }
+}
+
+fn rel_delta(base: f64, new: f64) -> f64 {
+    if base.is_finite() && new.is_finite() && base != 0.0 {
+        (new - base) / base
+    } else {
+        f64::NAN
+    }
+}
+
+fn fmt_delta(base: f64, new: f64) -> String {
+    let d = rel_delta(base, new);
+    if d.is_nan() {
+        "—".to_string()
+    } else {
+        format!("{:+.2}%", 100.0 * d)
+    }
+}
+
+/// A full baseline-vs-new comparison (the `sweep --compare` engine).
+#[derive(Clone, Debug)]
+pub struct SweepComparison {
+    pub diffs: Vec<PointDiff>,
+    /// Baseline points with no match in the new report, and vice versa.
+    pub only_in_base: usize,
+    pub only_in_new: usize,
+    pub tolerance: f64,
+}
+
+impl SweepComparison {
+    pub fn regressions(&self) -> usize {
+        self.diffs.iter().filter(|d| d.regression).count()
+    }
+
+    /// Per-point table: benchmark seconds and per-phase deltas.
+    pub fn table(&self) -> Table {
+        let headers = [
+            "scenario", "chips", "base s", "new s", "Δbench", "compute", "halo", "gradsum",
+            "update", "eval", "verdict",
+        ];
+        let mut t = Table::new(
+            &format!("Sweep diff vs baseline (tolerance {:.1}%)", 100.0 * self.tolerance),
+            &headers,
+        );
+        for d in &self.diffs {
+            let phase = |label: &str| {
+                d.phase_deltas
+                    .iter()
+                    .find(|(l, _, _)| *l == label)
+                    .map(|&(_, b, n)| fmt_delta(b, n))
+                    .unwrap_or_else(|| "—".to_string())
+            };
+            let fmt_s = |x: f64| {
+                if x.is_finite() {
+                    format!("{x:.1}")
+                } else {
+                    "DNF".to_string()
+                }
+            };
+            t.row(&[
+                d.scenario.clone(),
+                d.chips.to_string(),
+                fmt_s(d.base_benchmark),
+                fmt_s(d.new_benchmark),
+                fmt_delta(d.base_benchmark, d.new_benchmark),
+                phase("compute"),
+                phase("halo"),
+                phase("gradsum"),
+                phase("update"),
+                phase("eval"),
+                if d.regression { "REGRESSION".into() } else { "ok".to_string() },
+            ]);
+        }
+        t
+    }
+}
+
+/// Diff a new report against a baseline: points are matched by
+/// (scenario, chips); a point regresses when its benchmark seconds grow
+/// beyond `tolerance` (relative), or when a converged baseline point
+/// stops converging.
+pub fn compare_reports(
+    base: &SweepReport,
+    new: &SweepReport,
+    tolerance: f64,
+) -> SweepComparison {
+    use std::collections::BTreeMap;
+    let mut new_by_key: BTreeMap<(String, usize), &SweepRecord> = BTreeMap::new();
+    for r in &new.records {
+        new_by_key.entry((r.scenario.clone(), r.chips)).or_insert(r);
+    }
+    let mut diffs = Vec::new();
+    let mut only_in_base = 0;
+    for b in &base.records {
+        let Some(n) = new_by_key.remove(&(b.scenario.clone(), b.chips)) else {
+            only_in_base += 1;
+            continue;
+        };
+        let regression = (b.benchmark_seconds.is_finite()
+            && n.benchmark_seconds.is_finite()
+            && n.benchmark_seconds > b.benchmark_seconds * (1.0 + tolerance))
+            || (b.benchmark_seconds.is_finite() && !n.benchmark_seconds.is_finite());
+        diffs.push(PointDiff {
+            scenario: b.scenario.clone(),
+            chips: b.chips,
+            base_benchmark: b.benchmark_seconds,
+            new_benchmark: n.benchmark_seconds,
+            phase_deltas: vec![
+                ("compute", b.compute_seconds, n.compute_seconds),
+                ("halo", b.halo_seconds, n.halo_seconds),
+                ("gradsum", b.gradsum_seconds, n.gradsum_seconds),
+                ("update", b.update_seconds, n.update_seconds),
+                ("eval", b.eval_seconds, n.eval_seconds),
+            ],
+            regression,
+        });
+    }
+    SweepComparison { diffs, only_in_base, only_in_new: new_by_key.len(), tolerance }
 }
 
 #[cfg(test)]
@@ -270,7 +551,10 @@ mod tests {
             assert!(r.step_seconds > 0.0);
             assert!(
                 (r.step_seconds
-                    - (r.compute_seconds + r.gradsum_seconds + r.update_seconds))
+                    - (r.compute_seconds
+                        + r.halo_seconds
+                        + r.gradsum_seconds
+                        + r.update_seconds))
                     .abs()
                     < 1e-12
             );
@@ -301,6 +585,22 @@ mod tests {
         assert_eq!(recs[0].global_batch, 4096);
         assert_eq!(recs[0].mp, 1);
         assert_eq!(recs[0].replicas, 128);
+        assert_eq!(recs[0].participating_cores, 128);
+        assert_eq!(recs[0].surplus_cores, 0);
+    }
+
+    #[test]
+    fn surplus_cores_reported_and_phases_priced_over_participants() {
+        // Fixed batch 128 on 512 cores: 384 cores idle; every phase group
+        // must be the participating 128, not the machine 512.
+        let s = ScalingScenario::submission("resnet50", vec![256])
+            .with_batch(BatchSchedule::Fixed(128));
+        let r = run_scenario(&s).unwrap().remove(0);
+        assert_eq!(r.participating_cores, 128);
+        assert_eq!(r.surplus_cores, 384);
+        assert_eq!(r.gradsum_cores, 128);
+        assert_eq!(r.update_shards, 128);
+        assert_eq!(r.eval_cores, 128);
     }
 
     #[test]
@@ -321,6 +621,7 @@ mod tests {
         let recs = run_scenario(&s).unwrap();
         assert!(recs[0].mp > 1);
         assert!(recs[0].spatial_speedup > 1.0);
+        assert!(recs[0].halo_seconds > 0.0);
     }
 
     #[test]
@@ -354,16 +655,80 @@ mod tests {
     fn report_round_trips_through_json() {
         let s = ScalingScenario::submission("transformer", vec![256, 1024]);
         let report = SweepRunner::single(s).run().unwrap();
-        let parsed = Json::parse(&report.dump()).unwrap();
-        let recs = parsed.get("records").unwrap().as_arr().unwrap();
-        assert_eq!(recs.len(), 2);
-        assert_eq!(recs[1].get("cores").unwrap().as_usize(), Some(2048));
-        assert_eq!(recs[1].get("global_batch").unwrap().as_usize(), Some(2048));
+        let parsed = SweepReport::parse(&report.dump()).unwrap();
+        assert_eq!(parsed.records.len(), 2);
+        for (a, b) in report.records.iter().zip(&parsed.records) {
+            assert_eq!(a.to_json(), b.to_json());
+        }
+        assert_eq!(parsed.records[1].cores, 2048);
+        assert_eq!(parsed.records[1].global_batch, 2048);
     }
 
     #[test]
-    fn runner_surfaces_validation_errors() {
-        let bad = ScalingScenario::submission("nope", vec![16]);
-        assert!(SweepRunner::single(bad).run().is_err());
+    fn compare_reports_flags_only_real_regressions() {
+        let s = ScalingScenario::submission("resnet50", vec![64, 256]);
+        let base = SweepRunner::single(s).run().unwrap();
+        // Identical reports: no regressions.
+        let same = compare_reports(&base, &base, 0.01);
+        assert_eq!(same.regressions(), 0);
+        assert_eq!(same.diffs.len(), 2);
+        assert_eq!((same.only_in_base, same.only_in_new), (0, 0));
+        // Slow one point down beyond tolerance.
+        let mut slower = base.clone();
+        slower.records[1].benchmark_seconds *= 1.10;
+        slower.records[1].gradsum_seconds *= 2.0;
+        let cmp = compare_reports(&base, &slower, 0.05);
+        assert_eq!(cmp.regressions(), 1);
+        let d = cmp.diffs.iter().find(|d| d.regression).unwrap();
+        assert_eq!(d.chips, 256);
+        assert!((d.benchmark_delta() - 0.10).abs() < 1e-9);
+        // Speedups are not regressions.
+        let mut faster = base.clone();
+        faster.records[0].benchmark_seconds *= 0.5;
+        assert_eq!(compare_reports(&base, &faster, 0.05).regressions(), 0);
+    }
+
+    #[test]
+    fn compare_reports_treats_dnf_transition_as_regression() {
+        let s = ScalingScenario::submission("resnet50", vec![64]);
+        let base = SweepRunner::single(s).run().unwrap();
+        let mut broken = base.clone();
+        broken.records[0].benchmark_seconds = f64::INFINITY;
+        broken.records[0].converged = false;
+        assert_eq!(compare_reports(&base, &broken, 0.05).regressions(), 1);
+    }
+
+    #[test]
+    fn compare_reports_counts_unmatched_points() {
+        let s = ScalingScenario::submission("resnet50", vec![64, 256]);
+        let base = SweepRunner::single(s).run().unwrap();
+        let mut partial = base.clone();
+        partial.records.truncate(1);
+        let cmp = compare_reports(&base, &partial, 0.05);
+        assert_eq!(cmp.only_in_base, 1);
+        assert_eq!(cmp.only_in_new, 0);
+        let cmp = compare_reports(&partial, &base, 0.05);
+        assert_eq!(cmp.only_in_base, 0);
+        assert_eq!(cmp.only_in_new, 1);
+    }
+
+    #[test]
+    fn old_schema_baselines_parse_with_unknown_phases() {
+        // A version-1 report (pre per-phase attribution) still loads; the
+        // absent halo field reads as NaN and its delta renders as "—".
+        let old = r#"{"version":1,"records":[{"scenario":"s","model":"resnet50",
+            "chips":64,"cores":128,"mp":1,"replicas":128,"global_batch":2048,
+            "per_replica_batch":16.0,"epochs":42.0,"steps":100.0,
+            "step_seconds":0.01,"compute_seconds":0.008,
+            "gradsum_seconds":0.001,"update_seconds":0.001,
+            "eval_seconds":1.0,"infra_seconds":3.0,"benchmark_seconds":10.0,
+            "converged":true,"shard_imbalance":1.0,"spatial_speedup":1.0,
+            "collective_makespan_seconds":0.001}]}"#;
+        let report = SweepReport::parse(old).unwrap();
+        assert_eq!(report.records.len(), 1);
+        assert!(report.records[0].halo_seconds.is_nan());
+        assert_eq!(report.records[0].participating_cores, 0);
+        let cmp = compare_reports(&report, &report, 0.05);
+        assert_eq!(cmp.regressions(), 0);
     }
 }

@@ -7,11 +7,18 @@
 //! * weight-update sharding on/off,
 //! * distributed in-loop eval vs side-card eval,
 //! * spatial partitioning (per the model's layout policy).
+//!
+//! All pricing goes through the participation-aware [`crate::costs`]
+//! layer: a [`PodLayout`] derives the participating core set from the
+//! layout, and a [`CostStack`] of [`crate::costs::StepCostModel`]s prices
+//! each phase over its own group — surplus cores (fixed-batch strong
+//! scaling, the no-spatial ablation) no longer shrink gradsum, weight
+//! update or eval time.
 
-use crate::devicesim::{step_model, weight_update_cost, Device, TPU_V3};
+use crate::costs::{spatial_factors, CostConfig, CostStack, Phase, PhaseCost, PodLayout};
+use crate::devicesim::TPU_V3;
 use crate::models::registry::{Layout, ModelProfile};
-use crate::netsim::{ArAlgo, CostModel, GradSumModel, NetParams, Torus};
-use crate::spatial::plan::{maskrcnn_stage1_layers, plan, ssd_layers};
+use crate::netsim::ArAlgo;
 
 /// Optimization toggles (all true = the Google submission config).
 #[derive(Clone, Copy, Debug)]
@@ -42,16 +49,35 @@ impl Default for SimOptions {
     }
 }
 
+impl SimOptions {
+    /// The cost-layer configuration these toggles select.
+    pub fn cost_config(&self) -> CostConfig {
+        CostConfig {
+            gradsum_algo: if self.gradsum_2d { ArAlgo::Torus2D } else { ArAlgo::Ring1D },
+            gradsum_pipelined: self.gradsum_pipelined,
+            weight_update_sharding: self.weight_update_sharding,
+            distributed_eval: self.distributed_eval,
+            spatial_partitioning: self.spatial_partitioning,
+            ..CostConfig::default()
+        }
+    }
+}
+
 /// Simulation output for one (model, core-count) point.
 #[derive(Clone, Debug)]
 pub struct SimResult {
     pub model: &'static str,
     pub cores: usize,
     pub layout: Layout,
+    /// Cores that hold a replica shard (surplus cores idle).
+    pub participating_cores: usize,
+    pub surplus_cores: usize,
     pub epochs: f64,
     pub steps: f64,
     pub step_seconds: f64,
     pub compute_seconds: f64,
+    /// Spatial-partition halo + distributed-BN communication per step.
+    pub halo_seconds: f64,
     pub gradsum_seconds: f64,
     pub update_seconds: f64,
     pub eval_seconds: f64,
@@ -61,39 +87,25 @@ pub struct SimResult {
     pub converged: bool,
     /// Spatial-partition speedup of the chosen mp degree (1.0 = pure DP).
     pub spatial_speedup: f64,
+    /// The full per-phase price list (per-group attribution).
+    pub phases: Vec<PhaseCost>,
 }
 
-/// Fixed infrastructure overhead per eval in the in-loop scheme (loop
-/// switch) and per eval in the side-card scheme (checkpoint transfer) —
-/// the "infrastructure overheads [that] dominate" (§3 Transformer).
-const INLOOP_EVAL_OVERHEAD_S: f64 = 0.35;
-const SIDECARD_EVAL_OVERHEAD_S: f64 = 6.0;
-/// Cores of the fixed side-card eval slice in the baseline scheme.
-const SIDECARD_CORES: f64 = 16.0;
+impl SimResult {
+    /// Cores the given phase was priced over (0 if the phase is absent).
+    pub fn phase_cores(&self, phase: Phase) -> usize {
+        self.phases.iter().find(|c| c.phase == phase).map(|c| c.cores).unwrap_or(0)
+    }
+}
 
 /// Spatial-partitioning speedup for a model at partition degree mp
 /// (public: the scenario sweep engine and the Fig. 10 bench reuse it).
 pub fn spatial_speedup(model: &ModelProfile, mp: usize) -> f64 {
-    if mp <= 1 {
-        return 1.0;
-    }
-    let dev = TPU_V3;
-    // Halo cost uses a small local neighborhood model.
-    let net = CostModel::new(Torus::new(2, 2), NetParams::default());
-    let layers = match model.name {
-        "ssd" => ssd_layers(),
-        "maskrcnn" => maskrcnn_stage1_layers(),
-        _ => return 1.0,
-    };
-    plan(&layers, mp, &dev, &net).speedup()
+    spatial_factors(model, mp, &TPU_V3).speedup
 }
 
 /// Simulate one model at `cores` TPU-v3 cores (2 cores/chip).
 pub fn simulate(model: &ModelProfile, cores: usize, opts: &SimOptions) -> SimResult {
-    let chips = (cores / 2).max(1);
-    let net = CostModel::new(Torus::for_chips(chips.next_power_of_two()), NetParams::default());
-    let dev: Device = TPU_V3;
-
     let mut layout = model.layout(cores);
     if !opts.spatial_partitioning {
         // Without MP the model cannot exceed its batch-limited replica
@@ -104,6 +116,7 @@ pub fn simulate(model: &ModelProfile, cores: usize, opts: &SimOptions) -> SimRes
     if let Some(l) = opts.layout_override {
         layout = l;
     }
+    let pod = PodLayout::from_layout(&layout);
 
     let epochs = opts
         .epochs_override
@@ -112,56 +125,15 @@ pub fn simulate(model: &ModelProfile, cores: usize, opts: &SimOptions) -> SimRes
     let converged = epochs.is_finite();
     let steps = (model.train_examples as f64 / layout.global_batch as f64).ceil() * epochs;
 
-    // ---- step time -------------------------------------------------------
-    let examples_per_replica = layout.per_replica_batch();
-    let mp_speed = if opts.spatial_partitioning { spatial_speedup(model, layout.mp) } else { 1.0 };
-    let base = step_model(
-        &dev,
-        &net,
-        model.fwd_flops_per_example,
-        model.hbm_bytes_per_example,
-        examples_per_replica,
-        model.util_units_per_example,
-        model.params,
-        model.optimizer.bytes_per_param(),
-        false,
-    );
-    // Model parallelism accelerates the per-replica compute.
-    let compute = base.compute / mp_speed;
-
-    // Gradient summation: schedule choice.
-    let algo = if opts.gradsum_2d { ArAlgo::Torus2D } else { ArAlgo::Ring1D };
-    let gs = GradSumModel { cost: &net, algo };
-    let tensors = model.gradient_bytes();
-    let gradsum =
-        if opts.gradsum_pipelined { gs.pipelined(&tensors) } else { gs.serial(&tensors) };
-
-    // Weight update: replicated vs sharded.
-    let uc = weight_update_cost(&dev, &net, model.params, model.optimizer.bytes_per_param(),
-                                cores);
-    let update = if opts.weight_update_sharding { uc.sharded.min(uc.replicated) }
-                 else { uc.replicated };
-
-    let step_seconds = compute + gradsum + update;
+    // ---- the single pricing path: the §2 cost stack ----------------------
+    let stack = CostStack::standard(&opts.cost_config());
+    let bd = stack.breakdown(model, &pod);
+    let step_seconds = bd.step_seconds();
     let train_seconds = steps * step_seconds;
 
-    // ---- evaluation ------------------------------------------------------
     let n_evals = (epochs / model.eval_interval_epochs).ceil().max(1.0);
-    let eval_flops = model.eval_examples as f64 * model.fwd_flops_per_example;
-    let eval_one = if opts.distributed_eval {
-        // All cores share the eval work (padding overhead ≤ one stride).
-        eval_flops / (cores as f64 * dev.peak_flops * dev.mxu_efficiency)
-            + INLOOP_EVAL_OVERHEAD_S
-    } else {
-        // Side-card: fixed small slice + checkpoint shipping, serialized
-        // into the convergence path (the Amdahl bottleneck of §2).
-        eval_flops / (SIDECARD_CORES * dev.peak_flops * dev.mxu_efficiency)
-            + SIDECARD_EVAL_OVERHEAD_S
-    };
-    let eval_seconds = if converged { n_evals * eval_one } else { 0.0 };
-
-    // Fixed per-run infrastructure inside the measured window.
-    let infra_seconds = 3.0;
+    let eval_seconds = if converged { n_evals * bd.seconds(Phase::Eval) } else { 0.0 };
+    let infra_seconds = bd.seconds(Phase::Infra);
 
     let benchmark_seconds = if converged {
         train_seconds + eval_seconds + infra_seconds
@@ -169,21 +141,31 @@ pub fn simulate(model: &ModelProfile, cores: usize, opts: &SimOptions) -> SimRes
         f64::INFINITY
     };
 
+    let mp_speed = if opts.spatial_partitioning {
+        spatial_factors(model, layout.mp, &TPU_V3).speedup
+    } else {
+        1.0
+    };
+
     SimResult {
         model: model.name,
         cores,
         layout,
+        participating_cores: pod.participating_cores(),
+        surplus_cores: pod.surplus_cores(),
         epochs,
         steps,
         step_seconds,
-        compute_seconds: compute,
-        gradsum_seconds: gradsum,
-        update_seconds: update,
+        compute_seconds: bd.seconds(Phase::Compute),
+        halo_seconds: bd.seconds(Phase::Halo),
+        gradsum_seconds: bd.seconds(Phase::GradSum),
+        update_seconds: bd.seconds(Phase::WeightUpdate),
         eval_seconds,
         infra_seconds,
         benchmark_seconds,
         converged,
         spatial_speedup: mp_speed,
+        phases: bd.phases,
     }
 }
 
@@ -206,6 +188,22 @@ mod tests {
             "resnet50@2048: {:.1}s",
             r.benchmark_seconds
         );
+    }
+
+    #[test]
+    fn step_decomposition_sums_to_step_seconds() {
+        for model in all_models() {
+            let cores = model.max_useful_cores().min(2048);
+            let r = simulate(&model, cores, &SimOptions::default());
+            let sum =
+                r.compute_seconds + r.halo_seconds + r.gradsum_seconds + r.update_seconds;
+            assert!(
+                (r.step_seconds - sum).abs() < 1e-12,
+                "{}: step {} != phase sum {sum}",
+                model.name,
+                r.step_seconds
+            );
+        }
     }
 
     #[test]
@@ -282,6 +280,8 @@ mod tests {
         assert!(with_mp.converged);
         // Without MP the extra cores idle: slower than with MP.
         assert!(without.benchmark_seconds > with_mp.benchmark_seconds);
+        assert!(without.surplus_cores > 0, "idle cores must be visible");
+        assert_eq!(with_mp.surplus_cores, 0);
     }
 
     #[test]
@@ -310,5 +310,45 @@ mod tests {
             &SimOptions { weight_update_sharding: false, ..Default::default() },
         );
         assert!(full.update_seconds < no_wus.update_seconds * 0.6);
+    }
+
+    #[test]
+    fn surplus_cores_do_not_buy_time_under_fixed_batch() {
+        // The tentpole regression guard in unit form: a fixed-batch layout
+        // with 4x the cores (all idle) must price every phase identically.
+        let model = m("resnet50");
+        let fit = Layout { cores: 512, mp: 1, replicas: 512, global_batch: 8192 };
+        let surplus = Layout { cores: 2048, ..fit };
+        let a = simulate(
+            &model,
+            512,
+            &SimOptions { layout_override: Some(fit), ..Default::default() },
+        );
+        let b = simulate(
+            &model,
+            2048,
+            &SimOptions { layout_override: Some(surplus), ..Default::default() },
+        );
+        assert_eq!(a.step_seconds, b.step_seconds);
+        assert_eq!(a.gradsum_seconds, b.gradsum_seconds);
+        assert_eq!(a.update_seconds, b.update_seconds);
+        assert_eq!(a.eval_seconds, b.eval_seconds);
+        assert_eq!(a.benchmark_seconds, b.benchmark_seconds);
+        assert_eq!(b.surplus_cores, 1536);
+    }
+
+    #[test]
+    fn halo_phase_appears_only_with_spatial_partitioning() {
+        let ssd = m("ssd");
+        let full = simulate(&ssd, 2048, &SimOptions::default());
+        assert!(full.layout.mp > 1);
+        assert!(full.halo_seconds > 0.0, "mp > 1 must pay halo");
+        assert_eq!(full.phase_cores(Phase::Halo), full.layout.mp);
+        let no_mp = simulate(
+            &ssd,
+            2048,
+            &SimOptions { spatial_partitioning: false, ..Default::default() },
+        );
+        assert_eq!(no_mp.halo_seconds, 0.0);
     }
 }

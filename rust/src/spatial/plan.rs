@@ -86,6 +86,10 @@ pub struct SpatialPlan {
     pub split: Vec<bool>,
     pub t_single: f64,
     pub t_partitioned: f64,
+    /// Communication share of `t_partitioned`: halo exchanges plus the
+    /// distributed-BN all-reduces (the costs the `costs::HaloPhase`
+    /// attribution reports separately from compute).
+    pub t_comm: f64,
 }
 
 impl SpatialPlan {
@@ -95,6 +99,15 @@ impl SpatialPlan {
 
     pub fn efficiency(&self) -> f64 {
         self.speedup() / self.k as f64
+    }
+
+    /// Fraction of the partitioned step spent communicating (0 for k = 1).
+    pub fn comm_fraction(&self) -> f64 {
+        if self.t_partitioned > 0.0 {
+            self.t_comm / self.t_partitioned
+        } else {
+            0.0
+        }
     }
 }
 
@@ -115,6 +128,7 @@ pub fn plan(layers: &[ConvLayer], k: usize, dev: &Device, net: &CostModel) -> Sp
     assert!(k >= 1);
     let mut t_single = 0.0;
     let mut t_part = 0.0;
+    let mut t_comm = 0.0;
     let mut split = Vec::with_capacity(layers.len());
     for l in layers {
         // fwd+bwd ≈ 3x fwd.
@@ -133,6 +147,7 @@ pub fn plan(layers: &[ConvLayer], k: usize, dev: &Device, net: &CostModel) -> Sp
             // Distributed BN all-reduce across the k spatial workers.
             let bn = net.all_gather(bn_allreduce_bytes(l)) * 2.0;
             t_part += sharded + halo + bn;
+            t_comm += halo + bn;
         } else {
             split.push(false);
             // Unsplittable layer runs replicated (no speedup).
@@ -142,7 +157,7 @@ pub fn plan(layers: &[ConvLayer], k: usize, dev: &Device, net: &CostModel) -> Sp
     if k == 1 {
         t_part = t_single;
     }
-    SpatialPlan { k, split, t_single, t_partitioned: t_part }
+    SpatialPlan { k, split, t_single, t_partitioned: t_part, t_comm }
 }
 
 #[cfg(test)]
@@ -198,6 +213,22 @@ mod tests {
     fn k1_is_identity() {
         let p = plan(&ssd_layers(), 1, &TPU_V3, &net());
         assert_eq!(p.speedup(), 1.0);
+        assert_eq!(p.t_comm, 0.0);
+        assert_eq!(p.comm_fraction(), 0.0);
+    }
+
+    #[test]
+    fn comm_split_is_consistent() {
+        // t_comm is a sub-account of t_partitioned, and it grows with k
+        // (every split layer pays halo + BN).
+        let p2 = plan(&ssd_layers(), 2, &TPU_V3, &net());
+        let p4 = plan(&ssd_layers(), 4, &TPU_V3, &net());
+        for p in [&p2, &p4] {
+            assert!(p.t_comm > 0.0);
+            assert!(p.t_comm < p.t_partitioned);
+            assert!((0.0..1.0).contains(&p.comm_fraction()));
+        }
+        assert!(p4.comm_fraction() > p2.comm_fraction());
     }
 
     #[test]

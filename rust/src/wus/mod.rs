@@ -15,6 +15,10 @@
 //! weights. LARS needs per-tensor norms, which no single shard can see —
 //! they are computed from per-shard partial sums with one small scalar
 //! all-reduce, exactly how the XLA implementation distributes them.
+//!
+//! The simulator side prices this through `costs::WeightUpdatePhase`
+//! (one [`ShardPlan`] shard per *participating* core) and reports the
+//! plan's `imbalance()` per sweep point via `costs::shard_imbalance`.
 
 use std::ops::Range;
 

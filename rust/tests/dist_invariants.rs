@@ -14,6 +14,10 @@ use tpu_pod_train::data::bucket::{batch_bucketized, batch_sequential, total_wast
 use tpu_pod_train::data::synthetic::TranslationTask;
 use tpu_pod_train::evaluation::EvalSharding;
 use tpu_pod_train::fabric::run_spmd;
+use tpu_pod_train::models::{all_models, Layout};
+use tpu_pod_train::netsim::{ArAlgo, CostModel, Dir, Message, NetParams, NetSim, Torus};
+use tpu_pod_train::scenario::gradsum_contention_makespan;
+use tpu_pod_train::simulator::{simulate, SimOptions};
 use tpu_pod_train::testing::forall;
 use tpu_pod_train::util::bf16::{Bf16, BF16_MAX_REL_ERR};
 use tpu_pod_train::util::rng::Rng;
@@ -420,6 +424,152 @@ fn prop_halo_exchange_roundtrip_identity() {
                 if r + 1 < world && below2.as_ref() != Some(bottom) {
                     return Err(format!("rank {r}: bottom rows did not round-trip"));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The event-driven 4-phase 2-D gradient-summation schedule must agree
+/// with the analytic `CostModel::all_reduce(ArAlgo::Torus2D, ..)`: the
+/// analytic model assumes every ring step's bidirectional neighbor
+/// transfers overlap perfectly, and the link simulator prices exactly
+/// those transfers under contention, so the two may differ only by the
+/// analytic model's 4 per-phase software overheads.
+///
+/// Restricted to chips >= 16 so both torus dimensions are >= 4: on a
+/// 2-wide dimension the +/- neighbor is the same chip and the shortest-
+/// path router folds both half-chunks onto one link, where they honestly
+/// serialize — the analytic bidirectional-bandwidth assumption only
+/// holds with distinct +/- links.
+#[test]
+fn prop_contention_2d_schedule_matches_analytic_all_reduce() {
+    forall(
+        60,
+        |rng| {
+            let chips = 1usize << (rng.below(7) + 4); // 16 .. 1024
+            let mbytes = rng.below(400) as usize + 1;
+            (chips, mbytes)
+        },
+        |&(chips, mbytes)| {
+            // Shrinking may propose non-power-of-two or too-small chip
+            // counts; skip those so failures still shrink cleanly.
+            if chips < 16 || !chips.is_power_of_two() {
+                return Ok(());
+            }
+            let bytes = mbytes as f64 * 1e6;
+            let p = NetParams::default();
+            let analytic =
+                CostModel::new(Torus::for_chips(chips), p).all_reduce(ArAlgo::Torus2D, bytes);
+            let event = gradsum_contention_makespan(bytes, chips, true);
+            let expected = analytic - 4.0 * p.phase_overhead;
+            let rel = ((event - expected) / expected.abs().max(1e-15)).abs();
+            if rel > 1e-3 {
+                return Err(format!(
+                    "{chips} chips, {mbytes} MB: event {event} vs analytic-minus-overhead \
+                     {expected} (rel err {rel})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Halo traffic under spatial partitioning: the analytic
+/// `CostModel::halo_exchange` assumes all neighbor transfers overlap.
+/// Drive the link simulator with every chip shipping a halo to all four
+/// neighbors simultaneously — the makespan must equal ONE transfer (plus
+/// link latency), i.e. the analytic time minus its software overhead.
+#[test]
+fn contention_confirms_halo_neighbor_overlap() {
+    // Dimensions >= 4 so the four neighbor directions use four distinct
+    // links (see the 2-D contention property above).
+    for (nx, ny) in [(4usize, 4usize), (8, 4), (8, 8)] {
+        let torus = Torus::new(nx, ny);
+        let p = NetParams::default();
+        let bytes = 2e6;
+        let mut sim = NetSim::new(torus, p.link_bw, p.link_latency);
+        let mut msgs = Vec::new();
+        for c in torus.coords() {
+            for d in [Dir::XPlus, Dir::XMinus, Dir::YPlus, Dir::YMinus] {
+                let dst = torus.step(c, d);
+                if dst != c {
+                    msgs.push(Message { src: c, dst, bytes, ready_at: 0.0 });
+                }
+            }
+        }
+        let event = sim.makespan(&msgs);
+        let analytic = CostModel::new(torus, p).halo_exchange(bytes, 4);
+        let expected = analytic - p.phase_overhead;
+        assert!(
+            ((event - expected) / expected).abs() < 1e-9,
+            "{nx}x{ny}: event {event} vs analytic-minus-overhead {expected}"
+        );
+    }
+}
+
+/// The idle-core regression guard for the participation-aware cost layer:
+/// with a fixed global batch, adding surplus cores beyond `replicas * mp`
+/// must leave every priced phase EXACTLY unchanged (surplus cores hold no
+/// replica and do no work).
+#[test]
+fn prop_idle_cores_leave_phase_pricing_unchanged() {
+    let models = all_models();
+    forall(
+        40,
+        |rng| {
+            let model_idx = rng.below(models.len() as u64) as usize;
+            let replicas = 1usize << (rng.below(6) + 2); // 4 .. 128
+            let batch_mult = 1usize << rng.below(5); // 1x .. 16x replicas
+            let surplus_mult = 1usize << (rng.below(3) + 1); // 2x .. 8x cores
+            (model_idx, (replicas, (batch_mult, surplus_mult)))
+        },
+        |&(model_idx, (replicas, (batch_mult, surplus_mult)))| {
+            let degenerate =
+                model_idx >= models.len() || replicas == 0 || batch_mult == 0 || surplus_mult < 2;
+            if degenerate {
+                return Ok(());
+            }
+            let m = &models[model_idx];
+            let global_batch = replicas * batch_mult;
+            let fit = Layout { cores: replicas, mp: 1, replicas, global_batch };
+            let surplus =
+                Layout { cores: replicas * surplus_mult, mp: 1, replicas, global_batch };
+            let opts = |l: Layout| SimOptions { layout_override: Some(l), ..Default::default() };
+            let a = simulate(m, fit.cores, &opts(fit));
+            let b = simulate(m, surplus.cores, &opts(surplus));
+            if b.surplus_cores != surplus.cores - replicas {
+                return Err(format!(
+                    "{}: surplus {} != {}",
+                    m.name,
+                    b.surplus_cores,
+                    surplus.cores - replicas
+                ));
+            }
+            for (label, x, y) in [
+                ("compute", a.compute_seconds, b.compute_seconds),
+                ("halo", a.halo_seconds, b.halo_seconds),
+                ("gradsum", a.gradsum_seconds, b.gradsum_seconds),
+                ("update", a.update_seconds, b.update_seconds),
+                ("eval", a.eval_seconds, b.eval_seconds),
+                ("step", a.step_seconds, b.step_seconds),
+            ] {
+                if x != y {
+                    return Err(format!(
+                        "{} @ {} replicas, batch {global_batch}: {label} {x} != {y} with \
+                         {} surplus cores",
+                        m.name, replicas, b.surplus_cores
+                    ));
+                }
+            }
+            if a.benchmark_seconds.is_finite() != b.benchmark_seconds.is_finite() {
+                return Err("convergence changed with surplus cores".into());
+            }
+            if a.benchmark_seconds.is_finite() && a.benchmark_seconds != b.benchmark_seconds {
+                return Err(format!(
+                    "benchmark {} != {}",
+                    a.benchmark_seconds, b.benchmark_seconds
+                ));
             }
             Ok(())
         },

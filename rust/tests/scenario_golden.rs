@@ -1,7 +1,13 @@
 //! Golden-trace tests for the scenario sweep engine: one submission sweep
-//! point per model (transformer / ResNet-50 / SSD) is pinned in
+//! point per model (all five MLPerf-0.6 benchmarks) is pinned in
 //! tests/fixtures/*.json, and the engine must reproduce every field of
-//! the record within tolerance. Plus strong-scaling monotonicity checks.
+//! the record within tolerance — including the per-phase participation
+//! attribution (participating/surplus cores, halo split, per-phase group
+//! sizes). Plus strong-scaling monotonicity checks.
+//!
+//! GNMT and Mask-RCNN pin the idle-core accounting: at 1024 chips their
+//! batch-limited layouts occupy only 1024 / 512 of the 2048 cores, so
+//! their fixtures prove surplus cores buy no gradsum/update/eval time.
 //!
 //! Regenerating a fixture after an intentional model change:
 //! `cargo run --release -- sweep --model <model> --chips 1024` and paste
@@ -81,17 +87,62 @@ fn golden_transformer_pod_point() {
     check_golden("transformer");
 }
 
+#[test]
+fn golden_gnmt_pod_point() {
+    check_golden("gnmt");
+}
+
+#[test]
+fn golden_maskrcnn_pod_point() {
+    check_golden("maskrcnn");
+}
+
 /// Structural anchors that must hold regardless of fixture contents (the
 /// paper's §3 layouts at the full pod).
 #[test]
 fn golden_layouts_match_paper() {
     let rn = golden_record("resnet50");
     assert_eq!((rn.mp, rn.replicas, rn.global_batch), (1, 2048, 32768));
+    assert_eq!((rn.participating_cores, rn.surplus_cores), (2048, 0));
     let ssd = golden_record("ssd");
     assert_eq!((ssd.mp, ssd.replicas, ssd.global_batch), (4, 512, 2048));
+    assert!(ssd.halo_seconds > 0.0, "SSD mp 4 must pay halo");
     let tf = golden_record("transformer");
     assert_eq!((tf.mp, tf.replicas, tf.global_batch), (1, 2048, 2048));
     assert!(ssd.spatial_speedup > 1.4 && ssd.spatial_speedup < 1.9);
+    // GNMT's 1024-replica batch wall leaves half the pod idle; Mask-RCNN's
+    // 128-replica x mp-4 layout leaves three quarters idle (paper §3).
+    let gnmt = golden_record("gnmt");
+    assert_eq!((gnmt.mp, gnmt.replicas, gnmt.global_batch), (1, 1024, 1024));
+    assert_eq!((gnmt.participating_cores, gnmt.surplus_cores), (1024, 1024));
+    assert_eq!(gnmt.update_shards, 1024);
+    let mr = golden_record("maskrcnn");
+    assert_eq!((mr.mp, mr.replicas, mr.global_batch), (4, 128, 128));
+    assert_eq!((mr.participating_cores, mr.surplus_cores), (512, 1536));
+    assert!(mr.converged, "batch 128 is exactly the Mask-RCNN wall");
+}
+
+/// The idle-core fix, visible end-to-end: GNMT at 2048 cores prices
+/// gradsum/update/eval identically to a hypothetical 1024-core machine
+/// with the same layout (the surplus 1024 cores buy nothing).
+#[test]
+fn golden_gnmt_surplus_cores_price_like_participating_slice() {
+    use tpu_pod_train::models::model;
+    use tpu_pod_train::simulator::{simulate, SimOptions};
+    let m = model("gnmt").unwrap();
+    let full_pod = simulate(&m, 2048, &SimOptions::default());
+    assert_eq!(full_pod.participating_cores, 1024);
+    let l = full_pod.layout;
+    let fitted = tpu_pod_train::models::Layout { cores: 1024, ..l };
+    let half_pod = simulate(
+        &m,
+        1024,
+        &SimOptions { layout_override: Some(fitted), ..Default::default() },
+    );
+    assert_eq!(full_pod.gradsum_seconds, half_pod.gradsum_seconds);
+    assert_eq!(full_pod.update_seconds, half_pod.update_seconds);
+    assert_eq!(full_pod.eval_seconds, half_pod.eval_seconds);
+    assert_eq!(full_pod.step_seconds, half_pod.step_seconds);
 }
 
 /// Strong scaling: under a fixed global batch, step time must not
