@@ -1,0 +1,48 @@
+//! Sweep-engine throughput: the full 5-model §2 ablation grid through the
+//! pre-memoization serial reference vs the memoized parallel engine
+//! (`scenario::run_sweep_bench`). Writes `BENCH_sweep.json` at the
+//! workspace root — the same record `tests/bench_sweep.rs` produces under
+//! plain `cargo test` — so the sweep-engine perf trajectory is tracked
+//! per commit.
+
+use tpu_pod_train::benchkit::{fmt_ratio, fmt_time, Table};
+use tpu_pod_train::scenario::{run_sweep_bench, AblationGrid};
+
+fn main() {
+    let grid = AblationGrid::full_paper();
+    let bench = run_sweep_bench(&grid, 0).expect("sweep bench");
+
+    let mut t = Table::new(
+        "Ablation-grid sweep throughput (5 models x §2 axes x chip ladder)",
+        &["engine", "wall", "points/s", "speedup"],
+    );
+    t.row(&[
+        "reference (serial, uncached)".into(),
+        fmt_time(bench.baseline_s),
+        format!("{:.0}", bench.points_per_sec(bench.baseline_s)),
+        fmt_ratio(1.0),
+    ]);
+    t.row(&[
+        "memoized, 1 job".into(),
+        fmt_time(bench.serial_s),
+        format!("{:.0}", bench.points_per_sec(bench.serial_s)),
+        fmt_ratio(bench.baseline_s / bench.serial_s.max(1e-12)),
+    ]);
+    t.row(&[
+        format!("memoized, {} jobs", bench.jobs),
+        fmt_time(bench.parallel_s),
+        format!("{:.0}", bench.points_per_sec(bench.parallel_s)),
+        fmt_ratio(bench.speedup_vs_baseline()),
+    ]);
+    t.print();
+    println!(
+        "\n({} scenarios, {} points; all three engines produced byte-identical reports.)",
+        bench.scenarios, bench.points
+    );
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sweep.json");
+    match bench.write(path) {
+        Ok(()) => println!("recorded {path}"),
+        Err(e) => eprintln!("writing {path}: {e}"),
+    }
+}

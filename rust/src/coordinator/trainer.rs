@@ -5,7 +5,9 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::collectives::{broadcast, gradsum_pipelined, gradsum_serial, Placement};
+use crate::collectives::{
+    broadcast, gradsum_pipelined_ws, gradsum_serial, GradSumWorkspace, Placement,
+};
 use crate::data::synthetic::{ImageTask, LmTask};
 use crate::evaluation::{distributed_eval, EvalChunk, EvalSharding};
 use crate::fabric::{run_spmd, Endpoint};
@@ -282,6 +284,10 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
     let mut report =
         TrainReport { params_total: sizes.iter().sum(), ..Default::default() };
     report.init_s = init_timer.secs();
+    // Staging buffer for the pipelined gradient summation, reused across
+    // steps (on TPU this is the fixed on-device staging area; reallocating
+    // it every step pays page-fault zeroing on the whole gradient set).
+    let mut gradsum_ws = GradSumWorkspace::default();
     let wall = Timer::start();
 
     // ---- nested train-and-eval tight loop (§2) ---------------------------
@@ -320,7 +326,7 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
         match cfg.gradsum {
             GradSumMode::Serial => gradsum_serial(ep, &place, &mut grads),
             GradSumMode::Pipelined { quantum } => {
-                gradsum_pipelined(ep, &place, &mut grads, quantum)
+                gradsum_pipelined_ws(ep, &place, &mut grads, quantum, &mut gradsum_ws)
             }
         }
         let scale = 1.0 / world as f32;

@@ -25,8 +25,8 @@ pub mod phases;
 
 pub use layout::PodLayout;
 pub use phases::{
-    shard_imbalance, spatial_factors, ComputePhase, CostConfig, CostStack, EvalPhase,
-    GradSumPhase, HaloPhase, InfraPhase, Phase, PhaseCost, SpatialFactors, StepBreakdown,
-    StepCostModel, WeightUpdatePhase, INFRA_SECONDS, INLOOP_EVAL_OVERHEAD_S, SIDECARD_CORES,
-    SIDECARD_EVAL_OVERHEAD_S,
+    gradient_census, shard_imbalance, shard_imbalance_from_census, spatial_factors,
+    ComputePhase, CostConfig, CostStack, EvalPhase, GradSumPhase, HaloPhase, InfraPhase, Phase,
+    PhaseCost, SpatialFactors, StepBreakdown, StepCostModel, WeightUpdatePhase, INFRA_SECONDS,
+    INLOOP_EVAL_OVERHEAD_S, SIDECARD_CORES, SIDECARD_EVAL_OVERHEAD_S,
 };

@@ -147,13 +147,23 @@ pub fn spatial_factors(m: &ModelProfile, mp: usize, dev: &Device) -> SpatialFact
     SpatialFactors { speedup: p.speedup(), comm_fraction: p.comm_fraction() }
 }
 
+/// The gradient-tensor element census [`shard_imbalance`] shards. The
+/// census depends only on the model, so sweep drivers hoist it out of
+/// their per-point loops (one census per scenario, not per chip count).
+pub fn gradient_census(m: &ModelProfile) -> Vec<usize> {
+    m.gradient_bytes().iter().map(|&b| ((b / 4.0) as usize).max(1)).collect()
+}
+
+/// [`shard_imbalance`] over a precomputed [`gradient_census`].
+pub fn shard_imbalance_from_census(census: &[usize], shards: usize) -> f64 {
+    ShardPlan::balanced(census, shards.max(1)).imbalance()
+}
+
 /// Weight-update shard imbalance (max/min shard elements) over the
 /// model's gradient tensor census at `shards` shards — the contiguous
 /// element-balanced plan of `wus::ShardPlan` (paper §2 Fig. 4).
 pub fn shard_imbalance(m: &ModelProfile, shards: usize) -> f64 {
-    let sizes: Vec<usize> =
-        m.gradient_bytes().iter().map(|&b| ((b / 4.0) as usize).max(1)).collect();
-    ShardPlan::balanced(&sizes, shards.max(1)).imbalance()
+    shard_imbalance_from_census(&gradient_census(m), shards)
 }
 
 /// Per-replica forward+backward compute time on the device roofline

@@ -28,15 +28,22 @@
 //! pod slices (16 → 1024 chips) with weight-update sharding, spatial
 //! partitioning, gradient-summation schedule and optimizer co-tuned per
 //! point. The [`scenario`] module is that experiment driver:
-//! [`scenario::ScalingScenario`] declares a sweep, a
-//! [`scenario::SweepRunner`] executes the grid, and each point's
-//! [`scenario::SweepRecord`] carries the layout, participating vs surplus
-//! cores, the per-phase step-time attribution (with each phase's group
-//! size), shard imbalance, a contention-checked collective time and the
-//! predicted benchmark seconds. `tpu-pod-train sweep` emits the JSON
-//! report and `sweep --compare baseline.json` diffs it against a prior
-//! run (nonzero exit on regression); `rust/src/scenario/README.md` maps
-//! sweeps to the paper's figures and documents the attribution schema.
+//! [`scenario::ScalingScenario`] declares a sweep, an
+//! [`scenario::AblationGrid`] expands every §2 on/off axis into labeled
+//! scenarios (the scenario × SimOptions cross-product behind
+//! `sweep --grid`), and a [`scenario::SweepRunner`] executes the grid —
+//! serially or over a worker pool (`run_jobs` / `--jobs N`) with
+//! memoized contention/imbalance kernels and the `netsim::fastpath`
+//! ring-symmetry shortcut, byte-identical to the serial run. Each
+//! point's [`scenario::SweepRecord`] carries the layout, participating
+//! vs surplus cores, the per-phase step-time attribution (with each
+//! phase's group size), shard imbalance, a contention-checked collective
+//! time and the predicted benchmark seconds. `tpu-pod-train sweep` emits
+//! the JSON report and `sweep --compare baseline.json` diffs it against
+//! a prior run (nonzero exit on regression); `BENCH_sweep.json` tracks
+//! the engine's own throughput; `rust/src/scenario/README.md` maps
+//! sweeps to the paper's figures and documents the attribution and grid
+//! naming schemas.
 //!
 //! The test matrix:
 //! * unit tests inside every module (the substrate contracts),

@@ -5,7 +5,8 @@
 //!                (AOT artifacts via PJRT; see `make artifacts`).
 //! * `simulate` — TPU-v3 pod time-to-train simulation for one MLPerf model.
 //! * `sweep`    — scenario sweep engine: models × pod slices, JSON report
-//!                (the Figs. 7-10 / Table 1 experiment driver).
+//!                (the Figs. 7-10 / Table 1 experiment driver); `--grid`
+//!                runs the §2 ablation cross-product over `--jobs` workers.
 //! * `submit`   — full simulated MLPerf-0.6 submission (all five models,
 //!                Fig. 9-style table).
 //! * `info`     — list artifacts, models and device constants.
@@ -17,7 +18,8 @@ use tpu_pod_train::models::{all_models, model};
 use tpu_pod_train::optim::{AdamConfig, LarsConfig, LarsVariant};
 use tpu_pod_train::runtime::Manifest;
 use tpu_pod_train::scenario::{
-    compare_reports, BatchSchedule, GradSumChoice, ScalingScenario, SweepReport, SweepRunner,
+    compare_reports, AblationGrid, BatchSchedule, GradSumChoice, ScalingScenario, SweepReport,
+    SweepRunner,
 };
 use tpu_pod_train::simulator::{simulate, SimOptions};
 use tpu_pod_train::util::cli::Cli;
@@ -212,12 +214,14 @@ fn cmd_simulate(tokens: &[String]) -> i32 {
 
 fn cmd_sweep(tokens: &[String]) -> i32 {
     let cli = Cli::new("sweep", "pod-scale scenario sweep (Figs. 7-10 / Table 1 engine)")
-        .opt("model", "resnet50", "resnet50|ssd|maskrcnn|transformer|gnmt|all")
-        .opt("chips", "16,64,256,1024", "comma-separated TPU-v3 chip counts (2 cores/chip)")
+        .opt("model", "", "resnet50|ssd|maskrcnn|transformer|gnmt|all (all with --grid)")
+        .opt("chips", "", "TPU-v3 chip counts (default 16,64,256,1024; paper ladder with --grid)")
         .opt("batch", "0", "fixed global batch (0 = submission layout policy)")
+        .opt("jobs", "1", "point-execution workers (0 = one per core; output matches --jobs 1)")
         .opt("out", "", "also write the JSON report to this file")
         .opt("compare", "", "baseline SweepReport JSON to diff against (exit 1 on regression)")
         .opt("tolerance", "0.02", "relative benchmark-seconds regression tolerance for --compare")
+        .flag("grid", "run the §2 ablation grid (spatial/WUS x gradsum schedule x LARS/SGD)")
         .flag("serial-gradsum", "expose the non-contiguous gathers (no pipelining)")
         .flag("no-2d", "use the 1-D ring gradient-summation schedule")
         .flag("no-wus", "disable weight-update sharding")
@@ -231,6 +235,7 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
             return 2;
         }
     };
+    let grid_mode = a.flag("grid");
     let mut chips = Vec::new();
     for tok in a.get_or("chips", "").split(',') {
         let tok = tok.trim();
@@ -245,17 +250,28 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
             }
         }
     }
-    let model_arg = a.get_or("model", "resnet50");
+    let model_arg = a.get_or("model", "");
+    let model_arg = if model_arg.is_empty() {
+        if grid_mode {
+            "all".to_string()
+        } else {
+            "resnet50".to_string()
+        }
+    } else {
+        model_arg
+    };
     let names: Vec<String> = if model_arg == "all" {
         all_models().iter().map(|m| m.name.to_string()).collect()
     } else {
         vec![model_arg]
     };
-    let gradsum = match (!a.flag("no-2d"), !a.flag("serial-gradsum")) {
-        (true, true) => GradSumChoice::Pipelined2D,
-        (true, false) => GradSumChoice::Serial2D,
-        (false, true) => GradSumChoice::Pipelined1D,
-        (false, false) => GradSumChoice::Serial1D,
+    let jobs_raw = a.get_or("jobs", "1");
+    let jobs: usize = match jobs_raw.trim().parse() {
+        Ok(j) => j,
+        Err(_) => {
+            eprintln!("bad --jobs value {jobs_raw:?} (expected a nonnegative integer)");
+            return 2;
+        }
     };
     let batch_raw = a.get_or("batch", "0");
     let batch: usize = match batch_raw.trim().parse() {
@@ -265,22 +281,64 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
             return 2;
         }
     };
-    let scenarios: Vec<ScalingScenario> = names
-        .iter()
-        .map(|name| {
-            let mut s = ScalingScenario::submission(name, chips.clone())
-                .named(format!("sweep-{name}"));
-            if batch > 0 {
-                s = s.with_batch(BatchSchedule::Fixed(batch));
+    let scenarios: Vec<ScalingScenario> = if grid_mode {
+        // The §2 cross-product; --model/--chips narrow it, the per-axis
+        // flags are meaningless here (the grid sweeps both settings).
+        for f in ["serial-gradsum", "no-2d", "no-wus", "no-spatial"] {
+            if a.flag(f) {
+                eprintln!("--{f} conflicts with --grid (the grid sweeps that axis)");
+                return 2;
             }
-            s.gradsum = gradsum;
-            s.weight_update_sharding = !a.flag("no-wus");
-            s.distributed_eval = !a.flag("no-dist-eval");
-            s.spatial_partitioning = !a.flag("no-spatial");
-            s
-        })
-        .collect();
-    let report = match SweepRunner::new(scenarios).run() {
+        }
+        if a.flag("no-dist-eval") {
+            eprintln!("--no-dist-eval conflicts with --grid (grid scenarios pin it on)");
+            return 2;
+        }
+        if batch > 0 {
+            eprintln!("--batch conflicts with --grid (the grid uses the submission batches)");
+            return 2;
+        }
+        let mut g = AblationGrid::full_paper();
+        g.models = names;
+        if !chips.is_empty() {
+            g.chips = chips;
+        }
+        let workers = tpu_pod_train::scenario::pool_workers(jobs, g.point_count());
+        eprintln!(
+            "ablation grid: {} scenarios x {} chip counts = {} points ({} workers)",
+            g.scenario_count(),
+            g.chips.len(),
+            g.point_count(),
+            workers
+        );
+        g.scenarios()
+    } else {
+        if chips.is_empty() {
+            chips = vec![16, 64, 256, 1024];
+        }
+        let gradsum = match (!a.flag("no-2d"), !a.flag("serial-gradsum")) {
+            (true, true) => GradSumChoice::Pipelined2D,
+            (true, false) => GradSumChoice::Serial2D,
+            (false, true) => GradSumChoice::Pipelined1D,
+            (false, false) => GradSumChoice::Serial1D,
+        };
+        names
+            .iter()
+            .map(|name| {
+                let mut s = ScalingScenario::submission(name, chips.clone())
+                    .named(format!("sweep-{name}"));
+                if batch > 0 {
+                    s = s.with_batch(BatchSchedule::Fixed(batch));
+                }
+                s.gradsum = gradsum;
+                s.weight_update_sharding = !a.flag("no-wus");
+                s.distributed_eval = !a.flag("no-dist-eval");
+                s.spatial_partitioning = !a.flag("no-spatial");
+                s
+            })
+            .collect()
+    };
+    let report = match SweepRunner::new(scenarios).run_jobs(jobs) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("sweep error: {e}");

@@ -1,0 +1,114 @@
+//! Symmetry fast-path for pricing ring schedules on the torus.
+//!
+//! The event-driven simulator ([`NetSim`]) prices a bidirectional ring
+//! step by scheduling every chip's two neighbor transfers over the shared
+//! links. Under *uniform* payloads the full torus decomposes into
+//! independent, identically-loaded rings: an X-phase message only crosses
+//! X links of its own row, every row carries the same message multiset in
+//! the same order, and rows share no links. The makespan of the whole
+//! torus therefore equals the makespan of ONE representative ring — so
+//! the fast path simulates a single `n x 1` ring instead of all `nx * ny`
+//! chips, turning an O(nx*ny) simulation into O(ring length) while
+//! producing bit-identical times (the `dist_invariants` suite pins the
+//! fast path against the full simulation on 16/64/256/1024-chip tori).
+//!
+//! The fast path is exact ONLY under uniform payloads; a non-uniform
+//! schedule (see the ROADMAP netsim item) breaks the row symmetry and
+//! must fall back to the full event-driven simulation.
+
+use super::cost::NetParams;
+use super::sim::{Message, NetSim};
+use super::torus::{Dir, Torus};
+
+/// Event-driven makespan of one bidirectional ring step, priced from a
+/// single representative ring of `ring_len` chips: every chip ships half
+/// a `chunk_bytes` payload to each ring neighbor simultaneously.
+///
+/// On a 2-wide ring both half-chunks fold onto one link under
+/// shortest-path routing and honestly serialize, exactly as they do on a
+/// 2-wide torus dimension in the full simulation.
+pub fn ring_step_makespan(ring_len: usize, chunk_bytes: f64, p: &NetParams) -> f64 {
+    if ring_len <= 1 {
+        return 0.0;
+    }
+    let ring = Torus::new(ring_len, 1);
+    let mut sim = NetSim::new(ring, p.link_bw, p.link_latency);
+    let msgs: Vec<Message> = ring
+        .coords()
+        .flat_map(|c| {
+            [
+                Message {
+                    src: c,
+                    dst: ring.step(c, Dir::XPlus),
+                    bytes: chunk_bytes / 2.0,
+                    ready_at: 0.0,
+                },
+                Message {
+                    src: c,
+                    dst: ring.step(c, Dir::XMinus),
+                    bytes: chunk_bytes / 2.0,
+                    ready_at: 0.0,
+                },
+            ]
+        })
+        .collect();
+    sim.makespan(&msgs)
+}
+
+/// The full 4-phase bidirectional 2-D gradient-summation schedule priced
+/// from one representative row ring and one column ring: reduce-scatter
+/// along the X rings (`nx - 1` steps of `1/nx` chunks), reduce-scatter of
+/// the shard along the Y rings (`ny - 1` steps of `1/(nx*ny)` chunks),
+/// then the two matching all-gather phases in reverse. Identical step
+/// composition to `scenario::gradsum_contention_makespan`'s full
+/// event-driven form, with each step priced by [`ring_step_makespan`].
+pub fn torus2d_gradsum_makespan(torus: Torus, payload_bytes: f64, p: &NetParams) -> f64 {
+    if torus.chips() <= 1 {
+        return 0.0;
+    }
+    let x_step = ring_step_makespan(torus.nx, payload_bytes / torus.nx as f64, p);
+    let y_step = ring_step_makespan(torus.ny, payload_bytes / (torus.nx * torus.ny) as f64, p);
+    // Phases 1+4 ride the X rings, phases 2+3 the Y rings.
+    2.0 * ((torus.nx - 1) as f64 * x_step + (torus.ny - 1) as f64 * y_step)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_chip_rings_are_free() {
+        let p = NetParams::default();
+        assert_eq!(ring_step_makespan(1, 1e6, &p), 0.0);
+        assert_eq!(torus2d_gradsum_makespan(Torus::new(1, 1), 1e8, &p), 0.0);
+    }
+
+    #[test]
+    fn ring_step_is_one_overlapped_transfer() {
+        // On a ring wider than 2 every directed link carries exactly one
+        // half-chunk: the step costs one transfer plus one hop latency.
+        let p = NetParams::default();
+        let t = ring_step_makespan(8, 1e6, &p);
+        let expect = 0.5e6 / p.link_bw + p.link_latency;
+        assert!((t - expect).abs() < 1e-15, "{t} vs {expect}");
+    }
+
+    #[test]
+    fn two_wide_ring_serializes_the_half_chunks() {
+        // nx = 2: both half-chunks route over the same +x link.
+        let p = NetParams::default();
+        let t = ring_step_makespan(2, 1e6, &p);
+        let expect = 2.0 * 0.5e6 / p.link_bw + p.link_latency;
+        assert!((t - expect).abs() < 1e-15, "{t} vs {expect}");
+    }
+
+    #[test]
+    fn pod_schedule_positive_and_monotone_in_payload() {
+        let p = NetParams::default();
+        let torus = Torus::for_chips(1024);
+        let small = torus2d_gradsum_makespan(torus, 1e6, &p);
+        let large = torus2d_gradsum_makespan(torus, 1e8, &p);
+        assert!(small > 0.0);
+        assert!(large > small);
+    }
+}

@@ -3,9 +3,11 @@
 //! link-contention simulator that validates the analytic assumptions.
 
 pub mod cost;
+pub mod fastpath;
 pub mod sim;
 pub mod torus;
 
 pub use cost::{ArAlgo, CostModel, GradSumModel, NetParams};
+pub use fastpath::{ring_step_makespan, torus2d_gradsum_makespan};
 pub use sim::{Message, NetSim};
 pub use torus::{Coord, Dir, Link, Torus};

@@ -1,0 +1,153 @@
+//! Tier-1-runnable sweep perf harness (`BENCH_sweep.json`).
+//!
+//! Times the §2 ablation grid three ways — the pre-memoization serial
+//! reference (fresh gradient census and full event-driven contention
+//! simulation per point), the memoized engine on one worker, and the
+//! memoized engine on the full worker pool — and cross-checks that all
+//! three produce byte-identical reports before reporting wall-clock and
+//! points/sec. `tests/bench_sweep.rs` runs it under plain `cargo test`
+//! (no artifacts needed) and writes `BENCH_sweep.json` at the workspace
+//! root so the perf trajectory is tracked per commit; the `sweep_grid`
+//! bench binary prints the same numbers as a table.
+
+use crate::costs::shard_imbalance;
+use crate::models::registry::ModelProfile;
+use crate::simulator::simulate;
+use crate::util::json::{obj, Json};
+use crate::util::timer::Timer;
+
+use super::grid::AblationGrid;
+use super::runner::{
+    assemble_record, gradsum_contention_makespan, pool_workers, SweepRecord, SweepReport,
+    SweepRunner,
+};
+use super::ScalingScenario;
+
+/// One timed run of the ablation grid through the three engines.
+#[derive(Clone, Debug)]
+pub struct SweepBench {
+    pub scenarios: usize,
+    pub points: usize,
+    /// Worker threads the parallel pass used.
+    pub jobs: usize,
+    /// Serial pre-memoization reference (per-point census + full
+    /// event-driven contention kernel — the engine before this layer).
+    pub baseline_s: f64,
+    /// Memoized engine, one worker.
+    pub serial_s: f64,
+    /// Memoized engine, `jobs` workers.
+    pub parallel_s: f64,
+}
+
+impl SweepBench {
+    pub fn speedup_vs_baseline(&self) -> f64 {
+        self.baseline_s / self.parallel_s
+    }
+
+    pub fn points_per_sec(&self, wall_s: f64) -> f64 {
+        self.points as f64 / wall_s.max(1e-12)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("bench", Json::from("sweep_grid")),
+            ("scenarios", Json::from(self.scenarios)),
+            ("points", Json::from(self.points)),
+            ("jobs", Json::from(self.jobs)),
+            ("baseline_serial_seconds", Json::from(self.baseline_s)),
+            ("memoized_serial_seconds", Json::from(self.serial_s)),
+            ("memoized_parallel_seconds", Json::from(self.parallel_s)),
+            ("baseline_points_per_sec", Json::from(self.points_per_sec(self.baseline_s))),
+            ("parallel_points_per_sec", Json::from(self.points_per_sec(self.parallel_s))),
+            ("speedup_vs_baseline", Json::from(self.speedup_vs_baseline())),
+            ("speedup_serial_only", Json::from(self.baseline_s / self.serial_s.max(1e-12))),
+        ])
+    }
+
+    /// Write the record (`BENCH_sweep.json`).
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().dump())
+    }
+}
+
+/// The pre-memoization per-point evaluator, kept as the timing and
+/// correctness reference: a fresh gradient census per point (via
+/// [`shard_imbalance`]) and the full event-driven contention simulation
+/// (no symmetry fast-path, no cache). The record itself comes from the
+/// engine's single construction site, so only the two kernel prices can
+/// ever differ from the memoized path.
+pub fn reference_point(s: &ScalingScenario, m: &ModelProfile, chips: usize) -> SweepRecord {
+    let cores = chips * 2;
+    let opts = s.sim_options(cores);
+    let r = simulate(m, cores, &opts);
+    let imbalance = shard_imbalance(m, r.participating_cores);
+    let makespan = gradsum_contention_makespan(
+        m.params * 4.0,
+        (r.participating_cores / 2).max(1),
+        s.gradsum.is_2d(),
+    );
+    assemble_record(s, m, chips, &r, imbalance, makespan)
+}
+
+/// Time the grid through the reference and the memoized serial/parallel
+/// engines; error out if any pair of reports differs by a single byte.
+pub fn run_sweep_bench(grid: &AblationGrid, jobs: usize) -> Result<SweepBench, String> {
+    let scenarios = grid.scenarios();
+    let runner = SweepRunner::new(scenarios.clone());
+    let jobs = pool_workers(jobs, grid.point_count());
+
+    let t = Timer::start();
+    let mut reference = Vec::with_capacity(grid.point_count());
+    for s in &scenarios {
+        let m = s.profile()?;
+        for &chips in &s.chips {
+            reference.push(reference_point(s, &m, chips));
+        }
+    }
+    let baseline_s = t.secs();
+    let reference = SweepReport { records: reference };
+
+    let t = Timer::start();
+    let serial = runner.run_jobs(1)?;
+    let serial_s = t.secs();
+
+    let t = Timer::start();
+    let parallel = runner.run_jobs(jobs)?;
+    let parallel_s = t.secs();
+
+    let serial_dump = serial.dump();
+    if parallel.dump() != serial_dump {
+        return Err(format!("parallel sweep ({jobs} jobs) is not byte-identical to serial"));
+    }
+    if reference.dump() != serial_dump {
+        return Err("memoized engine diverged from the pre-memoization reference".into());
+    }
+    Ok(SweepBench {
+        scenarios: scenarios.len(),
+        points: reference.records.len(),
+        jobs,
+        baseline_s,
+        serial_s,
+        parallel_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_engines_agree_on_a_small_grid() {
+        let mut g = AblationGrid::full_paper();
+        g.models = vec!["resnet50".into(), "gnmt".into()];
+        g.chips = vec![16, 256];
+        let b = run_sweep_bench(&g, 2).unwrap();
+        assert_eq!(b.scenarios, 32);
+        assert_eq!(b.points, 64);
+        assert_eq!(b.jobs, 2);
+        assert!(b.baseline_s > 0.0 && b.serial_s > 0.0 && b.parallel_s > 0.0);
+        let j = b.to_json();
+        assert_eq!(j.get("points").and_then(Json::as_usize), Some(64));
+        assert!(j.get("speedup_vs_baseline").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,223 @@
+//! §2 ablation grids: the scenario × `SimOptions` cross-product driver.
+//!
+//! The paper's scaling story is an ablation story — spatial partitioning,
+//! weight-update sharding, the optimizer and the gradient-summation
+//! schedule each toggled across a chip ladder. [`AblationGrid`] makes
+//! that cross-product declarative: each axis is a list of settings, and
+//! [`AblationGrid::scenarios`] emits one labeled [`ScalingScenario`] per
+//! combination, feeding the existing `SweepReport` v2 schema (every
+//! record already carries the per-axis attribution fields).
+//!
+//! Grid naming convention (stable — `sweep --compare` matches on it):
+//! `grid-{model}-sp:{on|off}-wus:{on|off}-gs:{gradsum}-opt:{optimizer}`
+//! with the gradsum label from [`GradSumChoice::label`] and the optimizer
+//! label from [`OptimizerAxis::label`]. Axis order in the emitted list is
+//! model (outer) → spatial → wus → gradsum → optimizer (inner), each in
+//! its declared order, then the chip ladder within each scenario.
+
+use crate::models::registry::{all_models, Optimizer};
+
+use super::presets::paper_chip_slices;
+use super::{GradSumChoice, OptimizerChoice, ScalingScenario};
+
+/// Optimizer axis of an ablation grid (Table 1's LARS-vs-SGD study as an
+/// on/off toggle rather than a per-variant epochs pin).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerAxis {
+    /// The model profile's own optimizer (the submission setting).
+    Default,
+    /// Force LARS (large-batch update traffic, 20 B/param).
+    Lars,
+    /// Force SGD + momentum (the pre-LARS baseline, 16 B/param).
+    Sgd,
+}
+
+impl OptimizerAxis {
+    pub fn label(self) -> &'static str {
+        match self {
+            OptimizerAxis::Default => "default",
+            OptimizerAxis::Lars => "lars",
+            OptimizerAxis::Sgd => "sgd",
+        }
+    }
+
+    /// The scenario optimizer choice this axis value selects. Overrides
+    /// keep the model's own epochs-to-converge curve (`epochs: None`):
+    /// the grid ablates update *traffic*; the per-variant convergence
+    /// study is Table 1 (`presets::table1_scenarios`).
+    pub fn choice(self) -> OptimizerChoice {
+        match self {
+            OptimizerAxis::Default => OptimizerChoice::ModelDefault,
+            OptimizerAxis::Lars => {
+                OptimizerChoice::Override { optimizer: Optimizer::Lars, epochs: None }
+            }
+            OptimizerAxis::Sgd => {
+                OptimizerChoice::Override { optimizer: Optimizer::Sgd, epochs: None }
+            }
+        }
+    }
+}
+
+/// A scenario × `SimOptions` cross-product: models × chip ladder × the §2
+/// on/off axes. Distributed eval stays on (it is not a §2 grid axis; the
+/// side-card ablation lives in `simulator::SimOptions` and the benches).
+#[derive(Clone, Debug)]
+pub struct AblationGrid {
+    /// Registry keys swept (outermost axis).
+    pub models: Vec<String>,
+    /// TPU-v3 chip ladder every emitted scenario sweeps.
+    pub chips: Vec<usize>,
+    /// Spatial-partitioning axis (§2 "spatial partitioning").
+    pub spatial: Vec<bool>,
+    /// Weight-update-sharding axis (§2 Fig. 4).
+    pub weight_update_sharding: Vec<bool>,
+    /// Gradient-summation schedule axis (§2 "optimize gradient summation").
+    pub gradsum: Vec<GradSumChoice>,
+    /// Optimizer axis (LARS vs SGD update traffic).
+    pub optimizers: Vec<OptimizerAxis>,
+}
+
+impl AblationGrid {
+    /// The full §2 cross-product the paper implies: all five MLPerf-0.6
+    /// models across the paper chip ladder, with spatial partitioning and
+    /// weight-update sharding each on/off, the 2-D gradient summation
+    /// pipelined vs serial, and LARS vs SGD — 80 scenarios, 480 points.
+    pub fn full_paper() -> AblationGrid {
+        AblationGrid {
+            models: all_models().iter().map(|m| m.name.to_string()).collect(),
+            chips: paper_chip_slices(),
+            spatial: vec![true, false],
+            weight_update_sharding: vec![true, false],
+            gradsum: vec![GradSumChoice::Pipelined2D, GradSumChoice::Serial2D],
+            optimizers: vec![OptimizerAxis::Lars, OptimizerAxis::Sgd],
+        }
+    }
+
+    /// Scenario count (points = `scenario_count() * chips.len()`).
+    pub fn scenario_count(&self) -> usize {
+        self.models.len()
+            * self.spatial.len()
+            * self.weight_update_sharding.len()
+            * self.gradsum.len()
+            * self.optimizers.len()
+    }
+
+    /// Grid points (scenarios × chip ladder).
+    pub fn point_count(&self) -> usize {
+        self.scenario_count() * self.chips.len()
+    }
+
+    /// The naming convention above, for one axis combination.
+    pub fn scenario_name(
+        model: &str,
+        spatial: bool,
+        wus: bool,
+        gradsum: GradSumChoice,
+        optimizer: OptimizerAxis,
+    ) -> String {
+        let onoff = |b: bool| if b { "on" } else { "off" };
+        format!(
+            "grid-{model}-sp:{}-wus:{}-gs:{}-opt:{}",
+            onoff(spatial),
+            onoff(wus),
+            gradsum.label(),
+            optimizer.label()
+        )
+    }
+
+    /// Emit every axis combination as a labeled submission-based scenario
+    /// (deterministic order; names unique by construction).
+    pub fn scenarios(&self) -> Vec<ScalingScenario> {
+        let mut out = Vec::with_capacity(self.scenario_count());
+        for model in &self.models {
+            for &spatial in &self.spatial {
+                for &wus in &self.weight_update_sharding {
+                    for &gradsum in &self.gradsum {
+                        for &opt in &self.optimizers {
+                            let mut s = ScalingScenario::submission(model, self.chips.clone())
+                                .named(Self::scenario_name(model, spatial, wus, gradsum, opt));
+                            s.spatial_partitioning = spatial;
+                            s.weight_update_sharding = wus;
+                            s.gradsum = gradsum;
+                            s.optimizer = opt.choice();
+                            out.push(s);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::SweepRunner;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn full_paper_grid_shape() {
+        let g = AblationGrid::full_paper();
+        assert_eq!(g.scenario_count(), 5 * 2 * 2 * 2 * 2);
+        assert_eq!(g.point_count(), 80 * 6);
+        let scenarios = g.scenarios();
+        assert_eq!(scenarios.len(), 80);
+        // Names are unique (compare keys) and follow the convention.
+        let names: BTreeSet<String> = scenarios.iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names.len(), scenarios.len());
+        assert!(names.contains("grid-resnet50-sp:on-wus:on-gs:2d-pipelined-opt:lars"));
+        assert!(names.contains("grid-gnmt-sp:off-wus:off-gs:2d-serial-opt:sgd"));
+        // Every scenario validates (the runner's up-front contract).
+        for s in &scenarios {
+            s.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn axis_values_reach_the_scenarios() {
+        let mut g = AblationGrid::full_paper();
+        g.models = vec!["resnet50".into()];
+        g.chips = vec![64];
+        let scenarios = g.scenarios();
+        assert_eq!(scenarios.len(), 16);
+        assert_eq!(scenarios.iter().filter(|s| s.spatial_partitioning).count(), 8);
+        assert_eq!(scenarios.iter().filter(|s| s.weight_update_sharding).count(), 8);
+        assert_eq!(
+            scenarios.iter().filter(|s| s.gradsum == GradSumChoice::Serial2D).count(),
+            8
+        );
+        for s in &scenarios {
+            assert!(s.distributed_eval, "distributed eval is not a grid axis");
+        }
+    }
+
+    #[test]
+    fn optimizer_axis_changes_update_traffic_only() {
+        let mk = |opt: OptimizerAxis| {
+            let mut g = AblationGrid::full_paper();
+            g.models = vec!["transformer".into()];
+            g.chips = vec![1024];
+            g.spatial = vec![true];
+            g.weight_update_sharding = vec![true];
+            g.gradsum = vec![GradSumChoice::Pipelined2D];
+            g.optimizers = vec![opt];
+            SweepRunner::new(g.scenarios()).run().unwrap().records.remove(0)
+        };
+        let lars = mk(OptimizerAxis::Lars);
+        let sgd = mk(OptimizerAxis::Sgd);
+        // Same convergence curve, different optimizer bytes/param.
+        assert_eq!(lars.epochs, sgd.epochs);
+        assert!(lars.update_seconds > sgd.update_seconds, "LARS carries more state");
+        assert_eq!(lars.compute_seconds, sgd.compute_seconds);
+    }
+
+    #[test]
+    fn small_grid_runs_end_to_end() {
+        let mut g = AblationGrid::full_paper();
+        g.models = vec!["ssd".into()];
+        g.chips = vec![16, 64];
+        let report = SweepRunner::new(g.scenarios()).run().unwrap();
+        assert_eq!(report.records.len(), 16 * 2);
+    }
+}

@@ -12,11 +12,18 @@
 //!   point yields a [`SweepRecord`] (layout, participating vs surplus
 //!   cores, per-phase step-time attribution with each phase's group size,
 //!   shard imbalance, contention-checked collective time, predicted
-//!   epochs-to-quality, benchmark seconds).
+//!   epochs-to-quality, benchmark seconds). [`SweepRunner::run_jobs`]
+//!   executes points on a worker pool with memoized hot kernels; its
+//!   output is byte-identical to a serial run.
+//! * [`AblationGrid`] — the scenario × `SimOptions` cross-product driver:
+//!   every §2 axis (spatial on/off, WUS on/off, gradsum serial/pipelined,
+//!   LARS vs SGD) as labeled scenarios (`tpu-pod-train sweep --grid`).
 //! * [`SweepReport`] — the record set with JSON serialization
 //!   (`tpu-pod-train sweep` writes these; golden-trace tests pin them),
 //!   plus [`compare_reports`] — the `sweep --compare baseline.json` diff
 //!   engine every perf PR uses to prove its win.
+//! * [`run_sweep_bench`] — the tier-1 perf harness behind
+//!   `BENCH_sweep.json` (ablation grid, reference vs memoized engines).
 //!
 //! How sweeps map to the paper:
 //!
@@ -30,16 +37,20 @@
 //! * Table 1 (LARS variants): [`presets::table1_scenarios`] — optimizer
 //!   override with per-variant epochs-to-converge.
 
+pub mod bench;
+pub mod grid;
 pub mod presets;
 pub mod runner;
 
+pub use bench::{reference_point, run_sweep_bench, SweepBench};
+pub use grid::{AblationGrid, OptimizerAxis};
 pub use presets::{
     fig7_scenarios, fig8_scenarios, fig9_scenarios, model_parallel_speedup, paper_chip_slices,
     table1_scenarios,
 };
 pub use runner::{
-    compare_reports, gradsum_contention_makespan, run_scenario, sweep_point, PointDiff,
-    SweepComparison, SweepRecord, SweepReport, SweepRunner,
+    compare_reports, effective_jobs, gradsum_contention_makespan, pool_workers, run_scenario,
+    sweep_point, PointDiff, SweepComparison, SweepRecord, SweepReport, SweepRunner,
 };
 
 use crate::models::registry::{model, Layout, ModelProfile, Optimizer};

@@ -1,14 +1,30 @@
-//! Sweep execution: run a [`ScalingScenario`] grid point-by-point, record
-//! the full per-phase step-time attribution per point, and serialize JSON
-//! reports (the `sweep` subcommand's output and the golden-trace test
-//! fixtures). Also the `sweep --compare` diff engine: load a prior
-//! [`SweepReport`] and report per-point benchmark and per-phase deltas.
+//! Sweep execution: run a [`ScalingScenario`] grid, record the full
+//! per-phase step-time attribution per point, and serialize JSON reports
+//! (the `sweep` subcommand's output and the golden-trace test fixtures).
+//! Also the `sweep --compare` diff engine: load a prior [`SweepReport`]
+//! and report per-point benchmark and per-phase deltas.
+//!
+//! Point execution is grid-parallel ([`SweepRunner::run_jobs`]): points
+//! are pulled off a shared queue by a `std::thread::scope` worker pool
+//! and written back into grid order, so the report is byte-identical to
+//! a serial run. The hot kernels are memoized in a [`SweepCache`] shared
+//! by all workers — contention makespans by (participating torus,
+//! payload, schedule) key, shard imbalance by (model, shards) — and the
+//! per-model gradient census is hoisted into a per-scenario
+//! [`ScenarioCtx`], computed once instead of once per chip point. Every
+//! cache hit returns exactly the bits a fresh computation would, which
+//! is what makes the parallel/serial byte-identity hold (pinned by
+//! `tests/sweep_parallel.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::benchkit::Table;
-use crate::costs::{shard_imbalance, Phase};
+use crate::costs::{gradient_census, shard_imbalance_from_census, Phase};
 use crate::models::registry::ModelProfile;
-use crate::netsim::{Dir, Message, NetParams, NetSim, Torus};
-use crate::simulator::simulate;
+use crate::netsim::{torus2d_gradsum_makespan, Dir, Message, NetParams, NetSim, Torus};
+use crate::simulator::{simulate, SimResult};
 use crate::util::json::{obj, Json};
 
 use super::ScalingScenario;
@@ -223,6 +239,80 @@ impl SweepReport {
     }
 }
 
+/// Per-scenario data hoisted out of the per-chip-point loop: the resolved
+/// model profile (post optimizer override), the gradient payload the
+/// contention kernel prices, and the gradient-tensor element census
+/// feeding the shard-imbalance metric. All three depend only on the
+/// scenario, never on the chip count, so they are computed once per
+/// [`ScalingScenario`] instead of once per point.
+struct ScenarioCtx {
+    profile: ModelProfile,
+    /// Total gradient payload bytes (f32 params) for the contention kernel.
+    payload_bytes: f64,
+    /// Gradient tensor element census for `shard_imbalance`.
+    census: Vec<usize>,
+}
+
+impl ScenarioCtx {
+    fn new(s: &ScalingScenario) -> Result<ScenarioCtx, String> {
+        Ok(ScenarioCtx::for_profile(s.profile()?))
+    }
+
+    fn for_profile(profile: ModelProfile) -> ScenarioCtx {
+        let payload_bytes = profile.params * 4.0;
+        let census = gradient_census(&profile);
+        ScenarioCtx { profile, payload_bytes, census }
+    }
+}
+
+/// Memoized hot kernels shared by every point (and worker thread) of a
+/// sweep. Keys capture every input of the memoized function, so a cache
+/// hit returns exactly the bits a fresh computation would — memoization
+/// can never change a report, only the time it takes to produce one.
+/// Lookups are check-then-insert: two workers missing the same key both
+/// compute it and insert identical values — duplicated work, never a
+/// divergent result.
+#[derive(Default)]
+pub struct SweepCache {
+    /// (participating torus nx, ny, payload-bytes bits, 2-D schedule) →
+    /// event-driven contention makespan.
+    makespans: Mutex<HashMap<(usize, usize, u64, bool), f64>>,
+    /// (model, participating shards) → weight-update shard imbalance.
+    imbalance: Mutex<HashMap<(&'static str, usize), f64>>,
+}
+
+impl SweepCache {
+    /// Contention makespan of the scenario's gradient-summation schedule
+    /// over the participating torus. 2-D schedules go through the exact
+    /// `netsim` symmetry fast-path (one representative ring row/column);
+    /// the 1-D ring embedding is priced by the full event-driven
+    /// simulation. Either way the result is memoized by torus + payload.
+    fn contention_makespan(&self, payload_bytes: f64, chips: usize, two_d: bool) -> f64 {
+        let torus = Torus::for_chips(chips.max(1).next_power_of_two());
+        let key = (torus.nx, torus.ny, payload_bytes.to_bits(), two_d);
+        if let Some(&v) = self.makespans.lock().unwrap().get(&key) {
+            return v;
+        }
+        let v = if two_d {
+            torus2d_gradsum_makespan(torus, payload_bytes, &NetParams::default())
+        } else {
+            gradsum_contention_makespan(payload_bytes, chips, false)
+        };
+        self.makespans.lock().unwrap().insert(key, v);
+        v
+    }
+
+    fn shard_imbalance(&self, ctx: &ScenarioCtx, shards: usize) -> f64 {
+        let key = (ctx.profile.name, shards);
+        if let Some(&v) = self.imbalance.lock().unwrap().get(&key) {
+            return v;
+        }
+        let v = shard_imbalance_from_census(&ctx.census, shards);
+        self.imbalance.lock().unwrap().insert(key, v);
+        v
+    }
+}
+
 /// Execute a set of scenarios in order.
 #[derive(Clone, Debug, Default)]
 pub struct SweepRunner {
@@ -241,33 +331,134 @@ impl SweepRunner {
     /// Validate every scenario up front, then run the full grid — a sweep
     /// either runs completely or fails before any simulation work.
     pub fn run(&self) -> Result<SweepReport, String> {
+        self.run_jobs(1)
+    }
+
+    /// [`SweepRunner::run`] over `jobs` worker threads (0 = one per
+    /// available core). Points are scheduled dynamically but written back
+    /// into grid order, and the memoized kernels are value-exact, so the
+    /// report is byte-identical to `jobs = 1` regardless of thread count
+    /// or scheduling order.
+    pub fn run_jobs(&self, jobs: usize) -> Result<SweepReport, String> {
+        let mut ctxs = Vec::with_capacity(self.scenarios.len());
         for s in &self.scenarios {
-            s.validate()?;
+            ctxs.push(ScenarioCtx::new(s)?);
         }
-        let mut records = Vec::new();
-        for s in &self.scenarios {
-            records.extend(run_scenario(s)?);
+        let points: Vec<(usize, usize)> = self
+            .scenarios
+            .iter()
+            .enumerate()
+            .flat_map(|(si, s)| s.chips.iter().map(move |&chips| (si, chips)))
+            .collect();
+        let jobs = pool_workers(jobs, points.len());
+        let cache = SweepCache::default();
+        let mut records: Vec<Option<SweepRecord>> = Vec::new();
+        records.resize_with(points.len(), || None);
+        if jobs == 1 {
+            for (slot, &(si, chips)) in records.iter_mut().zip(&points) {
+                *slot = Some(sweep_point_ctx(&self.scenarios[si], &ctxs[si], chips, &cache));
+            }
+        } else {
+            let next = AtomicUsize::new(0);
+            let mut buckets: Vec<Vec<(usize, SweepRecord)>> = Vec::new();
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for _ in 0..jobs {
+                    let next = &next;
+                    let points = &points;
+                    let scenarios = &self.scenarios;
+                    let ctxs = &ctxs;
+                    let cache = &cache;
+                    handles.push(scope.spawn(move || {
+                        let mut out = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= points.len() {
+                                break;
+                            }
+                            let (si, chips) = points[i];
+                            let rec = sweep_point_ctx(&scenarios[si], &ctxs[si], chips, cache);
+                            out.push((i, rec));
+                        }
+                        out
+                    }));
+                }
+                for h in handles {
+                    buckets.push(h.join().expect("sweep worker panicked"));
+                }
+            });
+            for (i, rec) in buckets.into_iter().flatten() {
+                records[i] = Some(rec);
+            }
         }
-        Ok(SweepReport { records })
+        Ok(SweepReport {
+            records: records.into_iter().map(|r| r.expect("sweep point not computed")).collect(),
+        })
     }
 }
 
-/// Run one scenario across its chip counts.
-pub fn run_scenario(s: &ScalingScenario) -> Result<Vec<SweepRecord>, String> {
-    let m = s.profile()?;
-    Ok(s.chips.iter().map(|&chips| sweep_point(s, &m, chips)).collect())
+/// Resolve a `--jobs` value: 0 means one worker per available core.
+pub fn effective_jobs(jobs: usize) -> usize {
+    if jobs == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        jobs
+    }
 }
 
-/// Evaluate one (scenario, chips) grid point.
-pub fn sweep_point(s: &ScalingScenario, m: &ModelProfile, chips: usize) -> SweepRecord {
+/// Worker count [`SweepRunner::run_jobs`] actually uses for a grid of
+/// `points` points: [`effective_jobs`] capped at the point count — the
+/// single sizing rule, shared by the CLI banner and the bench record.
+pub fn pool_workers(jobs: usize, points: usize) -> usize {
+    effective_jobs(jobs).min(points).max(1)
+}
+
+/// Run one scenario across its chip counts (the census and profile are
+/// hoisted out of the chip loop; a scenario-local kernel cache covers the
+/// repeated payload/torus keys of the chip ladder).
+pub fn run_scenario(s: &ScalingScenario) -> Result<Vec<SweepRecord>, String> {
+    let ctx = ScenarioCtx::new(s)?;
+    let cache = SweepCache::default();
+    Ok(s.chips.iter().map(|&chips| sweep_point_ctx(s, &ctx, chips, &cache)).collect())
+}
+
+/// Evaluate one (scenario, chips) grid point against a hoisted scenario
+/// context and the shared kernel cache.
+fn sweep_point_ctx(
+    s: &ScalingScenario,
+    ctx: &ScenarioCtx,
+    chips: usize,
+    cache: &SweepCache,
+) -> SweepRecord {
+    let m = &ctx.profile;
     let cores = chips * 2;
     let opts = s.sim_options(cores);
     let r = simulate(m, cores, &opts);
+    let imbalance = cache.shard_imbalance(ctx, r.participating_cores);
+    let makespan = cache.contention_makespan(
+        ctx.payload_bytes,
+        (r.participating_cores / 2).max(1),
+        s.gradsum.is_2d(),
+    );
+    assemble_record(s, m, chips, &r, imbalance, makespan)
+}
+
+/// The single construction site for the record schema: assemble one
+/// point's record from a completed simulation plus the two kernel prices
+/// (memoized by the engine; computed raw by the bench reference).
+pub(super) fn assemble_record(
+    s: &ScalingScenario,
+    m: &ModelProfile,
+    chips: usize,
+    r: &SimResult,
+    shard_imbalance: f64,
+    collective_makespan_seconds: f64,
+) -> SweepRecord {
     SweepRecord {
         scenario: s.name.clone(),
         model: m.name.to_string(),
         chips,
-        cores,
+        cores: chips * 2,
         mp: r.layout.mp,
         replicas: r.layout.replicas,
         global_batch: r.layout.global_batch,
@@ -288,14 +479,18 @@ pub fn sweep_point(s: &ScalingScenario, m: &ModelProfile, chips: usize) -> Sweep
         gradsum_cores: r.phase_cores(Phase::GradSum),
         update_shards: r.phase_cores(Phase::WeightUpdate),
         eval_cores: r.phase_cores(Phase::Eval),
-        shard_imbalance: shard_imbalance(m, r.participating_cores),
+        shard_imbalance,
         spatial_speedup: r.spatial_speedup,
-        collective_makespan_seconds: gradsum_contention_makespan(
-            m.params * 4.0,
-            (r.participating_cores / 2).max(1),
-            s.gradsum.is_2d(),
-        ),
+        collective_makespan_seconds,
     }
+}
+
+/// Evaluate one (scenario, chips) grid point. Single-point convenience
+/// form: builds a throwaway context and cache, so the record is identical
+/// to what [`SweepRunner::run_jobs`] produces for the same point.
+pub fn sweep_point(s: &ScalingScenario, m: &ModelProfile, chips: usize) -> SweepRecord {
+    let ctx = ScenarioCtx::for_profile(m.clone());
+    sweep_point_ctx(s, &ctx, chips, &SweepCache::default())
 }
 
 /// One ring step under contention: every chip ships half a `chunk_bytes`

@@ -1,0 +1,28 @@
+//! Tier-1 perf harness for the sweep engine: run the full 5-model §2
+//! ablation grid through the pre-memoization serial reference and the
+//! memoized serial/parallel engines, cross-check byte-identity, and
+//! record the wall-clocks in `BENCH_sweep.json` at the workspace root so
+//! every `cargo test` run refreshes the perf trajectory. Timing
+//! assertions are deliberately absent — CI machines are noisy; the
+//! recorded numbers are the artifact.
+
+use tpu_pod_train::scenario::{run_sweep_bench, AblationGrid};
+
+#[test]
+fn full_grid_bench_records_perf_trajectory() {
+    let grid = AblationGrid::full_paper();
+    let bench = run_sweep_bench(&grid, 0).expect("sweep bench (byte-identity cross-check)");
+    assert_eq!(bench.scenarios, 80);
+    assert_eq!(bench.points, 480);
+    assert!(bench.baseline_s > 0.0 && bench.serial_s > 0.0 && bench.parallel_s > 0.0);
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sweep.json");
+    bench.write(path).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+
+    // Round-trip: the record parses and carries the headline fields.
+    let text = std::fs::read_to_string(path).unwrap();
+    let j = tpu_pod_train::util::json::Json::parse(&text).unwrap();
+    assert_eq!(j.get("points").and_then(|v| v.as_usize()), Some(480));
+    let speedup = j.get("speedup_vs_baseline").and_then(|v| v.as_f64()).unwrap();
+    assert!(speedup > 0.0, "speedup field must be populated, got {speedup}");
+}

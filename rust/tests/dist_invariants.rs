@@ -15,7 +15,10 @@ use tpu_pod_train::data::synthetic::TranslationTask;
 use tpu_pod_train::evaluation::EvalSharding;
 use tpu_pod_train::fabric::run_spmd;
 use tpu_pod_train::models::{all_models, Layout};
-use tpu_pod_train::netsim::{ArAlgo, CostModel, Dir, Message, NetParams, NetSim, Torus};
+use tpu_pod_train::netsim::{
+    ring_step_makespan, torus2d_gradsum_makespan, ArAlgo, CostModel, Dir, Message, NetParams,
+    NetSim, Torus,
+};
 use tpu_pod_train::scenario::gradsum_contention_makespan;
 use tpu_pod_train::simulator::{simulate, SimOptions};
 use tpu_pod_train::testing::forall;
@@ -506,6 +509,90 @@ fn contention_confirms_halo_neighbor_overlap() {
             "{nx}x{ny}: event {event} vs analytic-minus-overhead {expected}"
         );
     }
+}
+
+/// The netsim symmetry fast-path prices the 4-phase bidirectional 2-D
+/// schedule from ONE representative ring row and column; under uniform
+/// payloads the torus decomposes into identical rings sharing no links,
+/// so the fast path must match the full event-driven simulation (which
+/// schedules every ring of every row/column) to within 1e-9 on the
+/// 16/64/256/1024-chip tori the sweeps price.
+#[test]
+fn fastpath_matches_full_event_simulation_on_pod_tori() {
+    for chips in [16usize, 64, 256, 1024] {
+        for mbytes in [1.0f64, 102.4, 400.0] {
+            let bytes = mbytes * 1e6;
+            let full = gradsum_contention_makespan(bytes, chips, true);
+            let fast =
+                torus2d_gradsum_makespan(Torus::for_chips(chips), bytes, &NetParams::default());
+            assert!(
+                (fast - full).abs() <= 1e-9,
+                "{chips} chips, {mbytes} MB: fast {fast} vs full event-driven {full}"
+            );
+        }
+    }
+}
+
+/// Property form of the symmetry argument: for any pod-slice torus and
+/// payload, one representative bidirectional ring step equals the full
+/// torus-wide batch of the same steps — and the composed 2-D schedule
+/// agrees end to end.
+#[test]
+fn prop_fastpath_ring_symmetry_exact() {
+    forall(
+        60,
+        |rng| {
+            let chips = 1usize << (rng.below(7) + 4); // 16 .. 1024
+            let kbytes = rng.below(400_000) as usize + 1;
+            (chips, kbytes)
+        },
+        |&(chips, kbytes)| {
+            // Shrinking may propose degenerate inputs; skip them so a
+            // failure still shrinks cleanly.
+            if chips < 4 || !chips.is_power_of_two() || kbytes == 0 {
+                return Ok(());
+            }
+            let bytes = kbytes as f64 * 1e3;
+            let p = NetParams::default();
+            let torus = Torus::for_chips(chips);
+            // One ring step, X direction, against the full-torus batch.
+            let fast_step = ring_step_makespan(torus.nx, bytes, &p);
+            let mut sim = NetSim::new(torus, p.link_bw, p.link_latency);
+            let msgs: Vec<Message> = torus
+                .coords()
+                .flat_map(|c| {
+                    [
+                        Message {
+                            src: c,
+                            dst: torus.step(c, Dir::XPlus),
+                            bytes: bytes / 2.0,
+                            ready_at: 0.0,
+                        },
+                        Message {
+                            src: c,
+                            dst: torus.step(c, Dir::XMinus),
+                            bytes: bytes / 2.0,
+                            ready_at: 0.0,
+                        },
+                    ]
+                })
+                .collect();
+            let full_step = sim.makespan(&msgs);
+            if (fast_step - full_step).abs() > 1e-12 {
+                return Err(format!(
+                    "{chips} chips, {kbytes} kB ring step: fast {fast_step} vs {full_step}"
+                ));
+            }
+            let full = gradsum_contention_makespan(bytes, chips, true);
+            let fast = torus2d_gradsum_makespan(torus, bytes, &p);
+            if (fast - full).abs() > 1e-9 {
+                return Err(format!(
+                    "{chips} chips, {kbytes} kB schedule: fast {fast} vs {full}"
+                ));
+            }
+            Ok(())
+        },
+    );
 }
 
 /// The idle-core regression guard for the participation-aware cost layer:

@@ -1,0 +1,85 @@
+//! Determinism contract of the parallel sweep engine: for every preset
+//! and for the ablation grid, `SweepRunner::run_jobs(N)` must serialize
+//! byte-identically to `run_jobs(1)` — worker count and scheduling order
+//! can never leak into a report. Also pins the memoized engine against
+//! the uncached single-point evaluator.
+
+use tpu_pod_train::scenario::{
+    fig7_scenarios, fig8_scenarios, fig9_scenarios, sweep_point, table1_scenarios, AblationGrid,
+    SweepRunner,
+};
+
+fn assert_jobs_invariant(runner: &SweepRunner) {
+    let serial = runner.run_jobs(1).expect("serial sweep");
+    let serial_dump = serial.dump();
+    for jobs in [2usize, 3, 8, 0] {
+        let parallel = runner.run_jobs(jobs).expect("parallel sweep");
+        assert_eq!(
+            serial_dump,
+            parallel.dump(),
+            "jobs={jobs}: parallel report is not byte-identical to serial"
+        );
+    }
+}
+
+#[test]
+fn fig7_preset_parallel_is_byte_identical() {
+    assert_jobs_invariant(&SweepRunner::new(fig7_scenarios()));
+}
+
+#[test]
+fn fig8_preset_parallel_is_byte_identical() {
+    assert_jobs_invariant(&SweepRunner::new(fig8_scenarios(&[256, 1024, 2048])));
+}
+
+#[test]
+fn fig9_preset_parallel_is_byte_identical() {
+    assert_jobs_invariant(&SweepRunner::new(fig9_scenarios()));
+}
+
+#[test]
+fn table1_preset_parallel_is_byte_identical() {
+    assert_jobs_invariant(&SweepRunner::new(table1_scenarios()));
+}
+
+#[test]
+fn ablation_grid_parallel_is_byte_identical() {
+    // Full axis cross-product; chip ladder trimmed to keep tier-1 fast
+    // (the full ladder runs in tests/bench_sweep.rs).
+    let mut grid = AblationGrid::full_paper();
+    grid.chips = vec![16, 256];
+    assert_jobs_invariant(&SweepRunner::new(grid.scenarios()));
+}
+
+#[test]
+fn memoized_engine_matches_uncached_point_evaluator() {
+    // The engine's memoized kernels and hoisted census must be invisible:
+    // every record equals what the standalone single-point evaluator
+    // (fresh cache per point) produces, byte for byte.
+    let scenarios = fig9_scenarios();
+    let report = SweepRunner::new(scenarios.clone()).run().expect("sweep");
+    let mut i = 0;
+    for s in &scenarios {
+        let m = s.profile().expect("profile");
+        for &chips in &s.chips {
+            let reference = sweep_point(s, &m, chips);
+            assert_eq!(
+                report.records[i].to_json().dump(),
+                reference.to_json().dump(),
+                "{} @ {chips} chips diverged from the uncached evaluator",
+                s.name
+            );
+            i += 1;
+        }
+    }
+    assert_eq!(i, report.records.len());
+}
+
+#[test]
+fn validation_failure_reports_before_any_work_in_parallel_mode() {
+    let mut grid = AblationGrid::full_paper();
+    grid.models = vec!["resnet50".into(), "alexnet".into()];
+    grid.chips = vec![16];
+    let err = SweepRunner::new(grid.scenarios()).run_jobs(4).unwrap_err();
+    assert!(err.contains("alexnet"), "{err}");
+}
