@@ -10,6 +10,7 @@
 
 use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
 use tpu_pod_train::optim::AdamConfig;
+use tpu_pod_train::runtime::BackendChoice;
 use tpu_pod_train::util::cli::Cli;
 
 fn main() -> anyhow::Result<()> {
@@ -28,6 +29,8 @@ fn main() -> anyhow::Result<()> {
         opt: OptChoice::Adam { cfg: AdamConfig::default(), lr: a.get_f64("lr", 1e-3) as f32 },
         use_wus: true,
         gradsum: GradSumMode::Pipelined { quantum: 8192 },
+        backend: BackendChoice::Reference,
+        batch_override: None,
         seed: 42,
         task_difficulty: 0.05,
         image_alpha: 2.0,
@@ -36,8 +39,8 @@ fn main() -> anyhow::Result<()> {
     };
     println!("== e2e_train: {} on {} cores, {} steps ==", cfg.model, cfg.cores, cfg.steps);
     let rep = train(&cfg)?;
-    println!("params: {} | init {:.1}s | wall {:.1}s | PJRT {:.1}s",
-             rep.params_total, rep.init_s, rep.wallclock_s, rep.pjrt_s);
+    println!("params: {} | init {:.1}s | wall {:.1}s | exec {:.1}s",
+             rep.params_total, rep.init_s, rep.wallclock_s, rep.exec_s);
     println!("{}", rep.breakdown.report());
     println!("\nloss curve (mean per 10 steps):");
     for (i, chunk) in rep.step_losses.chunks(10).enumerate() {

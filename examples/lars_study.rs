@@ -8,6 +8,7 @@
 use tpu_pod_train::benchkit::Table;
 use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
 use tpu_pod_train::optim::{LarsConfig, LarsVariant};
+use tpu_pod_train::runtime::BackendChoice;
 
 fn run(variant: LarsVariant, momentum: f32, lr: f32) -> (Option<usize>, f64) {
     let cfg = TrainConfig {
@@ -22,6 +23,8 @@ fn run(variant: LarsVariant, momentum: f32, lr: f32) -> (Option<usize>, f64) {
         },
         use_wus: true,
         gradsum: GradSumMode::Pipelined { quantum: 4096 },
+        backend: BackendChoice::Reference,
+        batch_override: None,
         seed: 7,
         // Hard task (low signal) + warmup/decay schedule: the regime where
         // the momentum-scaling difference between Figs. 5 and 6 matters.

@@ -1,10 +1,12 @@
 //! Quickstart: train the tiny transformer LM for 60 steps on 4 simulated
-//! TPU cores, with every paper technique on its default setting.
+//! TPU cores, with every paper technique on its default setting. Runs on
+//! the in-Rust reference backend — no artifacts needed.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
 
 use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
 use tpu_pod_train::optim::AdamConfig;
+use tpu_pod_train::runtime::BackendChoice;
 
 fn main() -> anyhow::Result<()> {
     let cfg = TrainConfig {
@@ -16,6 +18,8 @@ fn main() -> anyhow::Result<()> {
         opt: OptChoice::Adam { cfg: AdamConfig::default(), lr: 3e-3 },
         use_wus: true,                                // §2 weight-update sharding
         gradsum: GradSumMode::Pipelined { quantum: 4096 }, // §2 pipelined 2-D gradsum
+        backend: BackendChoice::Reference,
+        batch_override: None,
         seed: 0,
         task_difficulty: 0.05,
         image_alpha: 2.0,

@@ -1,12 +1,15 @@
 //! PJRT runtime microbenchmarks: per-execute latency of the AOT artifacts
-//! (the L3 hot path's compute calls). Requires `make artifacts`.
+//! (the L3 hot path's compute calls). PJRT-backend only: requires
+//! `artifacts/` (`python python/compile/aot.py`) and the real `xla`
+//! binding (see rust/src/runtime/xla.rs).
 
 use tpu_pod_train::benchkit::Bench;
 use tpu_pod_train::runtime::{HostTensor, Runtime};
 use tpu_pod_train::util::rng::Rng;
 
 fn main() {
-    let rt = Runtime::with_dir("artifacts").expect("run `make artifacts`");
+    let rt = Runtime::with_dir("artifacts")
+        .expect("PJRT backend required: build artifacts/ with python/compile/aot.py");
     let mut rng = Rng::new(0);
     let mut bench = Bench::default();
 

@@ -12,6 +12,7 @@
 use tpu_pod_train::benchkit::Table;
 use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
 use tpu_pod_train::optim::{LarsConfig, LarsVariant};
+use tpu_pod_train::runtime::BackendChoice;
 use tpu_pod_train::scenario::{table1_scenarios, SweepRunner};
 
 fn main() {
@@ -64,6 +65,8 @@ fn main() {
             },
             use_wus: true,
             gradsum: GradSumMode::Pipelined { quantum: 4096 },
+            backend: BackendChoice::Reference,
+            batch_override: None,
             seed: 7,
             task_difficulty: 0.0,
             image_alpha: 0.3,

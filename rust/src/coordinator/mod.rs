@@ -1,14 +1,19 @@
 //! The L3 coordinator: a real data-parallel trainer over the in-process
-//! pod. Each worker thread owns a PJRT runtime executing the AOT-compiled
-//! train/eval steps; the coordinator composes the paper's techniques:
+//! pod. Each worker thread owns a fwd/bwd executor — the in-Rust
+//! [`crate::runtime::ReferenceBackend`] by default, or a PJRT runtime
+//! executing the AOT-compiled train/eval steps — behind the
+//! [`crate::runtime::Backend`] boundary; the coordinator composes the
+//! paper's techniques:
 //!
-//! * per-core fwd/bwd via the L2/L1 HLO (Python never on this path),
+//! * per-core fwd/bwd with exact analytic gradients (reference executor
+//!   in tier-1; the L2/L1 HLO via PJRT when artifacts are available),
 //! * pipelined 2-D gradient summation on real gradient tensors (§2),
-//! * replicated or sharded (WUS, §2 Fig. 4) optimizer updates,
+//! * replicated or sharded (WUS, §2 Fig. 4) optimizer updates —
+//!   LARS, Adam and momentum SGD,
 //! * the nested train-and-eval tight loop with distributed, padded,
 //!   masked evaluation (§2),
 //! * MLPerf timing rules (init excluded) via `metrics::RunLog`.
 
 pub mod trainer;
 
-pub use trainer::{train, GradSumMode, OptChoice, TrainConfig, TrainReport};
+pub use trainer::{train, EvalPoint, GradSumMode, OptChoice, TrainConfig, TrainReport};

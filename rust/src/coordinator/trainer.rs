@@ -1,6 +1,12 @@
 //! The data-parallel trainer (see module docs in `coordinator`).
+//!
+//! The step loop is backend-agnostic: a [`Backend`] (selected by
+//! [`TrainConfig::backend`]) turns params + batch into loss + exact
+//! gradients, and everything around it — input pipeline, 2-D gradient
+//! summation, replicated/sharded weight update, distributed eval — is the
+//! same coordinator code whether the executor is the in-Rust reference
+//! fwd/bwd or PJRT over AOT artifacts.
 
-use std::rc::Rc;
 use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
@@ -12,13 +18,17 @@ use crate::data::synthetic::{ImageTask, LmTask};
 use crate::evaluation::{distributed_eval, EvalChunk, EvalSharding};
 use crate::fabric::{run_spmd, Endpoint};
 use crate::metrics::StepBreakdown;
+use crate::models::proxy::{proxy_dims, TaskKind};
 use crate::optim::{
     adam_step, lars_step, sgd_momentum_step, AdamConfig, AdamState, LarsConfig, LarsState,
 };
-use crate::runtime::{Manifest, ParamSpec, Runtime};
+use crate::runtime::{
+    param_specs_for, Backend, BackendChoice, Manifest, ParamSpec, PjRtBackend, Precision,
+    ReferenceBackend, StepBatch,
+};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
-use crate::wus::{ShardPlan, ShardedAdam, ShardedLars};
+use crate::wus::{ShardPlan, ShardedAdam, ShardedLars, ShardedSgd};
 
 /// Optimizer selection.
 #[derive(Clone, Copy, Debug)]
@@ -41,7 +51,8 @@ pub enum GradSumMode {
 /// Trainer configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
-    /// Manifest model key, e.g. "transformer_tiny" or "cnn_mini".
+    /// Model key: a proxy family (`transformer`, `resnet50`, …) for the
+    /// reference backend, a manifest key (`transformer_tiny`) for PJRT.
     pub model: String,
     /// Data-parallel worker threads ("cores"); power of two.
     pub cores: usize,
@@ -53,6 +64,11 @@ pub struct TrainConfig {
     /// Weight-update sharding on/off (§2 Fig. 4).
     pub use_wus: bool,
     pub gradsum: GradSumMode,
+    /// Which fwd/bwd executor drives the step loop.
+    pub backend: BackendChoice,
+    /// Per-core batch override (reference backend only; PJRT shapes are
+    /// fixed at AOT time). `None` = the model's default.
+    pub batch_override: Option<usize>,
     pub seed: u64,
     /// LM label-noise floor (Lm) — drives the accuracy ceiling.
     pub task_difficulty: f64,
@@ -93,6 +109,8 @@ impl TrainConfig {
             opt: OptChoice::Adam { cfg: AdamConfig::default(), lr: 1e-3 },
             use_wus: false,
             gradsum: GradSumMode::Pipelined { quantum: 4096 },
+            backend: BackendChoice::Reference,
+            batch_override: None,
             seed: 0,
             task_difficulty: 0.05,
             image_alpha: 2.0,
@@ -121,40 +139,39 @@ pub struct TrainReport {
     /// First step whose eval met the quality target.
     pub converged_at: Option<usize>,
     pub params_total: usize,
-    /// Cumulative PJRT execute seconds (perf accounting).
-    pub pjrt_s: f64,
-}
-
-/// Workload family, inferred from the model key.
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
-enum Kind {
-    Lm,
-    Image,
+    /// Cumulative backend execute seconds (PJRT or reference fwd/bwd).
+    pub exec_s: f64,
 }
 
 /// Static per-run context shared (read-only) by all workers.
 struct RunCtx {
     cfg: TrainConfig,
-    kind: Kind,
+    kind: TaskKind,
     specs: Vec<ParamSpec>,
-    manifest_dir: std::path::PathBuf,
-    train_art: String,
-    eval_art: String,
     batch: usize,
     seq: usize,
     vocab: usize,
     image: usize,
     classes: usize,
+    exec: BackendCtx,
 }
 
-fn kind_of(model: &str) -> Result<Kind> {
-    if model.starts_with("transformer") {
-        Ok(Kind::Lm)
-    } else if model.starts_with("cnn") {
-        Ok(Kind::Image)
-    } else {
-        bail!("unknown model family: {model}")
-    }
+/// Resolved executor context (model lookup happens once, in `train()`).
+enum BackendCtx {
+    Reference { dims: crate::models::proxy::ProxyDims },
+    PjRt(PjRtCtx),
+}
+
+struct PjRtCtx {
+    manifest_dir: std::path::PathBuf,
+    train_art: String,
+    eval_art: String,
+}
+
+fn kind_of(model: &str) -> Result<TaskKind> {
+    proxy_dims(model)
+        .map(|d| d.kind)
+        .ok_or_else(|| anyhow!("unknown model family: {model}"))
 }
 
 fn init_params(specs: &[ParamSpec], seed: u64) -> Vec<Vec<f32>> {
@@ -180,6 +197,23 @@ fn init_params(specs: &[ParamSpec], seed: u64) -> Vec<Vec<f32>> {
         .collect()
 }
 
+/// Build this worker's backend. PJRT runtimes are `Rc`-based (not `Send`),
+/// so construction happens inside the worker thread.
+fn make_backend(ctx: &RunCtx) -> Result<Box<dyn Backend>> {
+    match &ctx.exec {
+        BackendCtx::Reference { dims } => {
+            let precision = match ctx.cfg.backend {
+                BackendChoice::ReferenceBf16 => Precision::Bf16,
+                _ => Precision::F32,
+            };
+            Ok(Box::new(ReferenceBackend::with_dims(*dims, precision)))
+        }
+        BackendCtx::PjRt(p) => {
+            Ok(Box::new(PjRtBackend::new(&p.manifest_dir, &p.train_art, &p.eval_art)?))
+        }
+    }
+}
+
 /// Replicated optimizer state (per tensor).
 enum OptState {
     Adam(Vec<AdamState>),
@@ -187,31 +221,73 @@ enum OptState {
     Sgd(Vec<Vec<f32>>),
 }
 
+/// Sharded optimizer (weight-update sharding, §2 Fig. 4).
+enum ShardedOpt {
+    Lars(ShardedLars),
+    Adam(ShardedAdam),
+    Sgd(ShardedSgd),
+}
+
 /// Run the trainer; returns the rank-0 report.
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     assert!(cfg.cores.is_power_of_two(), "cores must be a power of two");
-    let manifest = Manifest::load(Manifest::default_dir())?;
-    let specs: Vec<ParamSpec> = manifest.model_params(&cfg.model)?.to_vec();
-    let kind = kind_of(&cfg.model)?;
-    let family = cfg.model.split('_').next().unwrap().to_string();
-    let preset = cfg.model.split_once('_').map(|(_, p)| p).unwrap_or("tiny").to_string();
-    let get = |key: &str| manifest.config_usize(&cfg.model, key);
-    let ctx = RunCtx {
-        cfg: cfg.clone(),
-        kind,
-        specs,
-        manifest_dir: manifest.dir.clone(),
-        train_art: format!("{family}_train_{preset}"),
-        eval_art: format!("{family}_eval_{preset}"),
-        batch: get("batch_per_core")?,
-        seq: if kind == Kind::Lm { get("seq")? } else { 0 },
-        vocab: if kind == Kind::Lm { get("vocab")? } else { 0 },
-        image: if kind == Kind::Image { get("image")? } else { 0 },
-        classes: if kind == Kind::Image { get("classes")? } else { 0 },
+    let ctx = match cfg.backend {
+        BackendChoice::Reference | BackendChoice::ReferenceBf16 => {
+            let dims = proxy_dims(&cfg.model).ok_or_else(|| {
+                anyhow!(
+                    "no reference proxy for model {:?} (known families: {})",
+                    cfg.model,
+                    crate::models::proxy::known_families()
+                )
+            })?;
+            RunCtx {
+                cfg: cfg.clone(),
+                kind: dims.kind,
+                specs: param_specs_for(&dims),
+                batch: cfg.batch_override.unwrap_or(dims.batch_per_core),
+                seq: dims.seq,
+                vocab: dims.vocab,
+                image: dims.image,
+                classes: dims.classes,
+                exec: BackendCtx::Reference { dims },
+            }
+        }
+        BackendChoice::PjRt => {
+            if cfg.batch_override.is_some() {
+                bail!("per-core batch override requires the reference backend \
+                       (PJRT artifact shapes are fixed at AOT time)");
+            }
+            let manifest = Manifest::load(Manifest::default_dir())?;
+            let specs: Vec<ParamSpec> = manifest.model_params(&cfg.model)?.to_vec();
+            let kind = kind_of(&cfg.model)?;
+            let family = cfg.model.split('_').next().unwrap().to_string();
+            let preset =
+                cfg.model.split_once('_').map(|(_, p)| p).unwrap_or("tiny").to_string();
+            let get = |key: &str| manifest.config_usize(&cfg.model, key);
+            let pjrt = PjRtCtx {
+                manifest_dir: manifest.dir.clone(),
+                train_art: format!("{family}_train_{preset}"),
+                eval_art: format!("{family}_eval_{preset}"),
+            };
+            // Fail fast before spawning workers: missing artifacts, and a
+            // missing PJRT client (e.g. the offline `xla` stub), must be
+            // clean errors rather than worker panics.
+            manifest.artifact(&pjrt.train_art)?;
+            manifest.artifact(&pjrt.eval_art)?;
+            drop(crate::runtime::Runtime::with_manifest(std::rc::Rc::new(manifest.clone()))?);
+            RunCtx {
+                cfg: cfg.clone(),
+                kind,
+                specs,
+                batch: get("batch_per_core")?,
+                seq: if kind == TaskKind::Lm { get("seq")? } else { 0 },
+                vocab: if kind == TaskKind::Lm { get("vocab")? } else { 0 },
+                image: if kind == TaskKind::Image { get("image")? } else { 0 },
+                classes: if kind == TaskKind::Image { get("classes")? } else { 0 },
+                exec: BackendCtx::PjRt(pjrt),
+            }
+        }
     };
-    // Fail fast if the artifacts are missing before spawning workers.
-    manifest.artifact(&ctx.train_art)?;
-    manifest.artifact(&ctx.eval_art)?;
 
     let results = Mutex::new(Vec::<(usize, TrainReport)>::new());
     run_spmd(cfg.cores, |ep| {
@@ -233,8 +309,7 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
     let place = Placement::new(world);
 
     // ---- init phase (excluded from the MLPerf clock) ---------------------
-    let rt = Runtime::with_manifest(Rc::new(Manifest::load(&ctx.manifest_dir)?))?;
-    rt.warmup(&[&ctx.train_art, &ctx.eval_art])?;
+    let backend = make_backend(ctx)?;
 
     // Rank 0 initializes; weights ride the broadcast collective.
     let mut params: Vec<Vec<f32>> = if ep.rank == 0 {
@@ -256,19 +331,20 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
     let is_1d: Vec<bool> = ctx.specs.iter().map(|s| s.shape.len() <= 1).collect();
     let sizes: Vec<usize> = ctx.specs.iter().map(|s| s.numel()).collect();
     let mut replicated: Option<OptState> = None;
-    let mut sharded_lars: Option<ShardedLars> = None;
-    let mut sharded_adam: Option<ShardedAdam> = None;
+    let mut sharded: Option<ShardedOpt> = None;
     if cfg.use_wus {
         let plan = ShardPlan::balanced(&sizes, world);
-        match cfg.opt {
+        sharded = Some(match cfg.opt {
             OptChoice::Lars { cfg: lc, .. } => {
-                sharded_lars = Some(ShardedLars::new(lc, plan, ep.rank, is_1d.clone()));
+                ShardedOpt::Lars(ShardedLars::new(lc, plan, ep.rank, is_1d.clone()))
             }
             OptChoice::Adam { cfg: ac, .. } => {
-                sharded_adam = Some(ShardedAdam::new(ac, plan, ep.rank));
+                ShardedOpt::Adam(ShardedAdam::new(ac, plan, ep.rank))
             }
-            OptChoice::Sgd { .. } => bail!("WUS+SGD not wired; use Adam or LARS"),
-        }
+            OptChoice::Sgd { momentum, .. } => {
+                ShardedOpt::Sgd(ShardedSgd::new(momentum, plan, ep.rank))
+            }
+        });
     } else {
         replicated = Some(match cfg.opt {
             OptChoice::Adam { .. } => {
@@ -294,32 +370,22 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
     for step in 1..=cfg.steps {
         // -- input pipeline --
         let t_in = Timer::start();
-        let (images, ints_a, ints_b): (Vec<f32>, Vec<i32>, Vec<i32>) = match ctx.kind {
-            Kind::Lm => {
+        let batch = match ctx.kind {
+            TaskKind::Lm => {
                 let b = lm_task.batch(&mut data_rng, ctx.batch, ctx.seq);
-                (vec![], b.tokens, b.targets)
+                StepBatch::Lm { tokens: b.tokens, targets: b.targets }
             }
-            Kind::Image => {
+            TaskKind::Image => {
                 let b = img_task.batch(&mut data_rng, ctx.batch);
-                (b.images, b.labels, vec![])
+                StepBatch::Image { images: b.images, labels: b.labels }
             }
         };
         report.breakdown.input_s += t_in.secs();
 
-        // -- fwd/bwd on the AOT executable --
+        // -- fwd/bwd on the backend executor --
         let t_c = Timer::start();
-        let mut f32_inputs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
-        if ctx.kind == Kind::Image {
-            f32_inputs.push(&images);
-        }
-        let ints: Vec<&[i32]> = match ctx.kind {
-            Kind::Lm => vec![&ints_a, &ints_b],
-            Kind::Image => vec![&ints_a],
-        };
-        let outputs = rt.execute_raw(&ctx.train_art, &f32_inputs, &ints)?;
+        let (loss, mut grads) = backend.train_step(&params, &batch)?;
         report.breakdown.compute_s += t_c.secs();
-        let loss = outputs[0].data[0];
-        let mut grads: Vec<Vec<f32>> = outputs.into_iter().skip(1).map(|t| t.data).collect();
 
         // -- gradient summation (§2) --
         let t_g = Timer::start();
@@ -372,18 +438,15 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
                 }
             }
             None => {
-                if let Some(sl) = &mut sharded_lars {
-                    let lr = match cfg.opt {
-                        OptChoice::Lars { lr, .. } => lr,
-                        _ => unreachable!(),
-                    };
-                    sl.step(ep, &group, lr * lrf, &mut params, &grads);
-                } else if let Some(sa) = &mut sharded_adam {
-                    let lr = match cfg.opt {
-                        OptChoice::Adam { lr, .. } => lr,
-                        _ => unreachable!(),
-                    };
-                    sa.step(ep, &group, lr * lrf, &mut params, &grads);
+                let lr = match cfg.opt {
+                    OptChoice::Adam { lr, .. }
+                    | OptChoice::Lars { lr, .. }
+                    | OptChoice::Sgd { lr, .. } => lr,
+                };
+                match sharded.as_mut().expect("wus optimizer") {
+                    ShardedOpt::Lars(sl) => sl.step(ep, &group, lr * lrf, &mut params, &grads),
+                    ShardedOpt::Adam(sa) => sa.step(ep, &group, lr * lrf, &mut params, &grads),
+                    ShardedOpt::Sgd(ss) => ss.step(ep, &group, lr * lrf, &mut params, &grads),
                 }
             }
         }
@@ -395,7 +458,9 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
         if cfg.eval_every > 0 && step % cfg.eval_every == 0 {
             let sharding = EvalSharding::new(cfg.eval_examples, world, ctx.batch);
             let res = distributed_eval(ep, &group, &sharding, |chunk| {
-                eval_chunk(&rt, ctx, &params, chunk, &lm_task, &img_task)
+                let eb = eval_batch_for(ctx, chunk, &lm_task, &img_task);
+                backend
+                    .eval_step(&params, &eb, &chunk.mask)
                     .expect("eval execution failed")
             });
             report.evals.push(EvalPoint { step, loss: res.loss, accuracy: res.accuracy });
@@ -408,48 +473,43 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
         }
     }
     report.wallclock_s = wall.secs();
-    report.pjrt_s = *rt.execute_seconds.borrow();
+    report.exec_s = backend.execute_seconds();
     Ok(report)
 }
 
-fn eval_chunk(
-    rt: &Runtime,
+/// Build the (deterministic, index-seeded) eval batch for one chunk —
+/// every core regenerates the same global example for the same index, so
+/// the distributed metrics are independent of the core count.
+fn eval_batch_for(
     ctx: &RunCtx,
-    params: &[Vec<f32>],
     chunk: &EvalChunk,
     lm_task: &LmTask,
     img_task: &ImageTask,
-) -> Result<(f32, f32, f32)> {
+) -> StepBatch {
     let eval_seed = ctx.cfg.seed ^ 0x5EED_0000;
-    let mut f32_inputs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
     match ctx.kind {
-        Kind::Lm => {
-            let mut tokens = Vec::with_capacity(ctx.batch * ctx.seq);
-            let mut targets = Vec::with_capacity(ctx.batch * ctx.seq);
+        TaskKind::Lm => {
+            let mut tokens = Vec::with_capacity(chunk.indices.len() * ctx.seq);
+            let mut targets = Vec::with_capacity(chunk.indices.len() * ctx.seq);
             for &g in &chunk.indices {
                 let mut rng = Rng::new(eval_seed).fold_in(g as u64);
                 let b = lm_task.batch(&mut rng, 1, ctx.seq);
                 tokens.extend(b.tokens);
                 targets.extend(b.targets);
             }
-            f32_inputs.push(&chunk.mask);
-            let out = rt.execute_raw(&ctx.eval_art, &f32_inputs, &[&tokens, &targets])?;
-            Ok((out[0].data[0], out[1].data[0], out[2].data[0]))
+            StepBatch::Lm { tokens, targets }
         }
-        Kind::Image => {
+        TaskKind::Image => {
             let dim = ctx.image * ctx.image * 3;
-            let mut images = Vec::with_capacity(ctx.batch * dim);
-            let mut labels = Vec::with_capacity(ctx.batch);
+            let mut images = Vec::with_capacity(chunk.indices.len() * dim);
+            let mut labels = Vec::with_capacity(chunk.indices.len());
             for &g in &chunk.indices {
                 let mut rng = Rng::new(eval_seed).fold_in(g as u64);
                 let b = img_task.batch(&mut rng, 1);
                 images.extend(b.images);
                 labels.extend(b.labels);
             }
-            f32_inputs.push(&images);
-            f32_inputs.push(&chunk.mask);
-            let out = rt.execute_raw(&ctx.eval_art, &f32_inputs, &[&labels])?;
-            Ok((out[0].data[0], out[1].data[0], out[2].data[0]))
+            StepBatch::Image { images, labels }
         }
     }
 }

@@ -9,9 +9,13 @@
 //! * L3 (this crate) — coordinator: data-parallel trainer, 2-D torus
 //!   gradient summation, weight-update sharding, spatial partitioning,
 //!   distributed evaluation, pod simulator.
+//! * Executors — the trainer drives a [`runtime::Backend`]: the in-Rust
+//!   reference fwd/bwd ([`runtime::reference`], exact analytic gradients
+//!   over the [`models::proxy`] dense proxies; no artifacts, tier-1) or
+//!   PJRT over the AOT artifacts ([`runtime::PjRtBackend`]).
 //! * L2/L1 (python/, build-time only) — JAX model fwd/bwd + Pallas kernels,
 //!   AOT-lowered to `artifacts/*.hlo.txt` and executed via PJRT from
-//!   [`runtime`].
+//!   [`runtime`] when `--backend pjrt` is selected.
 //!
 //! # Cost attribution, scenario sweeps & test matrix
 //!
@@ -52,8 +56,11 @@
 //!   halo round-trips) via [`testing::forall`],
 //! * `rust/tests/scenario_golden.rs` — golden-trace fixtures pinning one
 //!   sweep point per model plus strong-scaling monotonicity checks,
-//! * `rust/tests/integration.rs` — the real-trainer loop; skips cleanly
-//!   when `artifacts/` is absent (run `make artifacts` to enable).
+//! * `rust/tests/integration.rs` — the real-trainer loop on the reference
+//!   backend (always runs: convergence, WUS/gradsum equivalences, seeded
+//!   bit-identical determinism); the Pallas kernel-parity tests skip
+//!   unless the PJRT backend is available (`python python/compile/aot.py`
+//!   + the real `xla` binding, see `rust/src/runtime/README.md`).
 
 pub mod benchkit;
 pub mod checkpoint;

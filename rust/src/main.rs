@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //! * `train`    — run the real data-parallel trainer on the in-process pod
-//!                (AOT artifacts via PJRT; see `make artifacts`).
+//!                (`--backend reference` needs no artifacts and is the
+//!                CI-gated default; `--backend pjrt` executes AOT
+//!                artifacts built by `python python/compile/aot.py`).
 //! * `simulate` — TPU-v3 pod time-to-train simulation for one MLPerf model.
 //! * `sweep`    — scenario sweep engine: models × pod slices, JSON report
 //!                (the Figs. 7-10 / Table 1 experiment driver); `--grid`
@@ -16,7 +18,7 @@ use tpu_pod_train::config::Config;
 use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
 use tpu_pod_train::models::{all_models, model};
 use tpu_pod_train::optim::{AdamConfig, LarsConfig, LarsVariant};
-use tpu_pod_train::runtime::Manifest;
+use tpu_pod_train::runtime::{BackendChoice, Manifest};
 use tpu_pod_train::scenario::{
     compare_reports, AblationGrid, BatchSchedule, GradSumChoice, ScalingScenario, SweepReport,
     SweepRunner,
@@ -49,9 +51,11 @@ fn main() {
 fn cmd_train(tokens: &[String]) -> i32 {
     let cli = Cli::new("train", "run the real trainer on the in-process pod")
         .opt("config", "", "TOML config file (CLI flags override)")
-        .opt("model", "transformer_tiny", "manifest model key")
+        .opt("model", "transformer", "model family (reference) or manifest key (pjrt)")
+        .opt("backend", "reference", "fwd/bwd executor: reference | reference-bf16 | pjrt")
         .opt("cores", "4", "data-parallel workers (power of two)")
         .opt("steps", "100", "training steps")
+        .opt("batch-per-core", "0", "per-core batch override (reference backend; 0 = default)")
         .opt("eval-every", "25", "eval cadence in steps (0 = never)")
         .opt("eval-examples", "256", "evaluation set size")
         .opt("optimizer", "adam", "adam | lars | lars-scaled | sgd")
@@ -60,7 +64,8 @@ fn cmd_train(tokens: &[String]) -> i32 {
         .opt("target", "0", "quality target accuracy (0 = none)")
         .opt("seed", "0", "rng seed")
         .flag("wus", "shard the weight update across cores (paper §2)")
-        .flag("serial-gradsum", "disable the pipelined gradient summation");
+        .flag("serial-gradsum", "disable the pipelined gradient summation")
+        .flag("check-improved", "exit 1 unless the final loss beats the seeded-start loss (CI)");
     let a = match cli.parse_tokens(tokens) {
         Ok(a) => a,
         Err(msg) => {
@@ -97,9 +102,17 @@ fn cmd_train(tokens: &[String]) -> i32 {
             return 2;
         }
     };
+    let backend = match BackendChoice::parse(&get_s("backend", "reference")) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let batch_per_core = a.get_usize("batch-per-core", 0);
     let target = a.get_f64("target", 0.0);
     let cfg = TrainConfig {
-        model: get_s("model", "transformer_tiny"),
+        model: get_s("model", "transformer"),
         cores: a.get_usize("cores", file_cfg.usize_or("train.cores", 4)),
         steps: a.get_usize("steps", file_cfg.usize_or("train.steps", 100)),
         eval_every: a.get_usize("eval-every", 25),
@@ -111,6 +124,8 @@ fn cmd_train(tokens: &[String]) -> i32 {
         } else {
             GradSumMode::Pipelined { quantum: 4096 }
         },
+        backend,
+        batch_override: (batch_per_core > 0).then_some(batch_per_core),
         seed: a.get_usize("seed", 0) as u64,
         task_difficulty: 0.05,
         image_alpha: 2.0,
@@ -118,14 +133,19 @@ fn cmd_train(tokens: &[String]) -> i32 {
         warmup_steps: 0,
     };
     println!(
-        "training {} on {} cores, {} steps (wus={}, gradsum={:?})",
-        cfg.model, cfg.cores, cfg.steps, cfg.use_wus, cfg.gradsum
+        "training {} on {} cores, {} steps (backend={}, wus={}, gradsum={:?})",
+        cfg.model,
+        cfg.cores,
+        cfg.steps,
+        cfg.backend.label(),
+        cfg.use_wus,
+        cfg.gradsum
     );
     match train(&cfg) {
         Ok(rep) => {
             println!(
-                "init {:.1}s, train wall {:.1}s, params {}",
-                rep.init_s, rep.wallclock_s, rep.params_total
+                "init {:.1}s, train wall {:.1}s, exec {:.1}s, params {}",
+                rep.init_s, rep.wallclock_s, rep.exec_s, rep.params_total
             );
             println!("{}", rep.breakdown.report());
             let n = rep.step_losses.len();
@@ -139,6 +159,25 @@ fn cmd_train(tokens: &[String]) -> i32 {
             }
             if let Some(s) = rep.converged_at {
                 println!("quality target reached at step {s}");
+            }
+            // Seeded-start vs final loss (the CI live-trainer gate).
+            if !rep.step_losses.is_empty() {
+                let k = rep.step_losses.len().min(5);
+                let first: f32 = rep.step_losses[..k].iter().sum::<f32>() / k as f32;
+                let last: f32 =
+                    rep.step_losses[rep.step_losses.len() - k..].iter().sum::<f32>() / k as f32;
+                let improved = last < first;
+                println!(
+                    "loss start {first:.4} → final {last:.4} ({})",
+                    if improved { "improved" } else { "NOT improved" }
+                );
+                if a.flag("check-improved") && !improved {
+                    eprintln!("--check-improved: final loss did not beat the seeded-start loss");
+                    return 1;
+                }
+            } else if a.flag("check-improved") {
+                eprintln!("--check-improved: no steps ran");
+                return 1;
             }
             0
         }

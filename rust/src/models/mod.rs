@@ -3,7 +3,9 @@
 
 pub mod batchnorm;
 pub mod convergence;
+pub mod proxy;
 pub mod registry;
 
 pub use convergence::EpochCurve;
+pub use proxy::{proxy_dims, ProxyDims, TaskKind};
 pub use registry::{all_models, model, Layout, ModelProfile, Optimizer};

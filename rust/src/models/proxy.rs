@@ -1,0 +1,173 @@
+//! MLP-scale reference proxies for the MLPerf-0.6 registry models.
+//!
+//! The paper's benchmarks (ResNet-50, SSD, Mask-RCNN, Transformer, GNMT)
+//! are far too large to run forward/backward in-process, but the *trainer*
+//! — data pipeline, gradient summation, weight-update sharding, optimizer
+//! choice, distributed eval — is shape- and family-generic. Each registry
+//! model therefore gets a miniature dense proxy with the same task family
+//! (LM for the sequence models, image classification for the vision
+//! models) and a distinct width, so the live trainer exercises every §2
+//! technique per model without AOT artifacts. `runtime::reference` turns
+//! these dims into an executable fwd/bwd graph with exact analytic
+//! gradients.
+//!
+//! The proxy is keyed by model *family* (the prefix before the first `_`),
+//! so manifest-style keys like `transformer_tiny` resolve to the same
+//! family as the registry name `transformer`.
+
+/// Workload family of a model: drives the input pipeline and eval metric.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TaskKind {
+    /// Next-token language modelling ([`crate::data::synthetic::LmTask`]).
+    Lm,
+    /// Image classification ([`crate::data::synthetic::ImageTask`]).
+    Image,
+}
+
+/// Dense-proxy dimensions for one registry model family.
+#[derive(Clone, Copy, Debug)]
+pub struct ProxyDims {
+    pub family: &'static str,
+    pub kind: TaskKind,
+    /// Hidden width of the two dense trunk layers.
+    pub hidden: usize,
+    /// Default per-core batch (examples for Image, sequences for Lm).
+    pub batch_per_core: usize,
+    /// LM vocabulary (also the logit width for Lm proxies).
+    pub vocab: usize,
+    /// LM sequence length.
+    pub seq: usize,
+    /// Image side (inputs are `side * side * 3` NHWC f32).
+    pub image: usize,
+    /// Image class count (logit width for Image proxies).
+    pub classes: usize,
+}
+
+impl ProxyDims {
+    /// Flat input feature width seen by the first dense layer.
+    pub fn input_dim(&self) -> usize {
+        match self.kind {
+            TaskKind::Lm => self.vocab,
+            TaskKind::Image => self.image * self.image * 3,
+        }
+    }
+
+    /// Logit width.
+    pub fn output_dim(&self) -> usize {
+        match self.kind {
+            TaskKind::Lm => self.vocab,
+            TaskKind::Image => self.classes,
+        }
+    }
+}
+
+/// All proxy families (the five registry models plus the `cnn`/mini family
+/// the artifact pipeline uses for its trainable mini-models).
+pub const PROXY_FAMILIES: [ProxyDims; 6] = [
+    ProxyDims {
+        family: "transformer",
+        kind: TaskKind::Lm,
+        hidden: 96,
+        batch_per_core: 8,
+        vocab: 64,
+        seq: 16,
+        image: 0,
+        classes: 0,
+    },
+    ProxyDims {
+        family: "gnmt",
+        kind: TaskKind::Lm,
+        hidden: 64,
+        batch_per_core: 8,
+        vocab: 48,
+        seq: 12,
+        image: 0,
+        classes: 0,
+    },
+    ProxyDims {
+        family: "resnet50",
+        kind: TaskKind::Image,
+        hidden: 96,
+        batch_per_core: 8,
+        vocab: 0,
+        seq: 0,
+        image: 8,
+        classes: 10,
+    },
+    ProxyDims {
+        family: "ssd",
+        kind: TaskKind::Image,
+        hidden: 64,
+        batch_per_core: 8,
+        vocab: 0,
+        seq: 0,
+        image: 8,
+        classes: 8,
+    },
+    ProxyDims {
+        family: "maskrcnn",
+        kind: TaskKind::Image,
+        hidden: 80,
+        batch_per_core: 8,
+        vocab: 0,
+        seq: 0,
+        image: 8,
+        classes: 8,
+    },
+    ProxyDims {
+        family: "cnn",
+        kind: TaskKind::Image,
+        hidden: 96,
+        batch_per_core: 8,
+        vocab: 0,
+        seq: 0,
+        image: 8,
+        classes: 10,
+    },
+];
+
+/// Resolve a model key (registry name or manifest-style `family_preset`)
+/// to its proxy dims. `None` for unknown families.
+pub fn proxy_dims(model: &str) -> Option<ProxyDims> {
+    let family = model.split('_').next().unwrap_or(model);
+    PROXY_FAMILIES.iter().find(|d| d.family == family).copied()
+}
+
+/// The known proxy family names, comma-joined (for error messages — kept
+/// in sync with [`PROXY_FAMILIES`] by construction).
+pub fn known_families() -> String {
+    PROXY_FAMILIES.map(|d| d.family).join(", ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_registry_model_has_a_proxy() {
+        for m in crate::models::all_models() {
+            let d = proxy_dims(m.name).unwrap_or_else(|| panic!("no proxy for {}", m.name));
+            assert!(d.hidden > 0);
+            assert!(d.batch_per_core > 0);
+            assert!(d.input_dim() > 0);
+            assert!(d.output_dim() > 1, "{}: need ≥2 classes for CE", m.name);
+        }
+    }
+
+    #[test]
+    fn preset_suffixes_resolve_to_the_family() {
+        assert_eq!(proxy_dims("transformer_tiny").unwrap().family, "transformer");
+        assert_eq!(proxy_dims("cnn_mini").unwrap().family, "cnn");
+        assert_eq!(proxy_dims("resnet50").unwrap().family, "resnet50");
+        assert!(proxy_dims("bert_large").is_none());
+    }
+
+    #[test]
+    fn kinds_match_the_paper_families() {
+        assert_eq!(proxy_dims("transformer").unwrap().kind, TaskKind::Lm);
+        assert_eq!(proxy_dims("gnmt").unwrap().kind, TaskKind::Lm);
+        for img in ["resnet50", "ssd", "maskrcnn"] {
+            assert_eq!(proxy_dims(img).unwrap().kind, TaskKind::Image);
+        }
+    }
+}

@@ -101,8 +101,12 @@ impl Manifest {
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {path:?} — build the AOT artifacts with \
+                 `python python/compile/aot.py` (writes artifacts/, or set ARTIFACTS_DIR)"
+            )
+        })?;
         let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
 
         let mut artifacts = BTreeMap::new();
@@ -268,6 +272,6 @@ mod tests {
     #[test]
     fn missing_dir_is_helpful_error() {
         let err = Manifest::load("/nonexistent/path").unwrap_err();
-        assert!(format!("{err:#}").contains("make artifacts"));
+        assert!(format!("{err:#}").contains("python/compile/aot.py"));
     }
 }

@@ -1,10 +1,17 @@
-//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute from
-//! the training hot path.
+//! Execution runtimes behind the trainer's [`Backend`] boundary (see
+//! `rust/src/runtime/README.md` for the subsystem map):
 //!
-//! Pattern follows the xla_extension load_hlo flow: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`. HLO *text* is the interchange format (the
-//! bundled xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos).
+//! * [`reference`] — the pure-Rust fwd/bwd executor over the
+//!   `models::proxy` dense proxies: exact analytic gradients, no
+//!   artifacts, deterministic. This is what tier-1 CI gates.
+//! * [`Runtime`] + [`PjRtBackend`] — the PJRT path: load AOT artifacts
+//!   (HLO text), compile once, execute from the training hot path.
+//!
+//! The PJRT pattern follows the xla_extension load_hlo flow:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`. HLO *text*
+//! is the interchange format (the bundled xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos).
 //!
 //! `PjRtClient` is `Rc`-based (not `Send`), so each data-parallel worker
 //! thread constructs its own `Runtime` — mirroring how each TPU core owns
@@ -12,10 +19,13 @@
 //!
 //! In the offline build the `xla` binding is the in-tree stub
 //! ([`mod@xla`]): client construction fails with a clear message and every
-//! artifact-dependent caller degrades gracefully (integration tests skip,
-//! the simulator/scenario layers never come near it).
+//! artifact-dependent caller degrades gracefully (PJRT-only integration
+//! tests skip, the reference backend and the simulator/scenario layers
+//! never come near it).
 
 pub mod artifact;
+pub mod backend;
+pub mod reference;
 mod xla;
 
 use std::cell::RefCell;
@@ -25,6 +35,8 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 
 pub use artifact::{ArtifactMeta, Dtype, IoSpec, Manifest, ParamSpec};
+pub use backend::{Backend, BackendChoice, PjRtBackend, StepBatch};
+pub use reference::{param_specs_for, Precision, ReferenceBackend};
 
 /// A host-side tensor (f32) with shape — the currency between the
 /// coordinator (collectives, optimizers) and the PJRT boundary.

@@ -1,0 +1,753 @@
+//! `runtime::reference` — the in-Rust forward/backward executor.
+//!
+//! A miniature dense network per registry model (see
+//! [`crate::models::proxy`]): an embedding/dense input layer, a ReLU, a
+//! BN-ish learned normalization, a dense trunk layer, and a softmax
+//! cross-entropy head — with *exact analytic gradients* computed in f32
+//! (optionally with bf16-rounded activation storage, the paper's §2
+//! mixed-precision rule: 16-bit storage, 32-bit math).
+//!
+//! The normalization is per-example over the feature axis (a LayerNorm).
+//! Batch-statistics BN would couple examples, so padded/masked eval slots
+//! and the chunking of the distributed evaluation would change the
+//! metrics; per-example statistics keep eval results exactly independent
+//! of core count and padding — the invariance `evaluation` promises.
+//!
+//! Everything is sequential, allocation-order deterministic f32: two runs
+//! of the same [`crate::coordinator::TrainConfig`] produce bit-identical
+//! loss curves (pinned by the integration suite). This is what lets the
+//! live trainer run — and be CI-gated — with no AOT artifacts.
+//!
+//! Layer stack (`N` units = examples, or `batch * seq` positions for LM):
+//!
+//! ```text
+//! x [N, in] ──fc0.w/b──► h0 [N, H] ──relu──► a0
+//!   a0 ──layernorm·norm.scale+norm.bias──► n0
+//!   n0 ──fc1.w/b──► h1 ──relu──► a1
+//!   a1 ──out.w/b──► logits [N, C] ──softmax CE──► loss
+//! ```
+//!
+//! For LM the input is the one-hot of the current token, so `fc0.w` is the
+//! embedding table and the first matmul is a row lookup (same math, no
+//! materialized one-hot).
+
+use std::cell::Cell;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::models::proxy::{proxy_dims, ProxyDims, TaskKind};
+use crate::runtime::backend::{Backend, StepBatch};
+use crate::runtime::ParamSpec;
+use crate::util::bf16::Bf16;
+use crate::util::timer::Timer;
+
+/// Activation storage precision (math is always f32).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Precision {
+    F32,
+    Bf16,
+}
+
+const LN_EPS: f32 = 1e-5;
+
+// Parameter tensor order (must match `param_specs_for`).
+const W0: usize = 0;
+const B0: usize = 1;
+const SCALE: usize = 2;
+const BIAS: usize = 3;
+const W1: usize = 4;
+const B1: usize = 5;
+const W2: usize = 6;
+const B2: usize = 7;
+
+/// The reference executor for one model proxy.
+pub struct ReferenceBackend {
+    dims: ProxyDims,
+    specs: Vec<ParamSpec>,
+    precision: Precision,
+    execute_seconds: Cell<f64>,
+}
+
+/// Parameter specs of a proxy, in executor order. Names follow the
+/// trainer's init conventions: `.scale` starts at one, `.bias`/`.b` at
+/// zero, matrices at fan-in-scaled normal.
+pub fn param_specs_for(dims: &ProxyDims) -> Vec<ParamSpec> {
+    let (input, hidden, out) = (dims.input_dim(), dims.hidden, dims.output_dim());
+    vec![
+        ParamSpec { name: "fc0.w".into(), shape: vec![input, hidden] },
+        ParamSpec { name: "fc0.b".into(), shape: vec![hidden] },
+        ParamSpec { name: "norm.scale".into(), shape: vec![hidden] },
+        ParamSpec { name: "norm.bias".into(), shape: vec![hidden] },
+        ParamSpec { name: "fc1.w".into(), shape: vec![hidden, hidden] },
+        ParamSpec { name: "fc1.b".into(), shape: vec![hidden] },
+        ParamSpec { name: "out.w".into(), shape: vec![hidden, out] },
+        ParamSpec { name: "out.b".into(), shape: vec![out] },
+    ]
+}
+
+/// Result of one fwd(/bwd) pass, mask-weighted.
+struct PassOut {
+    loss_sum: f32,
+    correct_sum: f32,
+    /// Σ mask (examples) — the eval `count`; equals the unit-weight sum
+    /// divided by `seq` only for LM, so it is tracked separately.
+    examples: f32,
+    grads: Option<Vec<Vec<f32>>>,
+}
+
+impl ReferenceBackend {
+    /// Resolve a model key via the proxy registry.
+    pub fn new(model: &str, precision: Precision) -> Result<ReferenceBackend> {
+        let dims = proxy_dims(model).ok_or_else(|| {
+            anyhow!(
+                "no reference proxy for model {model:?} (known families: {})",
+                crate::models::proxy::known_families()
+            )
+        })?;
+        Ok(ReferenceBackend::with_dims(dims, precision))
+    }
+
+    /// Build directly from dims (tests use tiny custom shapes).
+    pub fn with_dims(dims: ProxyDims, precision: Precision) -> ReferenceBackend {
+        let specs = param_specs_for(&dims);
+        ReferenceBackend { dims, specs, precision, execute_seconds: Cell::new(0.0) }
+    }
+
+    pub fn specs(&self) -> &[ParamSpec] {
+        &self.specs
+    }
+
+    pub fn dims(&self) -> &ProxyDims {
+        &self.dims
+    }
+
+    fn round(&self, xs: &mut [f32]) {
+        if self.precision == Precision::Bf16 {
+            for x in xs.iter_mut() {
+                *x = Bf16::from_f32(*x).to_f32();
+            }
+        }
+    }
+
+    fn check_params(&self, params: &[Vec<f32>]) -> Result<()> {
+        if params.len() != self.specs.len() {
+            bail!("expected {} parameter tensors, got {}", self.specs.len(), params.len());
+        }
+        for (p, s) in params.iter().zip(&self.specs) {
+            if p.len() != s.numel() {
+                bail!("param {} has {} elements, expected {:?}", s.name, p.len(), s.shape);
+            }
+        }
+        Ok(())
+    }
+
+    /// The full forward(/backward) pass. `mask` is per-example (1.0 real /
+    /// 0.0 padding); `None` means train mode (every unit weight 1). When
+    /// `want_grads`, returns gradients of the *mean* loss over the
+    /// weighted units.
+    fn pass(
+        &self,
+        params: &[Vec<f32>],
+        batch: &StepBatch,
+        mask: Option<&[f32]>,
+        want_grads: bool,
+    ) -> Result<PassOut> {
+        self.check_params(params)?;
+        let t0 = Timer::start();
+        let d = &self.dims;
+        let (h, c) = (d.hidden, d.output_dim());
+
+        // ---- resolve the batch into N units + per-unit weights ----------
+        let (n_units, targets): (usize, &[i32]) = match (batch, d.kind) {
+            (StepBatch::Lm { tokens, targets }, TaskKind::Lm) => {
+                if tokens.len() != targets.len() {
+                    bail!("LM batch: {} tokens vs {} targets", tokens.len(), targets.len());
+                }
+                if d.seq == 0 || tokens.len() % d.seq != 0 {
+                    bail!("LM batch length {} not a multiple of seq {}", tokens.len(), d.seq);
+                }
+                for &t in tokens.iter().chain(targets.iter()) {
+                    if t < 0 || t as usize >= d.vocab {
+                        bail!("token {t} outside vocab 0..{}", d.vocab);
+                    }
+                }
+                (tokens.len(), targets)
+            }
+            (StepBatch::Image { images, labels }, TaskKind::Image) => {
+                let dim = d.input_dim();
+                if images.len() != labels.len() * dim {
+                    bail!(
+                        "image batch: {} pixels vs {} labels x {dim}",
+                        images.len(),
+                        labels.len()
+                    );
+                }
+                for &l in labels {
+                    if l < 0 || l as usize >= d.classes {
+                        bail!("label {l} outside classes 0..{}", d.classes);
+                    }
+                }
+                (labels.len(), labels)
+            }
+            _ => bail!("batch kind does not match the {} proxy", d.family),
+        };
+        let batch_examples = match d.kind {
+            TaskKind::Lm => n_units / d.seq,
+            TaskKind::Image => n_units,
+        };
+        if let Some(m) = mask {
+            if m.len() != batch_examples {
+                bail!("mask has {} entries for {batch_examples} examples", m.len());
+            }
+        }
+        // Per-unit weight: example mask, spread over seq positions for LM.
+        let unit_weight = |unit: usize| -> f32 {
+            let example = match d.kind {
+                TaskKind::Lm => unit / d.seq,
+                TaskKind::Image => unit,
+            };
+            let m = mask.map(|m| m[example]).unwrap_or(1.0);
+            match d.kind {
+                TaskKind::Lm => m / d.seq as f32,
+                TaskKind::Image => m,
+            }
+        };
+        let weight_total: f32 = (0..n_units).map(&unit_weight).sum();
+        let examples: f32 = match mask {
+            Some(m) => m.iter().sum(),
+            None => batch_examples as f32,
+        };
+
+        // ---- forward ----------------------------------------------------
+        // h0 = x . fc0.w + fc0.b (embedding row lookup for LM)
+        let mut a0 = vec![0.0f32; n_units * h];
+        match batch {
+            StepBatch::Lm { tokens, .. } => {
+                for (unit, &t) in tokens.iter().enumerate() {
+                    let row = &params[W0][t as usize * h..(t as usize + 1) * h];
+                    let out = &mut a0[unit * h..(unit + 1) * h];
+                    for ((o, &w), &b) in out.iter_mut().zip(row).zip(&params[B0]) {
+                        *o = w + b;
+                    }
+                }
+            }
+            StepBatch::Image { images, .. } => {
+                let dim = d.input_dim();
+                for unit in 0..n_units {
+                    let x = &images[unit * dim..(unit + 1) * dim];
+                    let out = &mut a0[unit * h..(unit + 1) * h];
+                    out.copy_from_slice(&params[B0]);
+                    for (k, &xv) in x.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let wrow = &params[W0][k * h..(k + 1) * h];
+                        for (o, &w) in out.iter_mut().zip(wrow) {
+                            *o += xv * w;
+                        }
+                    }
+                }
+            }
+        }
+        // relu in place; a0 > 0 later doubles as the h0 > 0 mask.
+        for x in a0.iter_mut() {
+            if *x < 0.0 {
+                *x = 0.0;
+            }
+        }
+        self.round(&mut a0);
+
+        // Per-example LayerNorm: xhat = (a0 - mu) / sqrt(var + eps).
+        let mut xhat = vec![0.0f32; n_units * h];
+        let mut inv = vec![0.0f32; n_units];
+        let mut n0 = vec![0.0f32; n_units * h];
+        for unit in 0..n_units {
+            let row = &a0[unit * h..(unit + 1) * h];
+            let mu = row.iter().sum::<f32>() / h as f32;
+            let var = row.iter().map(|x| (x - mu) * (x - mu)).sum::<f32>() / h as f32;
+            let iv = 1.0 / (var + LN_EPS).sqrt();
+            inv[unit] = iv;
+            let xh = &mut xhat[unit * h..(unit + 1) * h];
+            let no = &mut n0[unit * h..(unit + 1) * h];
+            for j in 0..h {
+                xh[j] = (row[j] - mu) * iv;
+                no[j] = xh[j] * params[SCALE][j] + params[BIAS][j];
+            }
+        }
+        self.round(&mut n0);
+
+        // h1 = n0 . fc1.w + fc1.b; a1 = relu(h1)
+        let mut a1 = vec![0.0f32; n_units * h];
+        for unit in 0..n_units {
+            let x = &n0[unit * h..(unit + 1) * h];
+            let out = &mut a1[unit * h..(unit + 1) * h];
+            out.copy_from_slice(&params[B1]);
+            for (k, &xv) in x.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &params[W1][k * h..(k + 1) * h];
+                for (o, &w) in out.iter_mut().zip(wrow) {
+                    *o += xv * w;
+                }
+            }
+        }
+        for x in a1.iter_mut() {
+            if *x < 0.0 {
+                *x = 0.0;
+            }
+        }
+        self.round(&mut a1);
+
+        // logits = a1 . out.w + out.b
+        let mut logits = vec![0.0f32; n_units * c];
+        for unit in 0..n_units {
+            let x = &a1[unit * h..(unit + 1) * h];
+            let out = &mut logits[unit * c..(unit + 1) * c];
+            out.copy_from_slice(&params[B2]);
+            for (k, &xv) in x.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &params[W2][k * c..(k + 1) * c];
+                for (o, &w) in out.iter_mut().zip(wrow) {
+                    *o += xv * w;
+                }
+            }
+        }
+        self.round(&mut logits);
+
+        // Softmax cross-entropy + top-1, mask-weighted.
+        let mut probs = vec![0.0f32; n_units * c];
+        let mut loss_sum = 0.0f32;
+        let mut correct_sum = 0.0f32;
+        for unit in 0..n_units {
+            let row = &logits[unit * c..(unit + 1) * c];
+            let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut argmax = 0;
+            for (j, &x) in row.iter().enumerate() {
+                if x > row[argmax] {
+                    argmax = j;
+                }
+                probs[unit * c + j] = (x - max).exp();
+            }
+            let denom: f32 = probs[unit * c..(unit + 1) * c].iter().sum();
+            for p in probs[unit * c..(unit + 1) * c].iter_mut() {
+                *p /= denom;
+            }
+            let y = targets[unit] as usize;
+            let w = unit_weight(unit);
+            loss_sum += w * -(probs[unit * c + y] + 1e-12).ln();
+            if argmax == y {
+                correct_sum += w;
+            }
+        }
+
+        if !want_grads {
+            self.execute_seconds.set(self.execute_seconds.get() + t0.secs());
+            return Ok(PassOut { loss_sum, correct_sum, examples, grads: None });
+        }
+
+        // ---- backward (gradient of loss_sum / weight_total) -------------
+        let denom = weight_total.max(1e-12);
+        let mut grads: Vec<Vec<f32>> =
+            self.specs.iter().map(|s| vec![0.0f32; s.numel()]).collect();
+
+        // dlogits = (softmax - onehot) * w / denom
+        let mut dlogits = probs; // reuse
+        for unit in 0..n_units {
+            let w = unit_weight(unit) / denom;
+            let y = targets[unit] as usize;
+            let row = &mut dlogits[unit * c..(unit + 1) * c];
+            row[y] -= 1.0;
+            for x in row.iter_mut() {
+                *x *= w;
+            }
+        }
+
+        // out layer backward: dW2 = a1^T dlogits, db2 = sum dlogits,
+        // da1 = dlogits . W2^T
+        let mut dh1 = vec![0.0f32; n_units * h];
+        {
+            let (dw2, db2s) = {
+                let (left, right) = grads.split_at_mut(B2);
+                (&mut left[W2], &mut right[0])
+            };
+            for unit in 0..n_units {
+                let dl = &dlogits[unit * c..(unit + 1) * c];
+                let a = &a1[unit * h..(unit + 1) * h];
+                for (db, &dv) in db2s.iter_mut().zip(dl) {
+                    *db += dv;
+                }
+                let dh = &mut dh1[unit * h..(unit + 1) * h];
+                for (k, &av) in a.iter().enumerate() {
+                    let wrow = &params[W2][k * c..(k + 1) * c];
+                    let gw = &mut dw2[k * c..(k + 1) * c];
+                    let mut acc = 0.0f32;
+                    for j in 0..c {
+                        if av != 0.0 {
+                            gw[j] += av * dl[j];
+                        }
+                        acc += dl[j] * wrow[j];
+                    }
+                    // relu mask: a1 == 0 means h1 <= 0.
+                    dh[k] = if av > 0.0 { acc } else { 0.0 };
+                }
+            }
+        }
+
+        // trunk layer backward: dW1 = n0^T dh1, db1 = sum dh1,
+        // dn0 = dh1 . W1^T
+        let mut dn0 = vec![0.0f32; n_units * h];
+        {
+            let (dw1, db1s) = {
+                let (left, right) = grads.split_at_mut(B1);
+                (&mut left[W1], &mut right[0])
+            };
+            for unit in 0..n_units {
+                let dh = &dh1[unit * h..(unit + 1) * h];
+                let x = &n0[unit * h..(unit + 1) * h];
+                for (db, &dv) in db1s.iter_mut().zip(dh) {
+                    *db += dv;
+                }
+                let dn = &mut dn0[unit * h..(unit + 1) * h];
+                for (k, &xv) in x.iter().enumerate() {
+                    let wrow = &params[W1][k * h..(k + 1) * h];
+                    let gw = &mut dw1[k * h..(k + 1) * h];
+                    let mut acc = 0.0f32;
+                    for j in 0..h {
+                        if xv != 0.0 {
+                            gw[j] += xv * dh[j];
+                        }
+                        acc += dh[j] * wrow[j];
+                    }
+                    dn[k] = acc;
+                }
+            }
+        }
+
+        // LayerNorm backward (per example row):
+        // dscale = Σ dn0*xhat, dbias = Σ dn0, dxhat = dn0*scale,
+        // da0 = inv/H (H dxhat − Σdxhat − xhat Σ(dxhat·xhat))
+        let mut da0 = vec![0.0f32; n_units * h];
+        {
+            let (dscale, dbias) = {
+                let (left, right) = grads.split_at_mut(BIAS);
+                (&mut left[SCALE], &mut right[0])
+            };
+            let hf = h as f32;
+            for unit in 0..n_units {
+                let dn = &dn0[unit * h..(unit + 1) * h];
+                let xh = &xhat[unit * h..(unit + 1) * h];
+                let mut s1 = 0.0f32;
+                let mut s2 = 0.0f32;
+                for j in 0..h {
+                    dscale[j] += dn[j] * xh[j];
+                    dbias[j] += dn[j];
+                    let dxh = dn[j] * params[SCALE][j];
+                    s1 += dxh;
+                    s2 += dxh * xh[j];
+                }
+                let da = &mut da0[unit * h..(unit + 1) * h];
+                let iv = inv[unit] / hf;
+                for j in 0..h {
+                    let dxh = dn[j] * params[SCALE][j];
+                    da[j] = iv * (hf * dxh - s1 - xh[j] * s2);
+                }
+            }
+        }
+
+        // relu mask for layer 0, then input layer backward.
+        for (da, &av) in da0.iter_mut().zip(&a0) {
+            if av <= 0.0 {
+                *da = 0.0;
+            }
+        }
+        {
+            let (dw0, db0s) = {
+                let (left, right) = grads.split_at_mut(B0);
+                (&mut left[W0], &mut right[0])
+            };
+            match batch {
+                StepBatch::Lm { tokens, .. } => {
+                    for (unit, &t) in tokens.iter().enumerate() {
+                        let da = &da0[unit * h..(unit + 1) * h];
+                        let gw = &mut dw0[t as usize * h..(t as usize + 1) * h];
+                        for j in 0..h {
+                            gw[j] += da[j];
+                            db0s[j] += da[j];
+                        }
+                    }
+                }
+                StepBatch::Image { images, .. } => {
+                    let dim = d.input_dim();
+                    for unit in 0..n_units {
+                        let da = &da0[unit * h..(unit + 1) * h];
+                        let x = &images[unit * dim..(unit + 1) * dim];
+                        for (db, &dv) in db0s.iter_mut().zip(da) {
+                            *db += dv;
+                        }
+                        for (k, &xv) in x.iter().enumerate() {
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let gw = &mut dw0[k * h..(k + 1) * h];
+                            for (g, &dv) in gw.iter_mut().zip(da) {
+                                *g += xv * dv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        self.execute_seconds.set(self.execute_seconds.get() + t0.secs());
+        Ok(PassOut { loss_sum, correct_sum, examples, grads: Some(grads) })
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        match self.precision {
+            Precision::F32 => "reference",
+            Precision::Bf16 => "reference-bf16",
+        }
+    }
+
+    fn train_step(&self, params: &[Vec<f32>], batch: &StepBatch) -> Result<(f32, Vec<Vec<f32>>)> {
+        let out = self.pass(params, batch, None, true)?;
+        // Unit weights sum to the example count for both families (LM
+        // positions carry weight 1/seq), so this is the batch-mean loss.
+        let loss = out.loss_sum / out.examples.max(1e-12);
+        Ok((loss, out.grads.expect("grads requested")))
+    }
+
+    fn eval_step(
+        &self,
+        params: &[Vec<f32>],
+        batch: &StepBatch,
+        mask: &[f32],
+    ) -> Result<(f32, f32, f32)> {
+        let out = self.pass(params, batch, Some(mask), false)?;
+        Ok((out.loss_sum, out.correct_sum, out.examples))
+    }
+
+    fn execute_seconds(&self) -> f64 {
+        self.execute_seconds.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_image_dims() -> ProxyDims {
+        ProxyDims {
+            family: "cnn",
+            kind: TaskKind::Image,
+            hidden: 6,
+            batch_per_core: 4,
+            vocab: 0,
+            seq: 0,
+            image: 2, // input_dim = 12
+            classes: 5,
+        }
+    }
+
+    fn tiny_lm_dims() -> ProxyDims {
+        ProxyDims {
+            family: "transformer",
+            kind: TaskKind::Lm,
+            hidden: 6,
+            batch_per_core: 2,
+            vocab: 7,
+            seq: 3,
+            image: 0,
+            classes: 0,
+        }
+    }
+
+    fn init(specs: &[ParamSpec], seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        specs
+            .iter()
+            .map(|s| {
+                if s.name.ends_with(".scale") {
+                    vec![1.0; s.numel()]
+                } else if s.name.ends_with(".bias") || s.name.ends_with(".b") {
+                    vec![0.0; s.numel()]
+                } else {
+                    let fan_in = s.shape[..s.shape.len() - 1].iter().product::<usize>().max(1);
+                    rng.normal_vec(s.numel(), (1.0 / fan_in as f32).sqrt())
+                }
+            })
+            .collect()
+    }
+
+    fn image_batch(dims: &ProxyDims, n: usize, seed: u64) -> StepBatch {
+        let mut rng = Rng::new(seed);
+        let dim = dims.input_dim();
+        let images = rng.normal_vec(n * dim, 1.0);
+        let labels = (0..n).map(|_| rng.below(dims.classes as u64) as i32).collect();
+        StepBatch::Image { images, labels }
+    }
+
+    fn lm_batch(dims: &ProxyDims, batch: usize, seed: u64) -> StepBatch {
+        let mut rng = Rng::new(seed);
+        let n = batch * dims.seq;
+        let tokens: Vec<i32> = (0..n).map(|_| rng.below(dims.vocab as u64) as i32).collect();
+        let targets: Vec<i32> =
+            tokens.iter().map(|&t| ((5 * t as i64 + 3) % dims.vocab as i64) as i32).collect();
+        StepBatch::Lm { tokens, targets }
+    }
+
+    #[test]
+    fn specs_follow_trainer_init_conventions() {
+        let dims = proxy_dims("transformer").unwrap();
+        let specs = param_specs_for(&dims);
+        assert_eq!(specs.len(), 8);
+        assert_eq!(specs[W0].shape, vec![dims.vocab, dims.hidden]);
+        assert_eq!(specs[SCALE].name, "norm.scale");
+        assert!(specs[BIAS].name.ends_with(".bias"));
+        assert!(specs[B0].name.ends_with(".b"));
+        assert_eq!(specs[W2].shape, vec![dims.hidden, dims.vocab]);
+        let total: usize = specs.iter().map(ParamSpec::numel).sum();
+        assert!(total > 10_000, "transformer proxy should be MLP-scale, got {total}");
+    }
+
+    /// The crux: analytic gradients must match central finite differences
+    /// of the f32 forward pass, for both task families.
+    #[test]
+    fn analytic_grads_match_finite_differences() {
+        for (dims, batch) in [
+            (tiny_image_dims(), image_batch(&tiny_image_dims(), 4, 11)),
+            (tiny_lm_dims(), lm_batch(&tiny_lm_dims(), 2, 12)),
+        ] {
+            let be = ReferenceBackend::with_dims(dims, Precision::F32);
+            let mut params = init(be.specs(), 3);
+            let (_, grads) = be.train_step(&params, &batch).unwrap();
+            let eps = 5e-3f32;
+            let mut rng = Rng::new(99);
+            for ti in 0..params.len() {
+                let n = params[ti].len();
+                for _ in 0..n.min(8) {
+                    let i = rng.below(n as u64) as usize;
+                    let orig = params[ti][i];
+                    params[ti][i] = orig + eps;
+                    let (lp, _) = be.train_step(&params, &batch).unwrap();
+                    params[ti][i] = orig - eps;
+                    let (lm, _) = be.train_step(&params, &batch).unwrap();
+                    params[ti][i] = orig;
+                    let num = (lp - lm) / (2.0 * eps);
+                    let ana = grads[ti][i];
+                    assert!(
+                        (num - ana).abs() < 1e-3 + 0.05 * num.abs(),
+                        "{} tensor {ti}[{i}]: numeric {num} vs analytic {ana}",
+                        be.dims().family
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_grads_stay_close_to_f32() {
+        let dims = tiny_image_dims();
+        let f32_be = ReferenceBackend::with_dims(dims, Precision::F32);
+        let bf_be = ReferenceBackend::with_dims(dims, Precision::Bf16);
+        let params = init(f32_be.specs(), 5);
+        let batch = image_batch(&dims, 8, 21);
+        let (l32, g32) = f32_be.train_step(&params, &batch).unwrap();
+        let (l16, g16) = bf_be.train_step(&params, &batch).unwrap();
+        assert!((l32 - l16).abs() < 0.05 * l32.abs() + 1e-3, "loss {l32} vs {l16}");
+        for (a, b) in g32.iter().zip(&g16) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 2e-3 + 0.05 * x.abs(), "grad {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn masked_eval_slots_contribute_nothing() {
+        let dims = tiny_image_dims();
+        let be = ReferenceBackend::with_dims(dims, Precision::F32);
+        let params = init(be.specs(), 7);
+        let full = image_batch(&dims, 3, 31);
+        let (li, ci, ni) = be.eval_step(&params, &full, &[1.0, 1.0, 0.0]).unwrap();
+        // The same first two examples, no padding.
+        let (images, labels) = match &full {
+            StepBatch::Image { images, labels } => {
+                (images[..2 * dims.input_dim()].to_vec(), labels[..2].to_vec())
+            }
+            _ => unreachable!(),
+        };
+        let trimmed = StepBatch::Image { images, labels };
+        let (lt, ct, nt) = be.eval_step(&params, &trimmed, &[1.0, 1.0]).unwrap();
+        assert_eq!(ni, 2.0);
+        assert_eq!(nt, 2.0);
+        assert_eq!(li, lt, "masked loss must equal the unpadded loss bitwise");
+        assert_eq!(ci, ct);
+    }
+
+    #[test]
+    fn passes_are_bitwise_deterministic() {
+        let dims = tiny_lm_dims();
+        let be = ReferenceBackend::with_dims(dims, Precision::F32);
+        let params = init(be.specs(), 9);
+        let batch = lm_batch(&dims, 4, 41);
+        let (l1, g1) = be.train_step(&params, &batch).unwrap();
+        let (l2, g2) = be.train_step(&params, &batch).unwrap();
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn adam_on_the_proxy_learns_the_planted_image_task() {
+        use crate::data::synthetic::ImageTask;
+        use crate::optim::{adam_step, AdamConfig, AdamState};
+        let dims = proxy_dims("ssd").unwrap();
+        let be = ReferenceBackend::with_dims(dims, Precision::F32);
+        let mut params = init(be.specs(), 1);
+        let task = ImageTask::new(dims.image, dims.classes, 2.0, 0xEEE);
+        let mut rng = Rng::new(0);
+        let mut states: Vec<AdamState> = be.specs().iter().map(|_| AdamState::default()).collect();
+        let cfg = AdamConfig::default();
+        let mut losses = Vec::new();
+        for step in 1..=30u64 {
+            let b = task.batch(&mut rng, 16);
+            let batch = StepBatch::Image { images: b.images, labels: b.labels };
+            let (loss, grads) = be.train_step(&params, &batch).unwrap();
+            losses.push(loss);
+            for ti in 0..params.len() {
+                adam_step(&cfg, 3e-3, step, &mut params[ti], &grads[ti], &mut states[ti]);
+            }
+        }
+        let first = losses[..5].iter().sum::<f32>() / 5.0;
+        let last = losses[25..].iter().sum::<f32>() / 5.0;
+        assert!(last < first * 0.5, "loss should halve: first {first:.3} last {last:.3}");
+    }
+
+    #[test]
+    fn bad_inputs_are_clean_errors() {
+        let dims = tiny_lm_dims();
+        let be = ReferenceBackend::with_dims(dims, Precision::F32);
+        let params = init(be.specs(), 2);
+        // Token outside the vocab.
+        let batch = StepBatch::Lm { tokens: vec![99; 3], targets: vec![0; 3] };
+        assert!(be.train_step(&params, &batch).is_err());
+        // Wrong batch kind for the proxy family.
+        let batch = StepBatch::Image { images: vec![0.0; 12], labels: vec![0] };
+        assert!(be.train_step(&params, &batch).is_err());
+        // Wrong parameter shape.
+        let mut bad = params.clone();
+        bad[0].pop();
+        let batch = lm_batch(&dims, 1, 1);
+        assert!(be.train_step(&bad, &batch).is_err());
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        assert!(ReferenceBackend::new("bert_large", Precision::F32).is_err());
+    }
+}

@@ -222,6 +222,53 @@ impl ShardedAdam {
     }
 }
 
+/// Sharded momentum SGD (the paper's LARS-vs-SGD ablation baseline):
+/// per-core velocity state for its shard only, then the weight all-gather.
+/// Matches `optim::sgd_momentum_step` exactly.
+pub struct ShardedSgd {
+    pub momentum: f32,
+    pub plan: ShardPlan,
+    pub shard: usize,
+    v: Vec<f32>,
+    /// Reused all-gather staging (avoids per-step mmap + page faults).
+    staging: Vec<f32>,
+}
+
+impl ShardedSgd {
+    /// See [`ShardedLars::new`] for the `rank` → shard mapping.
+    pub fn new(momentum: f32, plan: ShardPlan, rank: usize) -> ShardedSgd {
+        let shard = owned_chunk(rank, plan.ranges.len());
+        let len = plan.ranges[shard].len();
+        let staging = vec![0.0; plan.total];
+        ShardedSgd { momentum, plan, shard, v: vec![0.0; len], staging }
+    }
+
+    pub fn step(
+        &mut self,
+        ep: &mut Endpoint,
+        group: &[usize],
+        lr: f32,
+        params: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+    ) {
+        let my_range = self.plan.ranges[self.shard].clone();
+        let mut si = 0;
+        for ti in 0..params.len() {
+            if let Some(tr) = self.plan.tensor_overlap(ti, &my_range) {
+                let w = &mut params[ti][tr.clone()];
+                let g = &grads[ti][tr];
+                for i in 0..w.len() {
+                    self.v[si] = self.momentum * self.v[si] + g[i];
+                    w[i] -= lr * self.v[si];
+                    si += 1;
+                }
+            }
+        }
+        debug_assert_eq!(si, my_range.len());
+        gather_weights(ep, group, &self.plan, self.shard, params, &mut self.staging);
+    }
+}
+
 /// All-gather freshly-updated weight shards back to every core.
 ///
 /// The shard plan's ranges coincide with the ring all-gather's chunk
@@ -367,6 +414,41 @@ mod tests {
             for ti in 0..sizes.len() {
                 for (a, b) in out[r][ti].iter().zip(&ref_params[ti]) {
                     assert!((a - b).abs() < 1e-5, "rank {r} tensor {ti}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_sgd_matches_replicated() {
+        use crate::optim::sgd_momentum_step;
+        let sizes = [19usize, 7, 50];
+        let world = 4;
+
+        let mut ref_params = make_params(30, &sizes);
+        let mut vels: Vec<Vec<f32>> = sizes.iter().map(|_| vec![]).collect();
+        for s in 0..3 {
+            let g = make_params(40 + s, &sizes);
+            for ti in 0..sizes.len() {
+                sgd_momentum_step(0.05, 0.9, &mut ref_params[ti], &g[ti], &mut vels[ti]);
+            }
+        }
+
+        let out = run_spmd(world, |ep| {
+            let plan = ShardPlan::balanced(&sizes, world);
+            let mut opt = ShardedSgd::new(0.9, plan, ep.rank);
+            let group: Vec<usize> = (0..world).collect();
+            let mut params = make_params(30, &sizes);
+            for s in 0..3 {
+                let g = make_params(40 + s, &sizes);
+                opt.step(ep, &group, 0.05, &mut params, &g);
+            }
+            params
+        });
+        for r in 0..world {
+            for ti in 0..sizes.len() {
+                for (a, b) in out[r][ti].iter().zip(&ref_params[ti]) {
+                    assert!((a - b).abs() < 1e-5, "rank {r} tensor {ti}: {a} vs {b}");
                 }
             }
         }
