@@ -72,6 +72,7 @@ fn main() {
             image_alpha: 0.3,
             quality_target: None,
             warmup_steps: 80,
+            ..TrainConfig::quick("cnn_mini", 2, 400)
         };
         let rep = match train(&cfg) {
             Ok(rep) => rep,

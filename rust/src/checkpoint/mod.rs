@@ -1,10 +1,18 @@
-//! Checkpointing: save/restore model parameters + optimizer step counter.
+//! Checkpointing: save/restore model parameters, optimizer state, RNG
+//! streams and the step counter.
 //!
 //! MLPerf's timing rules make initialization (including checkpoint
 //! restore) free, so production runs restore the pre-trained backbone
-//! (e.g. SSD's ResNet-34) before `run_start`. Format: a JSON header
-//! (tensor names/shapes/offsets, fletcher checksum) followed by raw
-//! little-endian f32 data — readable with one pass, no serde.
+//! (e.g. SSD's ResNet-34) before `run_start`. Format v2: a JSON header
+//! (tensor names/shapes/offsets, optimizer slot directory, per-worker RNG
+//! snapshots, chained fletcher checksum) followed by raw little-endian
+//! f32 data — readable with one pass, no serde. See `README.md` in this
+//! directory for the byte-level layout and the resume guarantees.
+//!
+//! Format v1 (params + step only, order-invariant checksum) is still
+//! readable with a warning; its optimizer state is reported as absent so
+//! the trainer re-initializes accumulators — v1 resumes are therefore NOT
+//! bit-identical, which is exactly the bug v2 fixes.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -13,20 +21,216 @@ use anyhow::{bail, Context, Result};
 
 use crate::runtime::ParamSpec;
 use crate::util::json::{obj, Json};
+use crate::util::rng::RngState;
 
-/// Fletcher-64 style checksum over the raw f32 bytes.
-fn checksum(data: &[f32]) -> u64 {
-    let mut a: u64 = 1;
-    let mut b: u64 = 0;
-    for &x in data {
-        a = (a + x.to_bits() as u64) % 0xFFFF_FFFB;
-        b = (b + a) % 0xFFFF_FFFB;
-    }
-    (b << 32) | a
+const FORMAT_V1: &str = "tpu-pod-train-ckpt-v1";
+const FORMAT_V2: &str = "tpu-pod-train-ckpt-v2";
+
+/// Fletcher-64 style checksum, chained across the full payload stream.
+///
+/// Unlike the v1 scheme (per-tensor sums folded with `wrapping_add`, which
+/// is order-invariant — swapping two same-shaped tensors' payloads passed
+/// verification), the stream carries its running state across tensor
+/// boundaries, so the total depends on byte order end to end.
+pub struct ChecksumStream {
+    a: u64,
+    b: u64,
 }
 
-/// Save parameters (+ step) to `path`.
-pub fn save(
+impl ChecksumStream {
+    pub fn new() -> ChecksumStream {
+        ChecksumStream { a: 1, b: 0 }
+    }
+
+    pub fn update(&mut self, data: &[f32]) {
+        for &x in data {
+            self.a = (self.a + x.to_bits() as u64) % 0xFFFF_FFFB;
+            self.b = (self.b + self.a) % 0xFFFF_FFFB;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        (self.b << 32) | self.a
+    }
+}
+
+impl Default for ChecksumStream {
+    fn default() -> Self {
+        ChecksumStream::new()
+    }
+}
+
+/// v1 per-tensor checksum (kept to validate legacy checkpoints).
+fn checksum_v1(data: &[f32]) -> u64 {
+    let mut s = ChecksumStream::new();
+    s.update(data);
+    s.total()
+}
+
+/// Optimizer state carried by a v2 checkpoint.
+///
+/// `slots` are named full-length (unsharded) accumulator vectors in a fixed
+/// order: SGD/LARS store `velocity`, Adam stores `m` then `v`. Momentum
+/// vectors that the replicated optimizers had not lazily allocated yet are
+/// saved as explicit zeros so the restore side never guesses.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OptSnapshot {
+    /// One of "none", "sgd", "adam", "lars".
+    pub kind: String,
+    /// Adam's bias-correction step counter (0 for other optimizers).
+    pub adam_step: u64,
+    pub slots: Vec<(String, Vec<f32>)>,
+}
+
+impl OptSnapshot {
+    pub fn none() -> OptSnapshot {
+        OptSnapshot { kind: "none".into(), adam_step: 0, slots: Vec::new() }
+    }
+}
+
+/// Everything needed to resume training bit-identically on the reference
+/// backend: parameters, optimizer accumulators, and each worker's data RNG
+/// snapshot (the RNG *is* the synthetic data-pipeline cursor, so restoring
+/// it resumes the input stream at the exact batch the run left off).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainState {
+    pub step: u64,
+    pub params: Vec<Vec<f32>>,
+    pub opt: OptSnapshot,
+    /// Per-rank data RNG states, indexed by rank; empty for v1 checkpoints.
+    pub rng: Vec<RngState>,
+    /// World size the checkpoint was taken at (0 for v1 checkpoints).
+    pub world: usize,
+}
+
+fn rng_state_json(st: &RngState) -> Json {
+    obj(vec![
+        (
+            "s",
+            Json::Arr(st.s.iter().map(|&w| Json::Str(format!("{w:016x}"))).collect()),
+        ),
+        (
+            "spare",
+            match st.spare {
+                Some(w) => Json::Str(format!("{w:016x}")),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+fn parse_hex_u64(j: &Json) -> Result<u64> {
+    let s = j.as_str().context("expected hex string")?;
+    u64::from_str_radix(s, 16).with_context(|| format!("bad hex u64 {s:?}"))
+}
+
+fn rng_state_from_json(j: &Json) -> Result<RngState> {
+    let words = j.get("s").and_then(Json::as_arr).context("rng missing s")?;
+    if words.len() != 4 {
+        bail!("rng state needs 4 words, got {}", words.len());
+    }
+    let mut s = [0u64; 4];
+    for (i, w) in words.iter().enumerate() {
+        s[i] = parse_hex_u64(w)?;
+    }
+    let spare = match j.get("spare") {
+        Some(Json::Null) | None => None,
+        Some(v) => Some(parse_hex_u64(v)?),
+    };
+    Ok(RngState { s, spare })
+}
+
+fn write_f32s(f: &mut std::fs::File, data: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for &x in data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_f32s(f: &mut std::fs::File, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    f.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Save a full training state to `path` (format v2).
+pub fn save(path: impl AsRef<Path>, specs: &[ParamSpec], state: &TrainState) -> Result<()> {
+    assert_eq!(specs.len(), state.params.len());
+    let mut tensors = Vec::new();
+    let mut offset = 0usize;
+    for (s, p) in specs.iter().zip(&state.params) {
+        if s.numel() != p.len() {
+            bail!("{}: spec {} elems, data {}", s.name, s.numel(), p.len());
+        }
+        tensors.push(obj(vec![
+            ("name", Json::Str(s.name.clone())),
+            ("shape", Json::Arr(s.shape.iter().map(|&d| Json::from(d)).collect())),
+            ("offset", Json::from(offset)),
+        ]));
+        offset += p.len();
+    }
+    let mut slot_dir = Vec::new();
+    for (name, data) in &state.opt.slots {
+        slot_dir.push(obj(vec![
+            ("name", Json::Str(name.clone())),
+            ("len", Json::from(data.len())),
+            ("offset", Json::from(offset)),
+        ]));
+        offset += data.len();
+    }
+
+    // Chained checksum over the entire payload stream: params in spec
+    // order, then optimizer slots in directory order.
+    let mut stream = ChecksumStream::new();
+    for p in &state.params {
+        stream.update(p);
+    }
+    for (_, data) in &state.opt.slots {
+        stream.update(data);
+    }
+    let total_sum = stream.total();
+
+    let header = obj(vec![
+        ("format", Json::Str(FORMAT_V2.into())),
+        ("step", Json::from(state.step as usize)),
+        ("world", Json::from(state.world)),
+        ("total_elems", Json::from(offset)),
+        ("checksum", Json::Str(format!("{total_sum:016x}"))),
+        ("tensors", Json::Arr(tensors)),
+        (
+            "opt",
+            obj(vec![
+                ("kind", Json::Str(state.opt.kind.clone())),
+                ("adam_step", Json::from(state.opt.adam_step as usize)),
+                ("slots", Json::Arr(slot_dir)),
+            ]),
+        ),
+        ("rng", Json::Arr(state.rng.iter().map(rng_state_json).collect())),
+    ])
+    .dump();
+
+    let mut f = std::fs::File::create(&path)
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for p in &state.params {
+        write_f32s(&mut f, p)?;
+    }
+    for (_, data) in &state.opt.slots {
+        write_f32s(&mut f, data)?;
+    }
+    Ok(())
+}
+
+/// Save parameters (+ step) in the legacy v1 format. Kept for
+/// compatibility tests and for interop with pre-v2 tooling; new code
+/// should use [`save`].
+pub fn save_v1(
     path: impl AsRef<Path>,
     specs: &[ParamSpec],
     params: &[Vec<f32>],
@@ -46,9 +250,11 @@ pub fn save(
         ]));
         offset += p.len();
     }
-    let total_sum: u64 = params.iter().map(|p| checksum(p)).fold(0, u64::wrapping_add);
+    // v1 bug preserved on purpose: per-tensor checksums folded with an
+    // order-invariant sum. Readers treat this as weak verification.
+    let total_sum: u64 = params.iter().map(|p| checksum_v1(p)).fold(0, u64::wrapping_add);
     let header = obj(vec![
-        ("format", Json::Str("tpu-pod-train-ckpt-v1".into())),
+        ("format", Json::Str(FORMAT_V1.into())),
         ("step", Json::from(step as usize)),
         ("total_elems", Json::from(offset)),
         ("checksum", Json::Str(format!("{total_sum:016x}"))),
@@ -61,21 +267,12 @@ pub fn save(
     f.write_all(&(header.len() as u64).to_le_bytes())?;
     f.write_all(header.as_bytes())?;
     for p in params {
-        // Safe little-endian serialization.
-        let mut buf = Vec::with_capacity(p.len() * 4);
-        for &x in p {
-            buf.extend_from_slice(&x.to_le_bytes());
-        }
-        f.write_all(&buf)?;
+        write_f32s(&mut f, p)?;
     }
     Ok(())
 }
 
-/// Restore a checkpoint; returns (params, step). Validates names, shapes
-/// and checksum against `specs`.
-pub fn load(path: impl AsRef<Path>, specs: &[ParamSpec]) -> Result<(Vec<Vec<f32>>, u64)> {
-    let mut f = std::fs::File::open(&path)
-        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+fn read_header(f: &mut std::fs::File, path: &Path) -> Result<Json> {
     let mut len8 = [0u8; 8];
     f.read_exact(&mut len8)?;
     let hlen = u64::from_le_bytes(len8) as usize;
@@ -84,12 +281,16 @@ pub fn load(path: impl AsRef<Path>, specs: &[ParamSpec]) -> Result<(Vec<Vec<f32>
     }
     let mut hbuf = vec![0u8; hlen];
     f.read_exact(&mut hbuf)?;
-    let header = Json::parse(std::str::from_utf8(&hbuf)?)
-        .map_err(|e| anyhow::anyhow!("header parse: {e}"))?;
-    if header.get("format").and_then(Json::as_str) != Some("tpu-pod-train-ckpt-v1") {
-        bail!("unknown checkpoint format");
-    }
-    let step = header.get("step").and_then(Json::as_usize).unwrap_or(0) as u64;
+    Json::parse(std::str::from_utf8(&hbuf)?)
+        .map_err(|e| anyhow::anyhow!("header parse ({path:?}): {e}"))
+}
+
+fn read_params(
+    f: &mut std::fs::File,
+    header: &Json,
+    specs: &[ParamSpec],
+    stream: &mut ChecksumStream,
+) -> Result<Vec<Vec<f32>>> {
     let tensors = header
         .get("tensors")
         .and_then(Json::as_arr)
@@ -113,21 +314,101 @@ pub fn load(path: impl AsRef<Path>, specs: &[ParamSpec]) -> Result<(Vec<Vec<f32>
         if shape != s.shape {
             bail!("{name}: shape {shape:?} vs model {:?}", s.shape);
         }
-        let n = s.numel();
-        let mut buf = vec![0u8; n * 4];
-        f.read_exact(&mut buf)?;
-        let data: Vec<f32> = buf
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
+        let data = read_f32s(f, s.numel())?;
+        stream.update(&data);
         params.push(data);
     }
+    Ok(params)
+}
+
+/// Restore a checkpoint (v2 or, with a warning, legacy v1). Validates
+/// names, shapes and checksum against `specs`.
+pub fn load(path: impl AsRef<Path>, specs: &[ParamSpec]) -> Result<TrainState> {
+    let path = path.as_ref();
+    let mut f =
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let header = read_header(&mut f, path)?;
+    let format = header.get("format").and_then(Json::as_str).unwrap_or("");
+    match format {
+        FORMAT_V2 => load_v2(&mut f, &header, specs),
+        FORMAT_V1 => {
+            eprintln!(
+                "warning: {path:?} is a legacy v1 checkpoint (no optimizer/RNG state, \
+                 order-invariant checksum); resume will NOT be bit-identical"
+            );
+            load_v1(&mut f, &header, specs)
+        }
+        other => bail!("unknown checkpoint format {other:?}"),
+    }
+}
+
+fn load_v2(f: &mut std::fs::File, header: &Json, specs: &[ParamSpec]) -> Result<TrainState> {
+    let step = header.get("step").and_then(Json::as_usize).unwrap_or(0) as u64;
+    let world = header.get("world").and_then(Json::as_usize).unwrap_or(0);
+    let mut stream = ChecksumStream::new();
+    let params = read_params(f, header, specs, &mut stream)?;
+
+    let opt_h = header.get("opt").context("v2 header missing opt")?;
+    let kind = opt_h.get("kind").and_then(Json::as_str).unwrap_or("none").to_string();
+    let adam_step = opt_h.get("adam_step").and_then(Json::as_usize).unwrap_or(0) as u64;
+    let mut slots = Vec::new();
+    for slot in opt_h.get("slots").and_then(Json::as_arr).unwrap_or(&[]) {
+        let name = slot.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+        let len = slot.get("len").and_then(Json::as_usize).context("slot missing len")?;
+        let data = read_f32s(f, len)?;
+        stream.update(&data);
+        slots.push((name, data));
+    }
+
     let want = header.get("checksum").and_then(Json::as_str).unwrap_or("");
-    let got: u64 = params.iter().map(|p| checksum(p)).fold(0, u64::wrapping_add);
+    if format!("{:016x}", stream.total()) != want {
+        bail!("checksum mismatch: corrupt checkpoint");
+    }
+
+    let mut rng = Vec::new();
+    for r in header.get("rng").and_then(Json::as_arr).unwrap_or(&[]) {
+        rng.push(rng_state_from_json(r)?);
+    }
+    Ok(TrainState {
+        step,
+        params,
+        opt: OptSnapshot { kind, adam_step, slots },
+        rng,
+        world,
+    })
+}
+
+fn load_v1(f: &mut std::fs::File, header: &Json, specs: &[ParamSpec]) -> Result<TrainState> {
+    let step = header.get("step").and_then(Json::as_usize).unwrap_or(0) as u64;
+    let mut stream = ChecksumStream::new();
+    let params = read_params(f, header, specs, &mut stream)?;
+    let want = header.get("checksum").and_then(Json::as_str).unwrap_or("");
+    // v1's documented (buggy) verification: order-invariant fold.
+    let got: u64 = params.iter().map(|p| checksum_v1(p)).fold(0, u64::wrapping_add);
     if format!("{got:016x}") != want {
         bail!("checksum mismatch: corrupt checkpoint");
     }
-    Ok((params, step))
+    Ok(TrainState {
+        step,
+        params,
+        opt: OptSnapshot::none(),
+        rng: Vec::new(),
+        world: 0,
+    })
+}
+
+/// Read only the step counter from a checkpoint header (either format).
+/// Cheap: never touches the payload.
+pub fn peek_step(path: impl AsRef<Path>) -> Result<u64> {
+    let path = path.as_ref();
+    let mut f =
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let header = read_header(&mut f, path)?;
+    let format = header.get("format").and_then(Json::as_str).unwrap_or("");
+    if format != FORMAT_V1 && format != FORMAT_V2 {
+        bail!("unknown checkpoint format {format:?}");
+    }
+    Ok(header.get("step").and_then(Json::as_usize).unwrap_or(0) as u64)
 }
 
 #[cfg(test)]
@@ -148,20 +429,55 @@ mod tests {
         specs().iter().map(|s| rng.normal_vec(s.numel(), 1.0)).collect()
     }
 
+    fn make_state(seed: u64, step: u64) -> TrainState {
+        let params = make_params(seed);
+        let total: usize = params.iter().map(Vec::len).sum();
+        let mut rng = Rng::new(seed ^ 0xabcd);
+        let m = rng.normal_vec(total, 0.1);
+        let v = rng.normal_vec(total, 0.01);
+        let mut r0 = Rng::new(77);
+        r0.normal(); // leave a Box-Muller spare cached
+        TrainState {
+            step,
+            params,
+            opt: OptSnapshot {
+                kind: "adam".into(),
+                adam_step: step,
+                slots: vec![("m".into(), m), ("v".into(), v)],
+            },
+            rng: vec![r0.state(), Rng::new(78).state()],
+            world: 2,
+        }
+    }
+
     #[test]
-    fn round_trip_exact() {
-        let dir = std::env::temp_dir().join("tpt_ckpt_rt.bin");
-        let params = make_params(1);
-        save(&dir, &specs(), &params, 42).unwrap();
-        let (restored, step) = load(&dir, &specs()).unwrap();
-        assert_eq!(step, 42);
-        assert_eq!(restored, params); // bit-exact
+    fn round_trip_exact_with_opt_and_rng() {
+        let dir = std::env::temp_dir().join("tpt_ckpt_rt_v2.bin");
+        let state = make_state(1, 42);
+        save(&dir, &specs(), &state).unwrap();
+        let restored = load(&dir, &specs()).unwrap();
+        assert_eq!(restored, state); // bit-exact, incl. opt slots + rng
+        assert_eq!(peek_step(&dir).unwrap(), 42);
+    }
+
+    #[test]
+    fn v1_still_loads_without_opt_state() {
+        let dir = std::env::temp_dir().join("tpt_ckpt_v1_compat.bin");
+        let params = make_params(9);
+        save_v1(&dir, &specs(), &params, 17).unwrap();
+        let st = load(&dir, &specs()).unwrap();
+        assert_eq!(st.step, 17);
+        assert_eq!(st.params, params);
+        assert_eq!(st.opt, OptSnapshot::none());
+        assert!(st.rng.is_empty());
+        assert_eq!(st.world, 0);
+        assert_eq!(peek_step(&dir).unwrap(), 17);
     }
 
     #[test]
     fn shape_mismatch_rejected() {
         let dir = std::env::temp_dir().join("tpt_ckpt_shape.bin");
-        save(&dir, &specs(), &make_params(2), 0).unwrap();
+        save(&dir, &specs(), &make_state(2, 0)).unwrap();
         let mut wrong = specs();
         wrong[1].shape = vec![4, 16];
         assert!(load(&dir, &wrong).is_err());
@@ -170,7 +486,7 @@ mod tests {
     #[test]
     fn name_mismatch_rejected() {
         let dir = std::env::temp_dir().join("tpt_ckpt_name.bin");
-        save(&dir, &specs(), &make_params(3), 0).unwrap();
+        save(&dir, &specs(), &make_state(3, 0)).unwrap();
         let mut wrong = specs();
         wrong[0].name = "other".into();
         assert!(load(&dir, &wrong).is_err());
@@ -179,7 +495,7 @@ mod tests {
     #[test]
     fn corruption_detected() {
         let dir = std::env::temp_dir().join("tpt_ckpt_corrupt.bin");
-        save(&dir, &specs(), &make_params(4), 0).unwrap();
+        save(&dir, &specs(), &make_state(4, 0)).unwrap();
         // Flip a payload byte near the end.
         let mut bytes = std::fs::read(&dir).unwrap();
         let n = bytes.len();
@@ -189,8 +505,72 @@ mod tests {
         assert!(format!("{err}").contains("checksum"), "{err}");
     }
 
+    /// The v1 checksum folded per-tensor sums order-invariantly, so
+    /// swapping two same-shaped tensors' payloads passed verification.
+    /// v2 chains the checksum across the stream and must reject the swap.
+    #[test]
+    fn swapped_same_shape_tensors_rejected_by_v2() {
+        let two = vec![
+            ParamSpec { name: "a".into(), shape: vec![8, 8] },
+            ParamSpec { name: "b".into(), shape: vec![8, 8] },
+        ];
+        let mut rng = Rng::new(5);
+        let params = vec![rng.normal_vec(64, 1.0), rng.normal_vec(64, 1.0)];
+
+        let swap_payload = |path: &std::path::Path| {
+            let mut bytes = std::fs::read(path).unwrap();
+            let hlen = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
+            let h = 8 + hlen;
+            let first = bytes[h..h + 256].to_vec();
+            let second = bytes[h + 256..h + 512].to_vec();
+            bytes[h..h + 256].copy_from_slice(&second);
+            bytes[h + 256..h + 512].copy_from_slice(&first);
+            std::fs::write(path, bytes).unwrap();
+        };
+
+        // v2 rejects the swap.
+        let p2 = std::env::temp_dir().join("tpt_ckpt_swap_v2.bin");
+        let state = TrainState {
+            step: 0,
+            params: params.clone(),
+            opt: OptSnapshot::none(),
+            rng: Vec::new(),
+            world: 1,
+        };
+        save(&p2, &two, &state).unwrap();
+        swap_payload(&p2);
+        let err = load(&p2, &two).unwrap_err();
+        assert!(format!("{err}").contains("checksum"), "{err}");
+
+        // Pin the original bug: v1 accepts the same swap (wrong data!).
+        let p1 = std::env::temp_dir().join("tpt_ckpt_swap_v1.bin");
+        save_v1(&p1, &two, &params, 0).unwrap();
+        swap_payload(&p1);
+        let st = load(&p1, &two).unwrap();
+        assert_eq!(st.params[0], params[1], "v1 swap silently accepted");
+    }
+
+    #[test]
+    fn checksum_stream_is_order_sensitive() {
+        let xs = vec![1.0f32, 2.0, 3.0];
+        let ys = vec![4.0f32, 5.0];
+        let mut ab = ChecksumStream::new();
+        ab.update(&xs);
+        ab.update(&ys);
+        let mut ba = ChecksumStream::new();
+        ba.update(&ys);
+        ba.update(&xs);
+        assert_ne!(ab.total(), ba.total());
+        // But the v1 fold of per-chunk sums is NOT order sensitive.
+        let fold = |a: &[f32], b: &[f32]| {
+            [a, b].iter().map(|c| checksum_v1(c)).fold(0u64, u64::wrapping_add)
+        };
+        assert_eq!(fold(&xs, &ys), fold(&ys, &xs));
+    }
+
     #[test]
     fn missing_file_is_error() {
         assert!(load("/nonexistent/ckpt.bin", &specs()).is_err());
+        assert!(peek_step("/nonexistent/ckpt.bin").is_err());
     }
 }

@@ -12,8 +12,16 @@
 //!   LARS, Adam and momentum SGD,
 //! * the nested train-and-eval tight loop with distributed, padded,
 //!   masked evaluation (§2),
-//! * MLPerf timing rules (init excluded) via `metrics::RunLog`.
+//! * MLPerf timing rules (init excluded) via `metrics::RunLog`,
+//! * fault-tolerant elastic training: durable v2 checkpoints
+//!   (params + optimizer accumulators + per-rank data-RNG states),
+//!   bit-identical resume on the reference backend, and injected
+//!   [`crate::scenario::FaultTrace`] failures — a chip death rolls back
+//!   to the newest checkpoint and restarts on half the cores; the lost
+//!   work is reported as goodput (useful steps / executed steps).
 
 pub mod trainer;
 
-pub use trainer::{train, EvalPoint, GradSumMode, OptChoice, TrainConfig, TrainReport};
+pub use trainer::{
+    checkpoint_path, train, EvalPoint, GradSumMode, OptChoice, TrainConfig, TrainReport,
+};

@@ -6,13 +6,25 @@
 //! summation, replicated/sharded weight update, distributed eval — is the
 //! same coordinator code whether the executor is the in-Rust reference
 //! fwd/bwd or PJRT over AOT artifacts.
+//!
+//! The trainer is fault-tolerant: `checkpoint_every`/`checkpoint_dir`
+//! write self-contained v2 checkpoints (params + optimizer accumulators +
+//! per-rank data-RNG states), `resume` restarts from one bit-identically
+//! on the reference backend, and a [`FaultTrace`] injects per-step chip
+//! slowdowns, deaths, and preemptions: a fatal event tears the pod down,
+//! rolls back to the newest durable checkpoint (on the next
+//! power-of-two-smaller slice for deaths), and replays — the lost work is
+//! reported as goodput = useful steps / executed steps.
 
+use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::checkpoint::{self, OptSnapshot, TrainState};
 use crate::collectives::{
-    broadcast, gradsum_pipelined_ws, gradsum_serial, GradSumWorkspace, Placement,
+    all_gather_concat, broadcast, gradsum_pipelined_ws, gradsum_serial, GradSumWorkspace,
+    Placement,
 };
 use crate::data::synthetic::{ImageTask, LmTask};
 use crate::evaluation::{distributed_eval, EvalChunk, EvalSharding};
@@ -26,7 +38,8 @@ use crate::runtime::{
     param_specs_for, Backend, BackendChoice, Manifest, ParamSpec, PjRtBackend, Precision,
     ReferenceBackend, StepBatch,
 };
-use crate::util::rng::Rng;
+use crate::scenario::{FaultEvent, FaultKind, FaultTrace};
+use crate::util::rng::{Rng, RngState};
 use crate::util::timer::Timer;
 use crate::wus::{ShardPlan, ShardedAdam, ShardedLars, ShardedSgd};
 
@@ -79,6 +92,18 @@ pub struct TrainConfig {
     /// Linear warmup (steps) then polynomial decay to `steps` — the MLPerf
     /// ResNet schedule shape (paper Table 1 columns). 0 = constant lr.
     pub warmup_steps: usize,
+    /// Write a durable checkpoint every N steps (0 = never); requires
+    /// `checkpoint_dir`.
+    pub checkpoint_every: usize,
+    /// Directory for `ckpt-step{N:06}.ckpt` files.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Resume from this checkpoint file instead of initializing fresh.
+    pub resume: Option<PathBuf>,
+    /// Injected fault/straggler trace; `chip` indexes a worker rank.
+    pub faults: Option<FaultTrace>,
+    /// Rank 0 aborts the whole process (exit code 3) right after
+    /// completing this step — the CI crash-resume smoke. 0 = never.
+    pub kill_at: usize,
 }
 
 impl TrainConfig {
@@ -116,6 +141,11 @@ impl TrainConfig {
             image_alpha: 2.0,
             quality_target: None,
             warmup_steps: 0,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            resume: None,
+            faults: None,
+            kill_at: 0,
         }
     }
 }
@@ -141,6 +171,31 @@ pub struct TrainReport {
     pub params_total: usize,
     /// Cumulative backend execute seconds (PJRT or reference fwd/bwd).
     pub exec_s: f64,
+    /// Final parameter tensors (for resume bit-identity checks).
+    pub final_params: Vec<Vec<f32>>,
+    /// Step the run resumed from (0 = fresh start).
+    pub resumed_from: u64,
+    /// Steps at which checkpoints were durably written.
+    pub checkpoints: Vec<u64>,
+    /// Useful steps / executed steps (1.0 = no work lost to faults).
+    pub goodput: f64,
+    /// Steps of work discarded by fault rollbacks.
+    pub lost_steps: u64,
+    /// Checkpoint restores triggered by fatal fault events.
+    pub restores: usize,
+    /// Worker count at the end (elastic restarts halve it per death).
+    pub final_cores: usize,
+    /// Executed steps that overlapped an injected straggler window.
+    pub straggled_steps: usize,
+}
+
+/// One incarnation's marching orders: where to restart from and the first
+/// fault-killed step (the incarnation stops *before* executing it).
+struct IncarnationPlan {
+    resume: Option<PathBuf>,
+    /// Global steps already completed before this incarnation.
+    start: usize,
+    stop_before: Option<usize>,
 }
 
 /// Static per-run context shared (read-only) by all workers.
@@ -154,6 +209,7 @@ struct RunCtx {
     image: usize,
     classes: usize,
     exec: BackendCtx,
+    plan: IncarnationPlan,
 }
 
 /// Resolved executor context (model lookup happens once, in `train()`).
@@ -228,10 +284,212 @@ enum ShardedOpt {
     Sgd(ShardedSgd),
 }
 
-/// Run the trainer; returns the rank-0 report.
-pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
-    assert!(cfg.cores.is_power_of_two(), "cores must be a power of two");
-    let ctx = match cfg.backend {
+/// Checkpoint file name under `dir` for a (1-based) global step.
+pub fn checkpoint_path(dir: &Path, step: u64) -> PathBuf {
+    dir.join(format!("ckpt-step{step:06}.ckpt"))
+}
+
+/// Newest durable checkpoint at or before `completed`, existence-checked:
+/// a fault can strike before the first write, and files can be pruned.
+fn latest_checkpoint(cfg: &TrainConfig, completed: usize) -> (usize, Option<PathBuf>) {
+    let every = cfg.checkpoint_every;
+    let dir = match (&cfg.checkpoint_dir, every) {
+        (Some(d), e) if e > 0 => d,
+        _ => return (0, None),
+    };
+    let mut step = (completed / every) * every;
+    while step > 0 {
+        let p = checkpoint_path(dir, step as u64);
+        if p.exists() {
+            return (step, Some(p));
+        }
+        step -= every;
+    }
+    (0, None)
+}
+
+fn opt_kind_name(opt: &OptChoice) -> &'static str {
+    match opt {
+        OptChoice::Adam { .. } => "adam",
+        OptChoice::Lars { .. } => "lars",
+        OptChoice::Sgd { .. } => "sgd",
+    }
+}
+
+fn find_slot<'a>(slots: &'a [(String, Vec<f32>)], name: &str) -> Result<&'a [f32]> {
+    slots
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, v)| v.as_slice())
+        .ok_or_else(|| anyhow!("checkpoint is missing optimizer slot {name:?}"))
+}
+
+/// Split a full-length optimizer slot back into per-tensor state.
+fn split_slot(full: &[f32], sizes: &[usize]) -> Result<Vec<Vec<f32>>> {
+    let total: usize = sizes.iter().sum();
+    if full.len() != total {
+        bail!("optimizer slot has {} elems, params have {total}", full.len());
+    }
+    let mut out = Vec::with_capacity(sizes.len());
+    let mut off = 0;
+    for &n in sizes {
+        out.push(full[off..off + n].to_vec());
+        off += n;
+    }
+    Ok(out)
+}
+
+/// Concatenate per-tensor state into one full-length slot, writing
+/// explicit zeros for lazily-unallocated tensors (the optimizers size
+/// their accumulators on first touch).
+fn flatten_state<'a>(parts: impl Iterator<Item = &'a [f32]>, sizes: &[usize]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(sizes.iter().sum());
+    for (p, &n) in parts.zip(sizes) {
+        if p.is_empty() {
+            let cur = out.len();
+            out.resize(cur + n, 0.0);
+        } else {
+            debug_assert_eq!(p.len(), n);
+            out.extend_from_slice(p);
+        }
+    }
+    out
+}
+
+/// Restore optimizer accumulators from a checkpoint snapshot. Slots are
+/// stored full-length, so an elastic restart re-slices them under the new
+/// world's shard plan for free.
+fn restore_opt_state(
+    cfg: &TrainConfig,
+    st: &TrainState,
+    sizes: &[usize],
+    replicated: Option<&mut OptState>,
+    sharded: Option<&mut ShardedOpt>,
+) -> Result<()> {
+    let want = opt_kind_name(&cfg.opt);
+    if st.opt.kind != want {
+        bail!("checkpoint optimizer is {:?} but the run uses {want:?}", st.opt.kind);
+    }
+    if let Some(sh) = sharded {
+        match sh {
+            ShardedOpt::Lars(sl) => sl.restore_full_state(&st.opt.slots).map_err(|e| anyhow!(e))?,
+            ShardedOpt::Sgd(ss) => ss.restore_full_state(&st.opt.slots).map_err(|e| anyhow!(e))?,
+            ShardedOpt::Adam(sa) => {
+                sa.restore_full_state(&st.opt.slots).map_err(|e| anyhow!(e))?;
+                sa.set_step_count(st.opt.adam_step);
+            }
+        }
+        return Ok(());
+    }
+    match replicated.expect("replicated optimizer") {
+        OptState::Adam(states) => {
+            let m = split_slot(find_slot(&st.opt.slots, "m")?, sizes)?;
+            let v = split_slot(find_slot(&st.opt.slots, "v")?, sizes)?;
+            for ((s, mi), vi) in states.iter_mut().zip(m).zip(v) {
+                s.m = mi;
+                s.v = vi;
+            }
+        }
+        OptState::Lars(states) => {
+            let vel = split_slot(find_slot(&st.opt.slots, "velocity")?, sizes)?;
+            for (s, vi) in states.iter_mut().zip(vel) {
+                s.v = vi;
+            }
+        }
+        OptState::Sgd(vels) => {
+            let vel = split_slot(find_slot(&st.opt.slots, "velocity")?, sizes)?;
+            for (slot, vi) in vels.iter_mut().zip(vel) {
+                *slot = vi;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Snapshot the optimizer for a checkpoint. Sharded state all-gathers its
+/// full slots (a collective — every rank must call this); replicated state
+/// is identical on every rank, so it flattens rank-locally.
+fn snapshot_opt(
+    ep: &mut Endpoint,
+    group: &[usize],
+    cfg: &TrainConfig,
+    sizes: &[usize],
+    replicated: Option<&OptState>,
+    sharded: Option<&ShardedOpt>,
+    step: u64,
+) -> OptSnapshot {
+    let kind = opt_kind_name(&cfg.opt).to_string();
+    if let Some(sh) = sharded {
+        let (slots, adam_step) = match sh {
+            ShardedOpt::Lars(sl) => (sl.gather_full_state(ep, group), 0),
+            ShardedOpt::Sgd(ss) => (ss.gather_full_state(ep, group), 0),
+            ShardedOpt::Adam(sa) => (sa.gather_full_state(ep, group), sa.step_count()),
+        };
+        return OptSnapshot { kind, adam_step, slots };
+    }
+    let (adam_step, slots) = match replicated.expect("replicated optimizer") {
+        OptState::Adam(states) => (
+            step,
+            vec![
+                ("m".to_string(), flatten_state(states.iter().map(|s| s.m.as_slice()), sizes)),
+                ("v".to_string(), flatten_state(states.iter().map(|s| s.v.as_slice()), sizes)),
+            ],
+        ),
+        OptState::Lars(states) => (
+            0,
+            vec![(
+                "velocity".to_string(),
+                flatten_state(states.iter().map(|s| s.v.as_slice()), sizes),
+            )],
+        ),
+        OptState::Sgd(vels) => (
+            0,
+            vec![(
+                "velocity".to_string(),
+                flatten_state(vels.iter().map(|v| v.as_slice()), sizes),
+            )],
+        ),
+    };
+    OptSnapshot { kind, adam_step, slots }
+}
+
+/// f32-encoded RNG state: 4 state words + a spare flag + the spare word,
+/// each u64 as four u16 limbs (every limb is exact in f32, so the state
+/// rides the f32 collective fabric losslessly).
+const RNG_ENC_LEN: usize = 21;
+
+fn encode_u64(out: &mut Vec<f32>, w: u64) {
+    for i in 0..4 {
+        out.push(((w >> (16 * i)) & 0xFFFF) as f32);
+    }
+}
+
+fn decode_u64(limbs: &[f32]) -> u64 {
+    limbs.iter().enumerate().fold(0u64, |acc, (i, &x)| acc | ((x as u64) << (16 * i)))
+}
+
+fn encode_rng_state(st: &RngState) -> Vec<f32> {
+    let mut out = Vec::with_capacity(RNG_ENC_LEN);
+    for &w in &st.s {
+        encode_u64(&mut out, w);
+    }
+    out.push(if st.spare.is_some() { 1.0 } else { 0.0 });
+    encode_u64(&mut out, st.spare.unwrap_or(0));
+    out
+}
+
+fn decode_rng_state(limbs: &[f32]) -> RngState {
+    let mut s = [0u64; 4];
+    for (i, w) in s.iter_mut().enumerate() {
+        *w = decode_u64(&limbs[4 * i..4 * i + 4]);
+    }
+    let spare = if limbs[16] != 0.0 { Some(decode_u64(&limbs[17..21])) } else { None };
+    RngState { s, spare }
+}
+
+/// Resolve the model once and bind one incarnation's plan.
+fn build_ctx(cfg: &TrainConfig, plan: IncarnationPlan) -> Result<RunCtx> {
+    match cfg.backend {
         BackendChoice::Reference | BackendChoice::ReferenceBf16 => {
             let dims = proxy_dims(&cfg.model).ok_or_else(|| {
                 anyhow!(
@@ -240,7 +498,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                     crate::models::proxy::known_families()
                 )
             })?;
-            RunCtx {
+            Ok(RunCtx {
                 cfg: cfg.clone(),
                 kind: dims.kind,
                 specs: param_specs_for(&dims),
@@ -250,7 +508,8 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 image: dims.image,
                 classes: dims.classes,
                 exec: BackendCtx::Reference { dims },
-            }
+                plan,
+            })
         }
         BackendChoice::PjRt => {
             if cfg.batch_override.is_some() {
@@ -275,7 +534,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             manifest.artifact(&pjrt.train_art)?;
             manifest.artifact(&pjrt.eval_art)?;
             drop(crate::runtime::Runtime::with_manifest(std::rc::Rc::new(manifest.clone()))?);
-            RunCtx {
+            Ok(RunCtx {
                 cfg: cfg.clone(),
                 kind,
                 specs,
@@ -285,20 +544,146 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 image: if kind == TaskKind::Image { get("image")? } else { 0 },
                 classes: if kind == TaskKind::Image { get("classes")? } else { 0 },
                 exec: BackendCtx::PjRt(pjrt),
-            }
+                plan,
+            })
         }
+    }
+}
+
+/// Fold one incarnation's report into the run-level accumulator.
+fn merge_incarnation(report: &mut TrainReport, inc: TrainReport) {
+    report.step_losses.extend(inc.step_losses);
+    report.evals.extend(inc.evals);
+    report.checkpoints.extend(inc.checkpoints);
+    report.straggled_steps += inc.straggled_steps;
+    report.breakdown.compute_s += inc.breakdown.compute_s;
+    report.breakdown.gradsum_s += inc.breakdown.gradsum_s;
+    report.breakdown.update_s += inc.breakdown.update_s;
+    report.breakdown.input_s += inc.breakdown.input_s;
+    report.breakdown.steps += inc.breakdown.steps;
+    report.wallclock_s += inc.wallclock_s;
+    report.init_s += inc.init_s;
+    report.exec_s += inc.exec_s;
+    report.params_total = inc.params_total;
+    if report.converged_at.is_none() {
+        report.converged_at = inc.converged_at;
+    }
+    report.final_params = inc.final_params;
+}
+
+/// Run the trainer; returns the rank-0 report.
+///
+/// With a fault trace this is an *incarnation loop*: each incarnation
+/// trains until the run finishes or the next fatal (death/preemption)
+/// event strikes; a fatal event rolls the run back to the newest durable
+/// checkpoint — losing the steps since it — and, for a death, restarts
+/// elastically on half the cores. Goodput = useful steps / executed steps
+/// (exactly 1.0 when no fault applies).
+pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
+    assert!(cfg.cores.is_power_of_two(), "cores must be a power of two");
+    if cfg.checkpoint_every > 0 {
+        let dir = cfg
+            .checkpoint_dir
+            .as_ref()
+            .ok_or_else(|| anyhow!("checkpoint-every requires a checkpoint dir"))?;
+        std::fs::create_dir_all(dir)?;
+    }
+    if let Some(trace) = &cfg.faults {
+        trace.validate().map_err(|e| anyhow!("invalid fault trace: {e}"))?;
+    }
+    let resumed_from = match &cfg.resume {
+        Some(path) => checkpoint::peek_step(path)?,
+        None => 0,
     };
 
-    let results = Mutex::new(Vec::<(usize, TrainReport)>::new());
-    run_spmd(cfg.cores, |ep| {
-        let r = worker(ep, &ctx)
-            .unwrap_or_else(|e| panic!("worker {} failed: {e:#}", ep.rank));
-        results.lock().unwrap().push((ep.rank, r));
-    });
+    // Fatal events only; stragglers are handled inside the step loop.
+    let fatal: Vec<FaultEvent> = cfg
+        .faults
+        .iter()
+        .flat_map(|t| t.events.iter().copied())
+        .filter(|ev| !matches!(ev.kind, FaultKind::Slowdown { .. }))
+        .collect();
 
-    let mut all = results.into_inner().unwrap();
-    all.sort_by_key(|(r, _)| *r);
-    all.into_iter().next().map(|(_, rep)| rep).ok_or_else(|| anyhow!("no worker results"))
+    let mut world = cfg.cores;
+    let mut start = resumed_from as usize;
+    let mut resume = cfg.resume.clone();
+    let mut fi = 0usize;
+    let mut report = TrainReport { resumed_from, goodput: 1.0, ..Default::default() };
+    let mut executed = 0usize;
+    let mut completed;
+
+    loop {
+        // Next fault event that can kill this incarnation (an event aimed
+        // at an already-dead rank, or at already-replayed steps, skips).
+        let mut stop: Option<(usize, usize)> = None;
+        while fi < fatal.len() {
+            let ev = &fatal[fi];
+            let step = ev.step as usize;
+            if step <= start || ev.chip >= world {
+                fi += 1;
+                continue;
+            }
+            if step > cfg.steps {
+                fi = fatal.len();
+                break;
+            }
+            stop = Some((fi, step));
+            break;
+        }
+
+        let plan = IncarnationPlan {
+            resume: resume.clone(),
+            start,
+            stop_before: stop.map(|(_, s)| s),
+        };
+        let ctx = build_ctx(cfg, plan)?;
+        let results = Mutex::new(Vec::<(usize, TrainReport)>::new());
+        run_spmd(world, |ep| {
+            let r = worker(ep, &ctx)
+                .unwrap_or_else(|e| panic!("worker {} failed: {e:#}", ep.rank));
+            results.lock().unwrap().push((ep.rank, r));
+        });
+        let mut all = results.into_inner().unwrap();
+        all.sort_by_key(|(r, _)| *r);
+        let inc = all
+            .into_iter()
+            .next()
+            .map(|(_, rep)| rep)
+            .ok_or_else(|| anyhow!("no worker results"))?;
+
+        executed += inc.step_losses.len();
+        completed = start + inc.step_losses.len();
+        merge_incarnation(&mut report, inc);
+
+        let hit_fault = match stop {
+            Some((_, fstep)) => completed + 1 == fstep && report.converged_at.is_none(),
+            None => false,
+        };
+        if !hit_fault {
+            break;
+        }
+        let (idx, fstep) = stop.expect("fatal event");
+
+        // Roll back to the newest durable checkpoint; everything past it
+        // is lost work.
+        report.restores += 1;
+        let (ckpt_step, ckpt_path) = latest_checkpoint(cfg, completed);
+        report.lost_steps += (completed - ckpt_step) as u64;
+        if fatal[idx].kind == FaultKind::Death {
+            if world == 1 {
+                bail!("fault trace killed the last worker at step {fstep}");
+            }
+            world /= 2; // elastic restart on the next power-of-two slice
+        }
+        resume = ckpt_path;
+        start = ckpt_step;
+        fi = idx + 1;
+    }
+
+    let useful = completed.saturating_sub(resumed_from as usize);
+    report.goodput = if executed == 0 { 1.0 } else { useful as f64 / executed as f64 };
+    report.final_cores = world;
+    Ok(report)
 }
 
 fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
@@ -311,21 +696,51 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
     // ---- init phase (excluded from the MLPerf clock) ---------------------
     let backend = make_backend(ctx)?;
 
-    // Rank 0 initializes; weights ride the broadcast collective.
-    let mut params: Vec<Vec<f32>> = if ep.rank == 0 {
-        init_params(&ctx.specs, cfg.seed)
-    } else {
-        ctx.specs.iter().map(|s| vec![0.0; s.numel()]).collect()
+    // Fresh start: rank 0 initializes and the weights ride the broadcast
+    // collective. Resume: every rank reads the same self-contained v2
+    // file, so params are identical with no collective at all.
+    let restored: Option<TrainState> = match &ctx.plan.resume {
+        Some(path) => {
+            let st = checkpoint::load(path, &ctx.specs)
+                .map_err(|e| anyhow!("restore from {}: {e}", path.display()))?;
+            if st.step as usize != ctx.plan.start {
+                bail!(
+                    "checkpoint {} is at step {} but the plan resumes at {}",
+                    path.display(),
+                    st.step,
+                    ctx.plan.start
+                );
+            }
+            Some(st)
+        }
+        None => None,
     };
-    for t in params.iter_mut() {
-        broadcast(ep, &group, 0, t);
-    }
+    let mut params: Vec<Vec<f32>> = match &restored {
+        Some(st) => st.params.clone(),
+        None => {
+            let mut p = if ep.rank == 0 {
+                init_params(&ctx.specs, cfg.seed)
+            } else {
+                ctx.specs.iter().map(|s| vec![0.0; s.numel()]).collect()
+            };
+            for t in p.iter_mut() {
+                broadcast(ep, &group, 0, t);
+            }
+            p
+        }
+    };
 
     // Training data decorrelated per worker; eval set shared via seeds.
+    // The data RNG *is* the input-pipeline cursor: restoring it resumes
+    // the stream at the exact batch the checkpointed run would draw next
+    // (v1 checkpoints carry no RNG — those fall back to a fresh stream).
     let lm_task = LmTask::new(ctx.vocab.max(2), cfg.task_difficulty);
     let img_task =
         ImageTask::new(ctx.image.max(1), ctx.classes.max(2), cfg.image_alpha, cfg.seed ^ 0xEEE);
-    let mut data_rng = Rng::new(cfg.seed).fold_in(1000 + ep.rank as u64);
+    let mut data_rng = match restored.as_ref().and_then(|st| st.rng.get(ep.rank)) {
+        Some(state) => Rng::restore(state),
+        None => Rng::new(cfg.seed).fold_in(1000 + ep.rank as u64),
+    };
 
     // Optimizer state (replicated or sharded per §2 Fig. 4).
     let is_1d: Vec<bool> = ctx.specs.iter().map(|s| s.shape.len() <= 1).collect();
@@ -356,6 +771,11 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
             OptChoice::Sgd { .. } => OptState::Sgd(ctx.specs.iter().map(|_| vec![]).collect()),
         });
     }
+    if let Some(st) = &restored {
+        if st.opt.kind != "none" {
+            restore_opt_state(cfg, st, &sizes, replicated.as_mut(), sharded.as_mut())?;
+        }
+    }
 
     let mut report =
         TrainReport { params_total: sizes.iter().sum(), ..Default::default() };
@@ -367,7 +787,25 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
     let wall = Timer::start();
 
     // ---- nested train-and-eval tight loop (§2) ---------------------------
-    for step in 1..=cfg.steps {
+    for step in (ctx.plan.start + 1)..=cfg.steps {
+        if let Some(fatal) = ctx.plan.stop_before {
+            if step >= fatal {
+                break; // the fault strikes mid-step: this step's work is lost
+            }
+        }
+        // Injected stragglers stretch the step but never kill it — the
+        // synchronous SPMD step is gated on the slowest live participant.
+        if let Some(trace) = &cfg.faults {
+            let s = step as u64;
+            let straggled = trace.events.iter().any(|ev| {
+                matches!(ev.kind, FaultKind::Slowdown { steps, .. }
+                    if ev.chip < world && s >= ev.step && s < ev.step.saturating_add(steps))
+            });
+            if straggled {
+                report.straggled_steps += 1;
+            }
+        }
+
         // -- input pipeline --
         let t_in = Timer::start();
         let batch = match ctx.kind {
@@ -471,9 +909,44 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
                 }
             }
         }
+
+        // -- durable checkpoint (fault-tolerance layer) --
+        if cfg.checkpoint_every > 0 && step % cfg.checkpoint_every == 0 {
+            // Every rank contributes its data-RNG state (u16 limbs ride
+            // the f32 fabric exactly) and, under WUS, its optimizer shard;
+            // rank 0 then writes one self-contained v2 file.
+            let mine = encode_rng_state(&data_rng.state());
+            let gathered = all_gather_concat(ep, &group, &mine);
+            let rng_states: Vec<RngState> = (0..world)
+                .map(|r| decode_rng_state(&gathered[r * RNG_ENC_LEN..(r + 1) * RNG_ENC_LEN]))
+                .collect();
+            let opt = snapshot_opt(ep, &group, cfg, &sizes, replicated.as_ref(),
+                                   sharded.as_ref(), step as u64);
+            if ep.rank == 0 {
+                let dir = cfg.checkpoint_dir.as_ref().expect("checkpoint dir");
+                let path = checkpoint_path(dir, step as u64);
+                let state = TrainState {
+                    step: step as u64,
+                    params: params.clone(),
+                    opt,
+                    rng: rng_states,
+                    world,
+                };
+                checkpoint::save(&path, &ctx.specs, &state)
+                    .map_err(|e| anyhow!("checkpoint {}: {e}", path.display()))?;
+                report.checkpoints.push(step as u64);
+            }
+        }
+
+        // -- crash injection (CI crash-resume smoke) --
+        if cfg.kill_at == step && ep.rank == 0 {
+            eprintln!("kill-at: aborting the process after step {step}");
+            std::process::exit(3);
+        }
     }
     report.wallclock_s = wall.secs();
     report.exec_s = backend.execute_seconds();
+    report.final_params = params;
     Ok(report)
 }
 

@@ -60,7 +60,12 @@
 //!   backend (always runs: convergence, WUS/gradsum equivalences, seeded
 //!   bit-identical determinism); the Pallas kernel-parity tests skip
 //!   unless the PJRT backend is available (`python python/compile/aot.py`
-//!   + the real `xla` binding, see `rust/src/runtime/README.md`).
+//!   + the real `xla` binding, see `rust/src/runtime/README.md`),
+//! * `rust/tests/fault_tolerance.rs` — the [`checkpoint`] +
+//!   [`scenario::FaultTrace`] layer: kill-and-resume bit-identity for
+//!   every optimizer (replicated and WUS), elastic halving restarts on
+//!   chip death, and the sweep engine's goodput accounting (an empty
+//!   trace is a byte-level no-op).
 
 pub mod benchkit;
 pub mod checkpoint;

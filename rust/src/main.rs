@@ -11,6 +11,8 @@
 //!                runs the §2 ablation cross-product over `--jobs` workers.
 //! * `submit`   — full simulated MLPerf-0.6 submission (all five models,
 //!                Fig. 9-style table).
+//! * `faults`   — generate a seeded fault/straggler trace for `train
+//!                --faults` and `sweep --faults` (goodput reporting).
 //! * `info`     — list artifacts, models and device constants.
 
 use tpu_pod_train::benchkit::Table;
@@ -20,8 +22,8 @@ use tpu_pod_train::models::{all_models, model};
 use tpu_pod_train::optim::{AdamConfig, LarsConfig, LarsVariant};
 use tpu_pod_train::runtime::{BackendChoice, Manifest};
 use tpu_pod_train::scenario::{
-    compare_reports, AblationGrid, BatchSchedule, GradSumChoice, ScalingScenario, SweepReport,
-    SweepRunner,
+    compare_reports, AblationGrid, BatchSchedule, FaultTrace, GradSumChoice, ScalingScenario,
+    SweepReport, SweepRunner,
 };
 use tpu_pod_train::simulator::{simulate, SimOptions};
 use tpu_pod_train::util::cli::Cli;
@@ -35,11 +37,12 @@ fn main() {
         "simulate" => cmd_simulate(&rest),
         "sweep" => cmd_sweep(&rest),
         "submit" => cmd_submit(&rest),
+        "faults" => cmd_faults(&rest),
         "info" => cmd_info(),
         _ => {
             eprintln!(
                 "tpu-pod-train — MLPerf-0.6 TPU-v3 pod reproduction\n\n\
-                 Usage: tpu-pod-train <train|simulate|sweep|submit|info> [options]\n\
+                 Usage: tpu-pod-train <train|simulate|sweep|submit|faults|info> [options]\n\
                  Run a subcommand with --help for its options."
             );
             2
@@ -63,6 +66,11 @@ fn cmd_train(tokens: &[String]) -> i32 {
         .opt("momentum", "0.9", "momentum (sgd/lars)")
         .opt("target", "0", "quality target accuracy (0 = none)")
         .opt("seed", "0", "rng seed")
+        .opt("checkpoint-every", "0", "write a durable checkpoint every N steps (0 = never)")
+        .opt("checkpoint-dir", "", "directory for ckpt-step*.ckpt files")
+        .opt("resume", "", "checkpoint file to resume from")
+        .opt("faults", "", "fault/straggler trace JSON (chip = worker rank)")
+        .opt("kill-at", "0", "abort the process (exit 3) after this step (CI smoke; 0 = never)")
         .flag("wus", "shard the weight update across cores (paper §2)")
         .flag("serial-gradsum", "disable the pipelined gradient summation")
         .flag("check-improved", "exit 1 unless the final loss beats the seeded-start loss (CI)");
@@ -111,6 +119,20 @@ fn cmd_train(tokens: &[String]) -> i32 {
     };
     let batch_per_core = a.get_usize("batch-per-core", 0);
     let target = a.get_f64("target", 0.0);
+    let ckpt_dir = get_s("checkpoint-dir", "");
+    let resume = get_s("resume", "");
+    let faults_path = get_s("faults", "");
+    let faults = if faults_path.is_empty() {
+        None
+    } else {
+        match FaultTrace::load(&faults_path) {
+            Ok(t) => Some(t),
+            Err(e) => {
+                eprintln!("fault trace error: {e}");
+                return 2;
+            }
+        }
+    };
     let cfg = TrainConfig {
         model: get_s("model", "transformer"),
         cores: a.get_usize("cores", file_cfg.usize_or("train.cores", 4)),
@@ -131,6 +153,11 @@ fn cmd_train(tokens: &[String]) -> i32 {
         image_alpha: 2.0,
         quality_target: (target > 0.0).then_some(target),
         warmup_steps: 0,
+        checkpoint_every: a.get_usize("checkpoint-every", 0),
+        checkpoint_dir: (!ckpt_dir.is_empty()).then(|| std::path::PathBuf::from(&ckpt_dir)),
+        resume: (!resume.is_empty()).then(|| std::path::PathBuf::from(&resume)),
+        faults,
+        kill_at: a.get_usize("kill-at", 0),
     };
     println!(
         "training {} on {} cores, {} steps (backend={}, wus={}, gradsum={:?})",
@@ -148,6 +175,20 @@ fn cmd_train(tokens: &[String]) -> i32 {
                 rep.init_s, rep.wallclock_s, rep.exec_s, rep.params_total
             );
             println!("{}", rep.breakdown.report());
+            if rep.resumed_from > 0 {
+                println!("resumed from step {}", rep.resumed_from);
+            }
+            if !rep.checkpoints.is_empty() {
+                println!("checkpoints written at steps {:?}", rep.checkpoints);
+            }
+            if rep.restores > 0 || rep.straggled_steps > 0 {
+                println!(
+                    "faults: goodput {:.3}, {} restore(s), {} lost step(s), \
+                     {} straggled step(s), final cores {}",
+                    rep.goodput, rep.restores, rep.lost_steps, rep.straggled_steps,
+                    rep.final_cores
+                );
+            }
             let n = rep.step_losses.len();
             let stride = (n / 10).max(1);
             for (i, chunk) in rep.step_losses.chunks(stride).enumerate() {
@@ -260,6 +301,7 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
         .opt("out", "", "also write the JSON report to this file")
         .opt("compare", "", "baseline SweepReport JSON to diff against (exit 1 on regression)")
         .opt("tolerance", "0.02", "relative benchmark-seconds regression tolerance for --compare")
+        .opt("faults", "", "fault trace JSON: reprice every point under failures, report goodput")
         .flag("grid", "run the §2 ablation grid (spatial/WUS x gradsum schedule x LARS/SGD)")
         .flag("serial-gradsum", "expose the non-contiguous gathers (no pipelining)")
         .flag("no-2d", "use the 1-D ring gradient-summation schedule")
@@ -377,6 +419,25 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
             })
             .collect()
     };
+    let faults_path = a.get_or("faults", "");
+    let scenarios: Vec<ScalingScenario> = if faults_path.is_empty() {
+        scenarios
+    } else {
+        let trace = match FaultTrace::load(&faults_path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("fault trace error: {e}");
+                return 2;
+            }
+        };
+        eprintln!(
+            "fault trace {:?}: {} event(s), ckpt every {} steps",
+            trace.name,
+            trace.events.len(),
+            trace.ckpt_every_steps
+        );
+        scenarios.into_iter().map(|s| s.with_faults(trace.clone())).collect()
+    };
     let report = match SweepRunner::new(scenarios).run_jobs(jobs) {
         Ok(r) => r,
         Err(e) => {
@@ -424,6 +485,48 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
             return 1;
         }
         eprintln!("no regressions beyond {:.1}% tolerance", 100.0 * tolerance);
+    }
+    0
+}
+
+fn cmd_faults(tokens: &[String]) -> i32 {
+    let cli = Cli::new("faults", "generate a seeded fault/straggler trace")
+        .opt("name", "trace", "trace name (recorded in the JSON)")
+        .opt("seed", "0", "rng seed (traces are deterministic given the seed)")
+        .opt("steps", "1000", "training steps the trace covers")
+        .opt("chips", "16", "failure domains (simulator chips / trainer ranks)")
+        .opt("ckpt-every", "100", "simulator-side durable checkpoint cadence in steps")
+        .opt("restore-seconds", "30", "wall-clock cost of one checkpoint restore")
+        .opt("slowdown-rate", "0.001", "per-chip-step probability of a straggler window")
+        .opt("death-rate", "0.0002", "per-chip-step probability of a chip death")
+        .opt("preempt-rate", "0.0001", "per-chip-step probability of a slice preemption")
+        .opt("out", "", "also write the trace JSON to this file");
+    let a = match cli.parse_tokens(tokens) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let trace = FaultTrace::generate(
+        &a.get_or("name", "trace"),
+        a.get_usize("seed", 0) as u64,
+        a.get_usize("steps", 1000) as u64,
+        a.get_usize("chips", 16),
+        a.get_usize("ckpt-every", 100) as u64,
+        a.get_f64("restore-seconds", 30.0),
+        a.get_f64("slowdown-rate", 0.001),
+        a.get_f64("death-rate", 0.0002),
+        a.get_f64("preempt-rate", 0.0001),
+    );
+    println!("{}", trace.dump());
+    let out = a.get_or("out", "");
+    if !out.is_empty() {
+        if let Err(e) = trace.write(&out) {
+            eprintln!("writing {out}: {e}");
+            return 1;
+        }
+        eprintln!("trace written to {out} ({} event(s))", trace.events.len());
     }
     0
 }

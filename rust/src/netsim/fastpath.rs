@@ -14,7 +14,11 @@
 //!
 //! The fast path is exact ONLY under uniform payloads; a non-uniform
 //! schedule (see the ROADMAP netsim item) breaks the row symmetry and
-//! must fall back to the full event-driven simulation.
+//! must fall back to the full event-driven simulation. That fallback is
+//! now enforced: [`torus2d_gradsum_makespan_guarded`] checks per-chip
+//! payload uniformity ([`payload_uniform`], bit-exact) and routes
+//! non-uniform schedules through [`torus2d_gradsum_event_makespan`], the
+//! whole-torus event-driven pricing of the same 4-phase schedule.
 
 use super::cost::NetParams;
 use super::sim::{Message, NetSim};
@@ -72,6 +76,80 @@ pub fn torus2d_gradsum_makespan(torus: Torus, payload_bytes: f64, p: &NetParams)
     2.0 * ((torus.nx - 1) as f64 * x_step + (torus.ny - 1) as f64 * y_step)
 }
 
+/// A priced makespan plus which engine priced it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GuardedMakespan {
+    pub seconds: f64,
+    /// True when the symmetry fast path was exact (uniform payloads).
+    pub fastpath: bool,
+}
+
+/// Whether every chip carries bit-identical payload bytes — the exact
+/// precondition of the symmetry fast path.
+pub fn payload_uniform(payloads: &[f64]) -> bool {
+    payloads.windows(2).all(|w| w[0].to_bits() == w[1].to_bits())
+}
+
+/// The same 4-phase 2-D gradient-summation schedule as
+/// [`torus2d_gradsum_makespan`], but priced by the full event-driven
+/// simulation over the whole torus with per-chip payloads (indexed in
+/// `Torus::id` row-major order). Needed when the payload schedule is
+/// non-uniform: a heavy chip slows its own row/column while other rings
+/// still finish early, which no single representative ring can express.
+pub fn torus2d_gradsum_event_makespan(torus: Torus, payloads: &[f64], p: &NetParams) -> f64 {
+    assert_eq!(payloads.len(), torus.chips(), "one payload per chip");
+    if torus.chips() <= 1 {
+        return 0.0;
+    }
+    let phase_step = |dir_plus: Dir, dir_minus: Dir, denom: f64| -> f64 {
+        let mut sim = NetSim::new(torus, p.link_bw, p.link_latency);
+        let msgs: Vec<Message> = torus
+            .coords()
+            .flat_map(|c| {
+                let half = payloads[torus.id(c)] / denom / 2.0;
+                [
+                    Message { src: c, dst: torus.step(c, dir_plus), bytes: half, ready_at: 0.0 },
+                    Message { src: c, dst: torus.step(c, dir_minus), bytes: half, ready_at: 0.0 },
+                ]
+            })
+            .collect();
+        sim.makespan(&msgs)
+    };
+    let x_step = if torus.nx > 1 {
+        phase_step(Dir::XPlus, Dir::XMinus, torus.nx as f64)
+    } else {
+        0.0
+    };
+    let y_step = if torus.ny > 1 {
+        phase_step(Dir::YPlus, Dir::YMinus, (torus.nx * torus.ny) as f64)
+    } else {
+        0.0
+    };
+    2.0 * ((torus.nx - 1) as f64 * x_step + (torus.ny - 1) as f64 * y_step)
+}
+
+/// Guarded entry point: the symmetry fast path when the per-chip payload
+/// schedule is uniform (bit-exact check), the full event-driven
+/// simulation otherwise. Callers that previously reached for
+/// [`torus2d_gradsum_makespan`] with an implicit uniformity assumption
+/// should use this and read `fastpath` to see which engine priced them.
+pub fn torus2d_gradsum_makespan_guarded(
+    torus: Torus,
+    payloads: &[f64],
+    p: &NetParams,
+) -> GuardedMakespan {
+    assert_eq!(payloads.len(), torus.chips(), "one payload per chip");
+    if payload_uniform(payloads) {
+        let payload = payloads.first().copied().unwrap_or(0.0);
+        GuardedMakespan { seconds: torus2d_gradsum_makespan(torus, payload, p), fastpath: true }
+    } else {
+        GuardedMakespan {
+            seconds: torus2d_gradsum_event_makespan(torus, payloads, p),
+            fastpath: false,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +188,53 @@ mod tests {
         let large = torus2d_gradsum_makespan(torus, 1e8, &p);
         assert!(small > 0.0);
         assert!(large > small);
+    }
+
+    #[test]
+    fn uniform_payloads_take_the_fast_path_exactly() {
+        let p = NetParams::default();
+        let torus = Torus::for_chips(64);
+        let payloads = vec![1e7; torus.chips()];
+        let g = torus2d_gradsum_makespan_guarded(torus, &payloads, &p);
+        assert!(g.fastpath);
+        assert_eq!(g.seconds, torus2d_gradsum_makespan(torus, 1e7, &p));
+    }
+
+    #[test]
+    fn event_engine_matches_fastpath_under_uniform_payloads() {
+        let p = NetParams::default();
+        for chips in [16usize, 64] {
+            let torus = Torus::for_chips(chips);
+            let payloads = vec![2e6; torus.chips()];
+            let event = torus2d_gradsum_event_makespan(torus, &payloads, &p);
+            let fast = torus2d_gradsum_makespan(torus, 2e6, &p);
+            assert!(
+                (event - fast).abs() <= 1e-9 * fast.max(1.0),
+                "{chips} chips: event {event} vs fastpath {fast}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_uniform_payloads_fall_back_to_the_event_engine() {
+        let p = NetParams::default();
+        let torus = Torus::for_chips(16);
+        let mut payloads = vec![1e6; torus.chips()];
+        payloads[5] = 8e6; // one heavy chip breaks the row symmetry
+        assert!(!payload_uniform(&payloads));
+        let g = torus2d_gradsum_makespan_guarded(torus, &payloads, &p);
+        assert!(!g.fastpath);
+        assert_eq!(g.seconds, torus2d_gradsum_event_makespan(torus, &payloads, &p));
+        // The heavy chip can only slow the schedule down.
+        let uniform = torus2d_gradsum_makespan(torus, 1e6, &p);
+        assert!(g.seconds >= uniform - 1e-12, "{} vs uniform {uniform}", g.seconds);
+    }
+
+    #[test]
+    fn payload_uniformity_is_bit_exact() {
+        assert!(payload_uniform(&[]));
+        assert!(payload_uniform(&[3.0]));
+        assert!(payload_uniform(&[3.0, 3.0, 3.0]));
+        assert!(!payload_uniform(&[3.0, 3.0 + 1e-12]));
     }
 }

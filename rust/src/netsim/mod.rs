@@ -8,6 +8,9 @@ pub mod sim;
 pub mod torus;
 
 pub use cost::{ArAlgo, CostModel, GradSumModel, NetParams};
-pub use fastpath::{ring_step_makespan, torus2d_gradsum_makespan};
+pub use fastpath::{
+    payload_uniform, ring_step_makespan, torus2d_gradsum_event_makespan,
+    torus2d_gradsum_makespan, torus2d_gradsum_makespan_guarded, GuardedMakespan,
+};
 pub use sim::{Message, NetSim};
 pub use torus::{Coord, Dir, Link, Torus};

@@ -86,7 +86,9 @@ pub fn reference_point(s: &ScalingScenario, m: &ModelProfile, chips: usize) -> S
         (r.participating_cores / 2).max(1),
         s.gradsum.is_2d(),
     );
-    assemble_record(s, m, chips, &r, imbalance, makespan)
+    let mut rec = assemble_record(s, m, chips, &r, imbalance, makespan);
+    super::faults::apply_fault_trace(s, m, &r, &mut rec);
+    rec
 }
 
 /// Time the grid through the reference and the memoized serial/parallel

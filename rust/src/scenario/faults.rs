@@ -1,0 +1,573 @@
+//! Failure/straggler traces as a first-class scenario axis.
+//!
+//! Production pods are not healthy: chips die, get preempted, or straggle.
+//! A [`FaultTrace`] is a seeded, serializable schedule of such events; the
+//! same trace drives both consumers:
+//!
+//! * the **simulator** ([`price_fault_trace`]): replays the events against
+//!   a completed [`SimResult`], repricing the remaining steps over the
+//!   degraded layout after each death (the torus shrinks to the next
+//!   power of two, exactly the live trainer's elastic policy) and charging
+//!   rolled-back steps plus checkpoint-restore time;
+//! * the **live trainer** (`coordinator::trainer`): slowdown events mark
+//!   straggled steps, death/preemption events kill the incarnation, and
+//!   the coordinator restores from the last checkpoint on fewer cores.
+//!
+//! The headline metric is **goodput** — useful train time over wall-clock
+//! train time (ML Productivity Goodput, arxiv 2502.06982) — surfaced per
+//! [`SweepRecord`](super::SweepRecord) by `sweep --faults TRACE`. An empty
+//! trace is priced as exactly 1.0 and leaves every record byte-identical
+//! (the axis is strictly additive; pinned by `tests/fault_tolerance.rs`).
+//!
+//! `chip` indexes a failure domain: a chip in the simulator, a worker
+//! rank in the live trainer.
+
+use crate::models::registry::{Layout, ModelProfile};
+use crate::simulator::{simulate, SimResult};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+
+use super::runner::SweepRecord;
+use super::ScalingScenario;
+
+const FORMAT: &str = "tpu-pod-train-faults-v1";
+
+/// What happens to a chip at a given step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The chip runs `factor`x slower for `steps` consecutive steps; the
+    /// synchronous SPMD step is gated on the slowest participant, so the
+    /// whole pod pays the factor.
+    Slowdown { factor: f64, steps: u64 },
+    /// The chip dies permanently; the run restores from the last
+    /// checkpoint on the next power-of-two-smaller slice.
+    Death,
+    /// The slice is preempted for `down_seconds`, then resumes from the
+    /// last checkpoint on the same cores.
+    Preemption { down_seconds: f64 },
+}
+
+/// One scheduled fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// 1-based global training step at which the fault hits.
+    pub step: u64,
+    pub chip: usize,
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("step", Json::from(self.step as usize)),
+            ("chip", Json::from(self.chip)),
+        ];
+        match self.kind {
+            FaultKind::Slowdown { factor, steps } => {
+                pairs.push(("kind", Json::from("slowdown")));
+                pairs.push(("factor", Json::Num(factor)));
+                pairs.push(("steps", Json::from(steps as usize)));
+            }
+            FaultKind::Death => pairs.push(("kind", Json::from("death"))),
+            FaultKind::Preemption { down_seconds } => {
+                pairs.push(("kind", Json::from("preemption")));
+                pairs.push(("down_seconds", Json::Num(down_seconds)));
+            }
+        }
+        obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> Result<FaultEvent, String> {
+        let step = j
+            .get("step")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| "fault event missing step".to_string())? as u64;
+        let chip = j
+            .get("chip")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| "fault event missing chip".to_string())?;
+        let kind = match j.get("kind").and_then(Json::as_str) {
+            Some("slowdown") => FaultKind::Slowdown {
+                factor: j.get("factor").and_then(Json::as_f64).unwrap_or(1.0),
+                steps: j.get("steps").and_then(Json::as_usize).unwrap_or(1) as u64,
+            },
+            Some("death") => FaultKind::Death,
+            Some("preemption") => FaultKind::Preemption {
+                down_seconds: j.get("down_seconds").and_then(Json::as_f64).unwrap_or(0.0),
+            },
+            other => return Err(format!("unknown fault kind {other:?}")),
+        };
+        Ok(FaultEvent { step, chip, kind })
+    }
+}
+
+/// A seeded, serializable schedule of per-step chip faults, plus the
+/// recovery parameters the consumers need to price them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultTrace {
+    pub name: String,
+    /// Simulator-side checkpoint cadence (steps between durable
+    /// checkpoints; 0 = only the initial state is durable). The live
+    /// trainer uses its own `--checkpoint-every` instead.
+    pub ckpt_every_steps: u64,
+    /// Wall-clock cost of one checkpoint restore.
+    pub restore_seconds: f64,
+    /// Must be sorted by `step` (nondecreasing).
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultTrace {
+    pub fn empty(name: impl Into<String>) -> FaultTrace {
+        FaultTrace {
+            name: name.into(),
+            ckpt_every_steps: 0,
+            restore_seconds: 0.0,
+            events: Vec::new(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Generate a seeded random trace: independent per-step Bernoulli
+    /// draws for each fault class. Deterministic given (seed, steps,
+    /// chips, rates).
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate(
+        name: &str,
+        seed: u64,
+        steps: u64,
+        chips: usize,
+        ckpt_every_steps: u64,
+        restore_seconds: f64,
+        slowdown_per_step: f64,
+        death_per_step: f64,
+        preempt_per_step: f64,
+    ) -> FaultTrace {
+        let chips = chips.max(1) as u64;
+        let mut rng = Rng::new(seed).fold_in(0xFA17);
+        let mut events = Vec::new();
+        for step in 1..=steps {
+            if rng.uniform() < slowdown_per_step {
+                events.push(FaultEvent {
+                    step,
+                    chip: rng.below(chips) as usize,
+                    kind: FaultKind::Slowdown {
+                        factor: 1.5 + 2.5 * rng.uniform(),
+                        steps: 1 + rng.below(20),
+                    },
+                });
+            }
+            if rng.uniform() < death_per_step {
+                events.push(FaultEvent {
+                    step,
+                    chip: rng.below(chips) as usize,
+                    kind: FaultKind::Death,
+                });
+            }
+            if rng.uniform() < preempt_per_step {
+                events.push(FaultEvent {
+                    step,
+                    chip: rng.below(chips) as usize,
+                    kind: FaultKind::Preemption { down_seconds: 10.0 + 50.0 * rng.uniform() },
+                });
+            }
+        }
+        FaultTrace {
+            name: name.to_string(),
+            ckpt_every_steps,
+            restore_seconds,
+            events,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.restore_seconds.is_finite() || self.restore_seconds < 0.0 {
+            return Err(format!(
+                "trace {:?}: restore_seconds {} must be finite and >= 0",
+                self.name, self.restore_seconds
+            ));
+        }
+        let mut prev = 0u64;
+        for ev in &self.events {
+            if ev.step == 0 {
+                return Err(format!("trace {:?}: fault steps are 1-based", self.name));
+            }
+            if ev.step < prev {
+                return Err(format!("trace {:?}: events not sorted by step", self.name));
+            }
+            prev = ev.step;
+            match ev.kind {
+                FaultKind::Slowdown { factor, steps } => {
+                    if !factor.is_finite() || factor < 1.0 {
+                        return Err(format!(
+                            "trace {:?}: slowdown factor {factor} must be >= 1",
+                            self.name
+                        ));
+                    }
+                    if steps == 0 {
+                        return Err(format!(
+                            "trace {:?}: slowdown duration must be >= 1 step",
+                            self.name
+                        ));
+                    }
+                }
+                FaultKind::Preemption { down_seconds } => {
+                    if !down_seconds.is_finite() || down_seconds < 0.0 {
+                        return Err(format!(
+                            "trace {:?}: down_seconds {down_seconds} must be finite and >= 0",
+                            self.name
+                        ));
+                    }
+                }
+                FaultKind::Death => {}
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("format", Json::Str(FORMAT.into())),
+            ("name", Json::Str(self.name.clone())),
+            ("ckpt_every_steps", Json::from(self.ckpt_every_steps as usize)),
+            ("restore_seconds", Json::Num(self.restore_seconds)),
+            ("events", Json::Arr(self.events.iter().map(FaultEvent::to_json).collect())),
+        ])
+    }
+
+    pub fn dump(&self) -> String {
+        self.to_json().dump()
+    }
+
+    pub fn parse(text: &str) -> Result<FaultTrace, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        if j.get("format").and_then(Json::as_str) != Some(FORMAT) {
+            return Err("not a fault trace (bad format tag)".to_string());
+        }
+        let events: Result<Vec<FaultEvent>, String> = j
+            .get("events")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .map(FaultEvent::from_json)
+            .collect();
+        let trace = FaultTrace {
+            name: j.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            ckpt_every_steps: j.get("ckpt_every_steps").and_then(Json::as_usize).unwrap_or(0)
+                as u64,
+            restore_seconds: j.get("restore_seconds").and_then(Json::as_f64).unwrap_or(0.0),
+            events: events?,
+        };
+        trace.validate()?;
+        Ok(trace)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<FaultTrace, String> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        FaultTrace::parse(&text)
+    }
+
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.dump())
+    }
+}
+
+/// Fault pricing of one sweep point.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultOutcome {
+    /// Useful train time / wall-clock train time; exactly 1.0 when no
+    /// event applied.
+    pub goodput: f64,
+    /// Events that actually applied to this point (in-range step, live
+    /// chip).
+    pub fault_events: usize,
+    /// Steps of work rolled back to the last durable checkpoint.
+    pub lost_steps: f64,
+    /// Total checkpoint-restore wall clock paid.
+    pub restore_seconds: f64,
+    /// Participating cores of the final (possibly degraded) layout.
+    pub final_cores: usize,
+    /// Wall-clock seconds of the faulted train loop (replaces
+    /// `steps * step_seconds` in benchmark seconds).
+    pub train_seconds: f64,
+}
+
+/// Replay a fault trace against a completed simulation.
+///
+/// Walks the events over the step timeline, keeping a resume frontier at
+/// the last durable checkpoint (`ckpt_every_steps` cadence; 0 = only the
+/// initial state). Slowdowns stretch the overlapped steps (synchronous
+/// SPMD: the pod runs at the straggler's pace). Death rolls back to the
+/// frontier, pays a restore, and reprices the remaining steps over the
+/// next power-of-two-smaller slice — mp capped to the surviving cores,
+/// replicas refilled up to the global batch, the same elastic re-layout
+/// the live trainer performs. Preemption rolls back, pays the downtime
+/// plus a restore, and continues on the same cores.
+pub fn price_fault_trace(
+    s: &ScalingScenario,
+    m: &ModelProfile,
+    base: &SimResult,
+    trace: &FaultTrace,
+) -> FaultOutcome {
+    let identity = FaultOutcome {
+        goodput: 1.0,
+        fault_events: 0,
+        lost_steps: 0.0,
+        restore_seconds: 0.0,
+        final_cores: base.participating_cores,
+        train_seconds: base.steps * base.step_seconds,
+    };
+    let total_u = base.steps.ceil() as u64;
+    if !base.converged || trace.is_empty() || total_u == 0 {
+        return identity;
+    }
+
+    let every = trace.ckpt_every_steps;
+    let mut pos: u64 = 0; // resume frontier: last durable step
+    let mut wall = 0.0f64;
+    let mut wall_extra = 0.0f64; // straggler stretch, added at the end
+    let mut lost = 0.0f64;
+    let mut restore_total = 0.0f64;
+    let mut cur_step_seconds = base.step_seconds;
+    let mut cur_cores = base.cores;
+    let mut cur_participating = base.participating_cores;
+    let mut applied = 0usize;
+
+    for ev in &trace.events {
+        if ev.step < 1 || ev.step > total_u || ev.chip * 2 >= cur_cores {
+            continue;
+        }
+        match ev.kind {
+            FaultKind::Slowdown { factor, steps } => {
+                let lo = ev.step.max(pos + 1);
+                let hi = ev.step.saturating_add(steps - 1).min(total_u);
+                if hi >= lo {
+                    wall_extra += (factor - 1.0) * (hi - lo + 1) as f64 * cur_step_seconds;
+                    applied += 1;
+                }
+            }
+            FaultKind::Death | FaultKind::Preemption { .. } => {
+                if ev.step <= pos {
+                    continue; // already behind the frontier after a rollback
+                }
+                applied += 1;
+                let reached = ev.step - 1;
+                wall += (reached - pos) as f64 * cur_step_seconds;
+                let ckpt = if every == 0 { 0 } else { (reached / every) * every };
+                lost += (reached - ckpt) as f64;
+                wall += trace.restore_seconds;
+                restore_total += trace.restore_seconds;
+                if let FaultKind::Preemption { down_seconds } = ev.kind {
+                    wall += down_seconds;
+                } else if cur_cores > 2 {
+                    // Elastic re-layout on the next power-of-two slice.
+                    cur_cores /= 2;
+                    let mp = base.layout.mp.min(cur_cores).max(1);
+                    let replicas = (cur_cores / mp).min(base.layout.global_batch).max(1);
+                    let mut opts = s.sim_options(cur_cores);
+                    opts.layout_override = Some(Layout {
+                        cores: cur_cores,
+                        mp,
+                        replicas,
+                        global_batch: base.layout.global_batch,
+                    });
+                    let degraded = simulate(m, cur_cores, &opts);
+                    cur_step_seconds = degraded.step_seconds;
+                    cur_participating = degraded.participating_cores;
+                }
+                pos = ckpt;
+            }
+        }
+    }
+    if applied == 0 {
+        return identity;
+    }
+    wall += (total_u - pos) as f64 * cur_step_seconds + wall_extra;
+    FaultOutcome {
+        goodput: (base.steps * base.step_seconds) / wall,
+        fault_events: applied,
+        lost_steps: lost,
+        restore_seconds: restore_total,
+        final_cores: cur_participating,
+        train_seconds: wall,
+    }
+}
+
+/// Patch a sweep record with the fault pricing of its scenario's trace.
+///
+/// Strictly additive: when the scenario carries no trace, the trace is
+/// empty, or no event applies to this point, the record is left
+/// untouched — bit for bit — so fault-free sweeps stay byte-identical to
+/// pre-fault-axis reports.
+pub(super) fn apply_fault_trace(
+    s: &ScalingScenario,
+    m: &ModelProfile,
+    r: &SimResult,
+    rec: &mut SweepRecord,
+) {
+    let Some(trace) = &s.faults else { return };
+    if trace.is_empty() {
+        return;
+    }
+    let out = price_fault_trace(s, m, r, trace);
+    if out.fault_events == 0 {
+        return;
+    }
+    rec.goodput = out.goodput;
+    rec.fault_events = out.fault_events;
+    rec.lost_steps = out.lost_steps;
+    rec.restore_seconds = out.restore_seconds;
+    rec.final_cores = out.final_cores;
+    if r.converged {
+        rec.benchmark_seconds = out.train_seconds + r.eval_seconds + r.infra_seconds;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn death_at(step: u64, chip: usize) -> FaultEvent {
+        FaultEvent { step, chip, kind: FaultKind::Death }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let trace = FaultTrace {
+            name: "mixed".into(),
+            ckpt_every_steps: 100,
+            restore_seconds: 30.0,
+            events: vec![
+                FaultEvent {
+                    step: 5,
+                    chip: 3,
+                    kind: FaultKind::Slowdown { factor: 2.5, steps: 4 },
+                },
+                death_at(40, 1),
+                FaultEvent {
+                    step: 90,
+                    chip: 0,
+                    kind: FaultKind::Preemption { down_seconds: 12.5 },
+                },
+            ],
+        };
+        let back = FaultTrace::parse(&trace.dump()).unwrap();
+        assert_eq!(back, trace);
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_valid() {
+        let a = FaultTrace::generate("t", 7, 2000, 64, 100, 30.0, 0.01, 0.002, 0.001);
+        let b = FaultTrace::generate("t", 7, 2000, 64, 100, 30.0, 0.01, 0.002, 0.001);
+        assert_eq!(a, b);
+        a.validate().unwrap();
+        assert!(!a.is_empty(), "rates above should yield events over 2000 steps");
+        let c = FaultTrace::generate("t", 8, 2000, 64, 100, 30.0, 0.01, 0.002, 0.001);
+        assert_ne!(a, c, "different seed, different trace");
+    }
+
+    #[test]
+    fn validate_rejects_bad_traces() {
+        let mut t = FaultTrace::empty("bad");
+        t.events = vec![death_at(0, 0)];
+        assert!(t.validate().is_err(), "0-based step");
+        t.events = vec![death_at(9, 0), death_at(3, 0)];
+        assert!(t.validate().is_err(), "unsorted");
+        t.events = vec![FaultEvent {
+            step: 1,
+            chip: 0,
+            kind: FaultKind::Slowdown { factor: 0.5, steps: 1 },
+        }];
+        assert!(t.validate().is_err(), "speedup factor");
+        t.events = Vec::new();
+        t.restore_seconds = -1.0;
+        assert!(t.validate().is_err(), "negative restore");
+    }
+
+    #[test]
+    fn empty_trace_prices_identity() {
+        let s = ScalingScenario::submission("resnet50", vec![1024]);
+        let m = s.profile().unwrap();
+        let r = simulate(&m, 2048, &s.sim_options(2048));
+        let out = price_fault_trace(&s, &m, &r, &FaultTrace::empty("none"));
+        assert_eq!(out.goodput, 1.0);
+        assert_eq!(out.fault_events, 0);
+        assert_eq!(out.lost_steps, 0.0);
+        assert_eq!(out.final_cores, r.participating_cores);
+    }
+
+    #[test]
+    fn death_rolls_back_and_degrades_layout() {
+        let s = ScalingScenario::submission("resnet50", vec![1024]);
+        let m = s.profile().unwrap();
+        let r = simulate(&m, 2048, &s.sim_options(2048));
+        assert!(r.converged);
+        let trace = FaultTrace {
+            name: "one-death".into(),
+            ckpt_every_steps: 100,
+            restore_seconds: 30.0,
+            events: vec![death_at(250, 5)],
+        };
+        let out = price_fault_trace(&s, &m, &r, &trace);
+        assert_eq!(out.fault_events, 1);
+        // Died entering step 250: 249 done, last checkpoint at 200.
+        assert_eq!(out.lost_steps, 49.0);
+        assert_eq!(out.restore_seconds, 30.0);
+        assert!(out.goodput < 1.0, "goodput {}", out.goodput);
+        assert!(
+            out.final_cores < r.participating_cores,
+            "death must shrink the layout: {} vs {}",
+            out.final_cores,
+            r.participating_cores
+        );
+        assert!(out.train_seconds > r.steps * r.step_seconds);
+    }
+
+    #[test]
+    fn slowdown_stretches_but_keeps_layout() {
+        let s = ScalingScenario::submission("transformer", vec![512]);
+        let m = s.profile().unwrap();
+        let r = simulate(&m, 1024, &s.sim_options(1024));
+        assert!(r.converged);
+        let trace = FaultTrace {
+            name: "straggler".into(),
+            ckpt_every_steps: 0,
+            restore_seconds: 0.0,
+            events: vec![FaultEvent {
+                step: 10,
+                chip: 2,
+                kind: FaultKind::Slowdown { factor: 3.0, steps: 5 },
+            }],
+        };
+        let out = price_fault_trace(&s, &m, &r, &trace);
+        assert_eq!(out.fault_events, 1);
+        assert_eq!(out.lost_steps, 0.0);
+        assert_eq!(out.final_cores, r.participating_cores);
+        let expect = r.steps * r.step_seconds
+            + (3.0 - 1.0) * 5.0 * r.step_seconds
+            + (r.steps.ceil() - r.steps) * r.step_seconds;
+        assert!((out.train_seconds - expect).abs() < 1e-9 * expect.max(1.0));
+        assert!(out.goodput < 1.0);
+    }
+
+    #[test]
+    fn out_of_range_events_do_not_apply() {
+        let s = ScalingScenario::submission("resnet50", vec![16]);
+        let m = s.profile().unwrap();
+        let r = simulate(&m, 32, &s.sim_options(32));
+        let trace = FaultTrace {
+            name: "inapplicable".into(),
+            ckpt_every_steps: 10,
+            restore_seconds: 5.0,
+            // Chip 9999 is outside a 16-chip slice; step beyond the run.
+            events: vec![death_at(1, 9999), death_at(u64::MAX / 2, 0)],
+        };
+        let out = price_fault_trace(&s, &m, &r, &trace);
+        assert_eq!(out.fault_events, 0);
+        assert_eq!(out.goodput, 1.0);
+    }
+}

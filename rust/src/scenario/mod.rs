@@ -24,6 +24,11 @@
 //!   engine every perf PR uses to prove its win.
 //! * [`run_sweep_bench`] — the tier-1 perf harness behind
 //!   `BENCH_sweep.json` (ablation grid, reference vs memoized engines).
+//! * [`FaultTrace`] — the failure/straggler axis (`sweep --faults TRACE`):
+//!   seeded per-step chip slowdown/death/preemption events, priced into
+//!   per-record **goodput** (useful train time / wall clock, counting
+//!   rolled-back work and checkpoint restores) by [`price_fault_trace`];
+//!   the same trace drives the live trainer's elastic restarts.
 //!
 //! How sweeps map to the paper:
 //!
@@ -38,11 +43,13 @@
 //!   override with per-variant epochs-to-converge.
 
 pub mod bench;
+pub mod faults;
 pub mod grid;
 pub mod presets;
 pub mod runner;
 
 pub use bench::{reference_point, run_sweep_bench, SweepBench};
+pub use faults::{price_fault_trace, FaultEvent, FaultKind, FaultOutcome, FaultTrace};
 pub use grid::{AblationGrid, OptimizerAxis};
 pub use presets::{
     fig7_scenarios, fig8_scenarios, fig9_scenarios, model_parallel_speedup, paper_chip_slices,
@@ -128,6 +135,9 @@ pub struct ScalingScenario {
     pub weight_update_sharding: bool,
     pub distributed_eval: bool,
     pub spatial_partitioning: bool,
+    /// Optional failure/straggler schedule. `None` and an empty trace are
+    /// both priced as goodput 1.0 and leave records byte-identical.
+    pub faults: Option<FaultTrace>,
 }
 
 impl ScalingScenario {
@@ -144,6 +154,7 @@ impl ScalingScenario {
             weight_update_sharding: true,
             distributed_eval: true,
             spatial_partitioning: true,
+            faults: None,
         }
     }
 
@@ -154,6 +165,11 @@ impl ScalingScenario {
 
     pub fn with_batch(mut self, batch: BatchSchedule) -> ScalingScenario {
         self.batch = batch;
+        self
+    }
+
+    pub fn with_faults(mut self, faults: FaultTrace) -> ScalingScenario {
+        self.faults = Some(faults);
         self
     }
 
@@ -181,6 +197,9 @@ impl ScalingScenario {
             if b == 0 {
                 return Err(format!("scenario {:?}: fixed global batch must be > 0", self.name));
             }
+        }
+        if let Some(trace) = &self.faults {
+            trace.validate()?;
         }
         Ok(m)
     }

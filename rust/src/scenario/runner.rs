@@ -72,6 +72,18 @@ pub struct SweepRecord {
     /// event-driven link simulator (see [`gradsum_contention_makespan`]),
     /// over the participating torus.
     pub collective_makespan_seconds: f64,
+    /// Useful train time / wall-clock train time under the scenario's
+    /// fault trace (exactly 1.0 when no fault applied; see
+    /// [`super::price_fault_trace`]).
+    pub goodput: f64,
+    /// Fault events that applied to this point.
+    pub fault_events: usize,
+    /// Steps of work rolled back to the last durable checkpoint.
+    pub lost_steps: f64,
+    /// Total checkpoint-restore wall clock paid.
+    pub restore_seconds: f64,
+    /// Participating cores of the final (possibly fault-degraded) layout.
+    pub final_cores: usize,
 }
 
 impl SweepRecord {
@@ -113,6 +125,11 @@ impl SweepRecord {
             ("shard_imbalance", num(self.shard_imbalance)),
             ("spatial_speedup", num(self.spatial_speedup)),
             ("collective_makespan_seconds", num(self.collective_makespan_seconds)),
+            ("goodput", num(self.goodput)),
+            ("fault_events", Json::from(self.fault_events)),
+            ("lost_steps", num(self.lost_steps)),
+            ("restore_seconds", num(self.restore_seconds)),
+            ("final_cores", Json::from(self.final_cores)),
         ])
     }
 
@@ -162,6 +179,24 @@ impl SweepRecord {
             shard_imbalance: num("shard_imbalance"),
             spatial_speedup: num("spatial_speedup"),
             collective_makespan_seconds: num("collective_makespan_seconds"),
+            // Older baselines predate the fault axis: read as fault-free.
+            goodput: match j.get("goodput") {
+                Some(Json::Num(x)) => *x,
+                Some(Json::Null) => f64::INFINITY,
+                _ => 1.0,
+            },
+            fault_events: int("fault_events"),
+            lost_steps: match j.get("lost_steps") {
+                Some(Json::Num(x)) => *x,
+                Some(Json::Null) => f64::INFINITY,
+                _ => 0.0,
+            },
+            restore_seconds: match j.get("restore_seconds") {
+                Some(Json::Num(x)) => *x,
+                Some(Json::Null) => f64::INFINITY,
+                _ => 0.0,
+            },
+            final_cores: int("final_cores"),
         })
     }
 }
@@ -440,7 +475,9 @@ fn sweep_point_ctx(
         (r.participating_cores / 2).max(1),
         s.gradsum.is_2d(),
     );
-    assemble_record(s, m, chips, &r, imbalance, makespan)
+    let mut rec = assemble_record(s, m, chips, &r, imbalance, makespan);
+    super::faults::apply_fault_trace(s, m, &r, &mut rec);
+    rec
 }
 
 /// The single construction site for the record schema: assemble one
@@ -482,6 +519,11 @@ pub(super) fn assemble_record(
         shard_imbalance,
         spatial_speedup: r.spatial_speedup,
         collective_makespan_seconds,
+        goodput: 1.0,
+        fault_events: 0,
+        lost_steps: 0.0,
+        restore_seconds: 0.0,
+        final_cores: r.participating_cores,
     }
 }
 

@@ -16,8 +16,9 @@ use tpu_pod_train::evaluation::EvalSharding;
 use tpu_pod_train::fabric::run_spmd;
 use tpu_pod_train::models::{all_models, Layout};
 use tpu_pod_train::netsim::{
-    ring_step_makespan, torus2d_gradsum_makespan, ArAlgo, CostModel, Dir, Message, NetParams,
-    NetSim, Torus,
+    payload_uniform, ring_step_makespan, torus2d_gradsum_event_makespan,
+    torus2d_gradsum_makespan, torus2d_gradsum_makespan_guarded, ArAlgo, CostModel, Dir, Message,
+    NetParams, NetSim, Torus,
 };
 use tpu_pod_train::scenario::gradsum_contention_makespan;
 use tpu_pod_train::simulator::{simulate, SimOptions};
@@ -530,6 +531,42 @@ fn fastpath_matches_full_event_simulation_on_pod_tori() {
                 "{chips} chips, {mbytes} MB: fast {fast} vs full event-driven {full}"
             );
         }
+    }
+}
+
+/// The fast path is exact ONLY under uniform payloads; the guarded entry
+/// point must (a) take the fast path when every chip carries bit-equal
+/// bytes, agreeing with the whole-torus event engine to 1e-9, and
+/// (b) fall back to the event engine — exactly — the moment one chip's
+/// payload differs (a straggler or degraded chip breaks row symmetry,
+/// which no single representative ring can express).
+#[test]
+fn guarded_fastpath_falls_back_on_non_uniform_schedules() {
+    let p = NetParams::default();
+    for chips in [16usize, 64] {
+        let torus = Torus::for_chips(chips);
+        let uniform = vec![4e6; torus.chips()];
+        assert!(payload_uniform(&uniform));
+        let g = torus2d_gradsum_makespan_guarded(torus, &uniform, &p);
+        assert!(g.fastpath, "{chips} chips: uniform payloads must take the fast path");
+        let event = torus2d_gradsum_event_makespan(torus, &uniform, &p);
+        assert!(
+            (g.seconds - event).abs() <= 1e-9 * event.max(1.0),
+            "{chips} chips uniform: guarded {} vs event {event}",
+            g.seconds
+        );
+
+        let mut skewed = uniform.clone();
+        skewed[torus.chips() / 2] *= 3.0; // one heavy chip
+        assert!(!payload_uniform(&skewed));
+        let g = torus2d_gradsum_makespan_guarded(torus, &skewed, &p);
+        assert!(!g.fastpath, "{chips} chips: a skewed schedule must use the event engine");
+        assert_eq!(g.seconds, torus2d_gradsum_event_makespan(torus, &skewed, &p));
+        assert!(
+            g.seconds >= event - 1e-12,
+            "{chips} chips: the heavy chip can only slow the schedule ({} vs {event})",
+            g.seconds
+        );
     }
 }
 
