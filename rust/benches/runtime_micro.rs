@@ -1,15 +1,69 @@
-//! PJRT runtime microbenchmarks: per-execute latency of the AOT artifacts
-//! (the L3 hot path's compute calls). PJRT-backend only: requires
-//! `artifacts/` (`python python/compile/aot.py`) and the real `xla`
-//! binding (see rust/src/runtime/xla.rs).
+//! Runtime microbenchmarks.
+//!
+//! Primary: the reference-backend executor matrix — every proxy family's
+//! full `train_step` through the naive (pre-tiling baseline), tiled, and
+//! tiled+threaded configurations. The three are cross-checked bit-for-bit
+//! before timing (`scenario::run_backend_bench`), a table of step times
+//! and speedups is printed, and the record is written to
+//! `BENCH_backend.json` at the repo root (the CI artifact; absolute
+//! numbers are machine-dependent and deliberately not gated).
+//!
+//! Secondary, when `artifacts/` exists (`python python/compile/aot.py` +
+//! the real `xla` binding): per-execute latency of the PJRT AOT kernels.
 
-use tpu_pod_train::benchkit::Bench;
+use tpu_pod_train::benchkit::{fmt_time, Bench, Table};
+use tpu_pod_train::models::proxy::PROXY_FAMILIES;
 use tpu_pod_train::runtime::{HostTensor, Runtime};
+use tpu_pod_train::scenario::run_backend_bench;
 use tpu_pod_train::util::rng::Rng;
 
 fn main() {
-    let rt = Runtime::with_dir("artifacts")
-        .expect("PJRT backend required: build artifacts/ with python/compile/aot.py");
+    backend_matrix();
+    pjrt_kernels();
+}
+
+/// Naive vs tiled vs threaded `train_step` over all proxy families.
+fn backend_matrix() {
+    let families: Vec<&str> = PROXY_FAMILIES.iter().map(|d| d.family).collect();
+    let bench = run_backend_bench(&families, 30, 0)
+        .expect("backend matrix failed the bit-identity cross-check");
+
+    let mut table = Table::new(
+        &format!("reference backend train_step ({} executor threads)", bench.threads),
+        &["family", "batch", "naive", "tiled", "threaded", "tiled x", "threaded x"],
+    );
+    for c in &bench.cases {
+        table.row(&[
+            c.family.clone(),
+            c.batch.to_string(),
+            fmt_time(c.naive_step_s),
+            fmt_time(c.tiled_step_s),
+            fmt_time(c.threaded_step_s),
+            format!("{:.2}", c.speedup_tiled()),
+            format!("{:.2}", c.speedup_threaded()),
+        ]);
+    }
+    table.print();
+    println!(
+        "\ngeomean threaded speedup vs naive: {:.2}x (max {:.2}x)",
+        bench.geomean_speedup_threaded(),
+        bench.max_speedup_threaded()
+    );
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_backend.json");
+    bench.write(path).expect("writing BENCH_backend.json");
+    println!("wrote {path}");
+}
+
+/// PJRT AOT-kernel latencies; skipped when no artifacts are compiled.
+fn pjrt_kernels() {
+    let rt = match Runtime::with_dir("artifacts") {
+        Ok(rt) => rt,
+        Err(_) => {
+            println!("\n(artifacts/ missing — skipping PJRT kernel benches)");
+            return;
+        }
+    };
     let mut rng = Rng::new(0);
     let mut bench = Bench::default();
 
@@ -39,14 +93,15 @@ fn main() {
         .map(|sp| HostTensor::new(sp.shape.clone(), rng.normal_vec(sp.numel(), 0.05)))
         .collect();
     let tokens: Vec<i32> = (0..8 * 64).map(|i| (i % 256) as i32).collect();
-    let mut inputs: Vec<&HostTensor> = params.iter().collect();
-    let _ = &mut inputs;
     bench.run("transformer_train_tiny execute (fwd+bwd)", || {
         let refs: Vec<&HostTensor> = params.iter().collect();
         std::hint::black_box(
             rt.execute("transformer_train_tiny", &refs, &[&tokens, &tokens]).unwrap(),
         );
     });
-    println!("\ncumulative PJRT time: {:.2}s over {} executions",
-             rt.execute_seconds.borrow(), rt.executions.borrow());
+    println!(
+        "\ncumulative PJRT time: {:.2}s over {} executions",
+        rt.execute_seconds.borrow(),
+        rt.executions.borrow()
+    );
 }

@@ -1,0 +1,489 @@
+//! Live-trainer calibration of the pod simulator (`sweep --live`).
+//!
+//! The simulator prices compute through `costs::ComputePhase` — a roofline
+//! [`crate::devicesim::Device`] coefficient set nobody has checked against
+//! an executor this repo can actually run. This module closes that loop on
+//! the reference backend: it runs a micro-grid of live training points
+//! (each registry family × a per-core batch ladder) on
+//! [`crate::coordinator::train`], records the measured per-phase
+//! wall-clock (fwd/bwd exec, gradsum, update) next to the simulator's
+//! per-phase attribution for the same per-replica batch, and then checks
+//! that the *trends* agree:
+//!
+//! * **Batch scaling** — the simulator's compute attribution grows
+//!   monotonically (and at most linearly) with per-replica batch; the
+//!   live executor's fwd+bwd seconds must do the same, within a relative
+//!   tolerance. A flat or superlinear live curve means the executor and
+//!   the cost model no longer describe the same machine.
+//! * **Cross-family ordering** — the proxy dims are sized so per-step
+//!   compute load follows the registry's Table-1 ordering
+//!   ([`ProxyDims::flops_per_step`], pinned statically in
+//!   `models::proxy`); the measured live step times must reproduce that
+//!   ordering within tolerance.
+//!
+//! Absolute seconds are *not* gated — a laptop is not a TPU core. What the
+//! grid fits instead is the compute coefficient a live-calibrated
+//! `StepCostModel` would use: each family's achieved FLOP/s on the live
+//! executor, the median across families (`fitted_gflops`), and the
+//! per-family live→simulated scale factor (`live_to_sim_alpha`).
+//!
+//! `tpu-pod-train sweep --live` prints the JSON report and exits nonzero
+//! when any trend check fails — the CI gate that keeps the simulator's
+//! shape honest as the kernels underneath it change.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{train, TrainConfig};
+use crate::models::proxy::{proxy_dims, ProxyDims};
+use crate::models::registry::{model, Layout};
+use crate::simulator::{simulate, SimOptions};
+use crate::util::json::{obj, Json};
+
+/// The micro-grid specification.
+#[derive(Clone, Debug)]
+pub struct LiveGridOptions {
+    /// Registry families to calibrate (default: all five).
+    pub models: Vec<String>,
+    /// Data-parallel worker threads per live point (power of two).
+    pub cores: usize,
+    /// Training steps per live point (timed; no eval, no checkpoints).
+    pub steps: usize,
+    /// `--exec-threads` of the live backend (1 = serial kernels).
+    pub exec_threads: usize,
+    /// Per-core batch ladder as multipliers of each family's default.
+    pub batch_mults: Vec<usize>,
+    /// Relative slack for every trend comparison (0.35 = 35%).
+    pub tolerance: f64,
+    pub seed: u64,
+}
+
+impl Default for LiveGridOptions {
+    fn default() -> LiveGridOptions {
+        LiveGridOptions {
+            models: ["resnet50", "ssd", "maskrcnn", "transformer", "gnmt"]
+                .map(String::from)
+                .to_vec(),
+            cores: 2,
+            steps: 12,
+            exec_threads: 1,
+            batch_mults: vec![1, 2, 4],
+            tolerance: 0.35,
+            seed: 0,
+        }
+    }
+}
+
+/// One grid point: live measurements next to the simulator's attribution
+/// for the same per-replica batch.
+#[derive(Clone, Debug)]
+pub struct LivePoint {
+    pub family: String,
+    pub batch_per_core: usize,
+    /// Measured fwd+bwd executor seconds per step (rank 0; the minimum of
+    /// two runs, so a one-off scheduler stall cannot fake a trend).
+    pub live_step_s: f64,
+    pub live_fwd_s: f64,
+    pub live_bwd_s: f64,
+    /// Measured gradient-summation / weight-update wall-clock per step.
+    pub live_gradsum_s: f64,
+    pub live_update_s: f64,
+    /// Simulator per-step attribution at `per_replica_batch ==
+    /// batch_per_core` (layout override, pure data parallel).
+    pub sim_compute_s: f64,
+    pub sim_gradsum_s: f64,
+    pub sim_update_s: f64,
+    pub sim_step_s: f64,
+}
+
+impl LivePoint {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("family", Json::from(self.family.as_str())),
+            ("batch_per_core", Json::from(self.batch_per_core)),
+            ("live_step_seconds", Json::from(self.live_step_s)),
+            ("live_fwd_seconds", Json::from(self.live_fwd_s)),
+            ("live_bwd_seconds", Json::from(self.live_bwd_s)),
+            ("live_gradsum_seconds", Json::from(self.live_gradsum_s)),
+            ("live_update_seconds", Json::from(self.live_update_s)),
+            ("sim_compute_seconds", Json::from(self.sim_compute_s)),
+            ("sim_gradsum_seconds", Json::from(self.sim_gradsum_s)),
+            ("sim_update_seconds", Json::from(self.sim_update_s)),
+            ("sim_step_seconds", Json::from(self.sim_step_s)),
+        ])
+    }
+}
+
+/// One family's fitted compute coefficients (base-batch point).
+#[derive(Clone, Debug)]
+pub struct FamilyFit {
+    pub family: String,
+    pub live_s_per_example: f64,
+    /// Proxy forward FLOPs per example ([`ProxyDims::flops_per_example`]).
+    pub flops_per_example: f64,
+    /// Achieved forward-FLOP/s of the live executor (forward load over
+    /// full fwd+bwd seconds — the convention `ComputePhase` uses with its
+    /// 3x forward-FLOPs factor folded into the coefficient).
+    pub implied_gflops: f64,
+    /// sim_compute / live_exec at the base point: the scale factor between
+    /// the proxy on this host and the modeled TPU-v3 core.
+    pub live_to_sim_alpha: f64,
+}
+
+impl FamilyFit {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("family", Json::from(self.family.as_str())),
+            ("live_seconds_per_example", Json::from(self.live_s_per_example)),
+            ("proxy_fwd_flops_per_example", Json::from(self.flops_per_example)),
+            ("implied_gflops", Json::from(self.implied_gflops)),
+            ("live_to_sim_alpha", Json::from(self.live_to_sim_alpha)),
+        ])
+    }
+}
+
+/// The full calibration record (`sweep --live` output).
+#[derive(Clone, Debug)]
+pub struct CalibrationReport {
+    pub cores: usize,
+    pub steps: usize,
+    pub exec_threads: usize,
+    pub tolerance: f64,
+    pub points: Vec<LivePoint>,
+    pub fits: Vec<FamilyFit>,
+    /// Median achieved GFLOP/s across families — the fitted compute
+    /// coefficient for a live-backed `StepCostModel`.
+    pub fitted_gflops: f64,
+    /// Human-readable trend-check failures (empty = live and simulated
+    /// attributions agree).
+    pub disagreements: Vec<String>,
+}
+
+impl CalibrationReport {
+    pub fn agrees(&self) -> bool {
+        self.disagreements.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("report", Json::from("live_calibration")),
+            ("cores", Json::from(self.cores)),
+            ("steps", Json::from(self.steps)),
+            ("exec_threads", Json::from(self.exec_threads)),
+            ("tolerance", Json::from(self.tolerance)),
+            ("points", Json::Arr(self.points.iter().map(LivePoint::to_json).collect())),
+            ("fits", Json::Arr(self.fits.iter().map(FamilyFit::to_json).collect())),
+            ("fitted_gflops", Json::from(self.fitted_gflops)),
+            (
+                "disagreements",
+                Json::Arr(self.disagreements.iter().map(|s| Json::from(s.as_str())).collect()),
+            ),
+            ("agrees", Json::Bool(self.agrees())),
+        ])
+    }
+
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().dump())
+    }
+}
+
+/// Run one live point and return mean per-step `(exec, fwd, bwd, gradsum,
+/// update)` seconds on rank 0.
+fn live_point(
+    opts: &LiveGridOptions,
+    family: &str,
+    batch: usize,
+) -> Result<(f64, f64, f64, f64, f64)> {
+    let mut cfg = TrainConfig::quick(family, opts.cores, opts.steps);
+    cfg.batch_override = Some(batch);
+    cfg.eval_every = 0;
+    cfg.exec_threads = opts.exec_threads;
+    cfg.seed = opts.seed;
+    let rep = train(&cfg)?;
+    let n = rep.breakdown.steps.max(1) as f64;
+    Ok((
+        rep.exec_s / n,
+        rep.fwd_s / n,
+        rep.bwd_s / n,
+        rep.breakdown.gradsum_s / n,
+        rep.breakdown.update_s / n,
+    ))
+}
+
+/// Simulate the same per-replica batch on the modeled pod (pure data
+/// parallel so the compute attribution is the plain roofline).
+fn sim_point(family: &str, cores: usize, batch: usize) -> Result<(f64, f64, f64, f64)> {
+    let profile =
+        model(family).ok_or_else(|| anyhow!("no registry profile for family {family:?}"))?;
+    let layout =
+        Layout { cores, mp: 1, replicas: cores, global_batch: cores * batch };
+    let options = SimOptions { layout_override: Some(layout), ..Default::default() };
+    let r = simulate(&profile, cores, &options);
+    Ok((r.compute_seconds, r.gradsum_seconds, r.update_seconds, r.step_seconds))
+}
+
+/// The trend checks, pure over the collected points (unit-testable with
+/// fabricated data). `base_order` is the expected fastest-to-slowest
+/// family order at the base batch (proxy per-step compute load).
+pub fn trend_disagreements(
+    points: &[LivePoint],
+    base_order: &[(String, usize)],
+    tolerance: f64,
+) -> Vec<String> {
+    let tol = tolerance.max(0.0);
+    let mut out = Vec::new();
+
+    // Batch scaling per family: both live exec and sim compute must be
+    // monotone nondecreasing and at-most-linear in per-core batch.
+    for (family, _) in base_order {
+        let ladder: Vec<&LivePoint> =
+            points.iter().filter(|p| &p.family == family).collect();
+        for w in ladder.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            let growth = b.batch_per_core as f64 / a.batch_per_core as f64;
+            for (side, ta, tb) in [
+                ("live exec", a.live_step_s, b.live_step_s),
+                ("sim compute", a.sim_compute_s, b.sim_compute_s),
+            ] {
+                if tb < ta * (1.0 - tol) {
+                    out.push(format!(
+                        "{family}: {side} fell {ta:.3e}s -> {tb:.3e}s when per-core batch \
+                         grew {} -> {} (expected monotone within {:.0}%)",
+                        a.batch_per_core,
+                        b.batch_per_core,
+                        tol * 100.0
+                    ));
+                }
+                if tb > ta * growth * (1.0 + tol) {
+                    out.push(format!(
+                        "{family}: {side} grew superlinearly {ta:.3e}s -> {tb:.3e}s over a \
+                         {growth}x batch increase (tolerance {:.0}%)",
+                        tol * 100.0
+                    ));
+                }
+            }
+        }
+    }
+
+    // Cross-family ordering at the base batch: live step times must
+    // follow the proxy compute-load ordering (the Table-1 stand-in).
+    let base: Vec<(&str, f64)> = base_order
+        .iter()
+        .filter_map(|(family, batch)| {
+            points
+                .iter()
+                .find(|p| &p.family == family && p.batch_per_core == *batch)
+                .map(|p| (family.as_str(), p.live_step_s))
+        })
+        .collect();
+    for w in base.windows(2) {
+        let ((fast, ta), (slow, tb)) = (w[0], w[1]);
+        if ta > tb * (1.0 + tol) {
+            out.push(format!(
+                "ordering: {fast} measured {ta:.3e}s/step but {slow} only {tb:.3e}s/step — \
+                 live ratios do not follow the proxy compute ordering (tolerance {:.0}%)",
+                tol * 100.0
+            ));
+        }
+    }
+    out
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+    xs[xs.len() / 2]
+}
+
+/// Run the live micro-grid and assemble the calibration report.
+pub fn run_live_calibration(opts: &LiveGridOptions) -> Result<CalibrationReport> {
+    if opts.models.is_empty() {
+        return Err(anyhow!("live calibration needs at least one model family"));
+    }
+    if opts.batch_mults.is_empty()
+        || opts.batch_mults[0] == 0
+        || opts.batch_mults.windows(2).any(|w| w[1] <= w[0])
+    {
+        return Err(anyhow!("batch multipliers must be nonempty, positive, strictly increasing"));
+    }
+
+    // Families ordered by proxy per-step compute load (the expected live
+    // step-time ordering), paired with their base per-core batch.
+    let mut dims: Vec<(String, ProxyDims)> = Vec::new();
+    for name in &opts.models {
+        let d = proxy_dims(name)
+            .ok_or_else(|| anyhow!("no reference proxy for family {name:?}"))?;
+        dims.push((name.clone(), d));
+    }
+    dims.sort_by(|a, b| {
+        a.1.flops_per_step().partial_cmp(&b.1.flops_per_step()).expect("finite flops")
+    });
+    let base_order: Vec<(String, usize)> =
+        dims.iter().map(|(n, d)| (n.clone(), d.batch_per_core)).collect();
+
+    let mut points = Vec::new();
+    let mut fits = Vec::new();
+    for (name, d) in &dims {
+        for &mult in &opts.batch_mults {
+            let batch = d.batch_per_core * mult;
+            // Two runs, keep the faster: a one-off host stall in either
+            // run cannot manufacture a trend violation.
+            let a = live_point(opts, name, batch)?;
+            let b = live_point(opts, name, batch)?;
+            let live = if a.0 <= b.0 { a } else { b };
+            let (sim_compute, sim_gradsum, sim_update, sim_step) =
+                sim_point(name, opts.cores, batch)?;
+            points.push(LivePoint {
+                family: name.clone(),
+                batch_per_core: batch,
+                live_step_s: live.0,
+                live_fwd_s: live.1,
+                live_bwd_s: live.2,
+                live_gradsum_s: live.3,
+                live_update_s: live.4,
+                sim_compute_s: sim_compute,
+                sim_gradsum_s: sim_gradsum,
+                sim_update_s: sim_update,
+                sim_step_s: sim_step,
+            });
+        }
+        let base = points
+            .iter()
+            .find(|p| &p.family == name && p.batch_per_core == d.batch_per_core)
+            .expect("base point just pushed");
+        let per_example = base.live_step_s / d.batch_per_core as f64;
+        fits.push(FamilyFit {
+            family: name.clone(),
+            live_s_per_example: per_example,
+            flops_per_example: d.flops_per_example(),
+            implied_gflops: d.flops_per_example() / per_example.max(1e-12) / 1e9,
+            live_to_sim_alpha: base.sim_compute_s / base.live_step_s.max(1e-12),
+        });
+    }
+
+    let fitted_gflops = median(fits.iter().map(|f| f.implied_gflops).collect());
+    let disagreements = trend_disagreements(&points, &base_order, opts.tolerance);
+    Ok(CalibrationReport {
+        cores: opts.cores,
+        steps: opts.steps,
+        exec_threads: opts.exec_threads,
+        tolerance: opts.tolerance,
+        points,
+        fits,
+        fitted_gflops,
+        disagreements,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(family: &str, batch: usize, live: f64, sim: f64) -> LivePoint {
+        LivePoint {
+            family: family.to_string(),
+            batch_per_core: batch,
+            live_step_s: live,
+            live_fwd_s: live * 0.4,
+            live_bwd_s: live * 0.6,
+            live_gradsum_s: 1e-5,
+            live_update_s: 1e-5,
+            sim_compute_s: sim,
+            sim_gradsum_s: 1e-4,
+            sim_update_s: 1e-4,
+            sim_step_s: sim + 2e-4,
+        }
+    }
+
+    fn order() -> Vec<(String, usize)> {
+        vec![("resnet50".to_string(), 8), ("maskrcnn".to_string(), 8)]
+    }
+
+    #[test]
+    fn agreeing_trends_produce_no_disagreements() {
+        let points = vec![
+            point("resnet50", 8, 1e-4, 1e-2),
+            point("resnet50", 16, 1.9e-4, 1.7e-2),
+            point("maskrcnn", 8, 9e-4, 1.3),
+            point("maskrcnn", 16, 1.8e-3, 2.4),
+        ];
+        assert_eq!(trend_disagreements(&points, &order(), 0.35), Vec::<String>::new());
+    }
+
+    #[test]
+    fn falling_live_time_is_a_disagreement() {
+        let points = vec![
+            point("resnet50", 8, 2e-4, 1e-2),
+            point("resnet50", 16, 0.5e-4, 1.7e-2), // live fell 4x on 2x batch
+        ];
+        let d = trend_disagreements(&points, &order()[..1].to_vec(), 0.35);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].contains("live exec fell"), "{}", d[0]);
+    }
+
+    #[test]
+    fn superlinear_growth_is_a_disagreement() {
+        let points = vec![
+            point("resnet50", 8, 1e-4, 1e-2),
+            point("resnet50", 16, 9e-4, 1.7e-2), // 9x live time on 2x batch
+        ];
+        let d = trend_disagreements(&points, &order()[..1].to_vec(), 0.35);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].contains("superlinearly"), "{}", d[0]);
+    }
+
+    #[test]
+    fn inverted_family_ordering_is_a_disagreement() {
+        let points = vec![
+            point("resnet50", 8, 5e-3, 1e-2), // "light" family measured slow
+            point("maskrcnn", 8, 1e-4, 1.3),
+        ];
+        let d = trend_disagreements(&points, &order(), 0.35);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].contains("ordering"), "{}", d[0]);
+    }
+
+    #[test]
+    fn bad_grid_options_rejected() {
+        let mut o = LiveGridOptions::default();
+        o.models.clear();
+        assert!(run_live_calibration(&o).is_err());
+        let mut o = LiveGridOptions { batch_mults: vec![2, 2], ..Default::default() };
+        assert!(run_live_calibration(&o).is_err());
+        o.batch_mults = vec![4, 1];
+        assert!(run_live_calibration(&o).is_err());
+    }
+
+    /// End-to-end on the two lightest families: the report is structurally
+    /// complete and round-trips through JSON. Agreement itself is gated in
+    /// CI (`sweep --live`), not here — unit-test machines are too noisy to
+    /// pin wall-clock trends.
+    #[test]
+    fn micro_grid_produces_a_complete_report() {
+        let opts = LiveGridOptions {
+            models: vec!["resnet50".to_string(), "gnmt".to_string()],
+            cores: 2,
+            steps: 3,
+            batch_mults: vec![1, 2],
+            ..Default::default()
+        };
+        let rep = run_live_calibration(&opts).unwrap();
+        assert_eq!(rep.points.len(), 4);
+        assert_eq!(rep.fits.len(), 2);
+        assert!(rep.fitted_gflops > 0.0);
+        for p in &rep.points {
+            assert!(p.live_step_s > 0.0, "{}: zero live step time", p.family);
+            assert!(p.sim_compute_s > 0.0);
+            assert!(
+                (p.live_fwd_s + p.live_bwd_s - p.live_step_s).abs() <= 1e-9 + p.live_step_s * 1e-6,
+                "{}: fwd+bwd must account for the exec time",
+                p.family
+            );
+        }
+        let j = Json::parse(&rep.to_json().dump()).unwrap();
+        assert_eq!(j.get("report").and_then(Json::as_str), Some("live_calibration"));
+        assert_eq!(j.get("points").and_then(Json::as_arr).map(|a| a.len()), Some(4));
+        assert!(j.get("agrees").and_then(Json::as_bool).is_some());
+    }
+}

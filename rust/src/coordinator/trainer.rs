@@ -35,8 +35,8 @@ use crate::optim::{
     adam_step, lars_step, sgd_momentum_step, AdamConfig, AdamState, LarsConfig, LarsState,
 };
 use crate::runtime::{
-    param_specs_for, Backend, BackendChoice, Manifest, ParamSpec, PjRtBackend, Precision,
-    ReferenceBackend, StepBatch,
+    param_specs_for, Backend, BackendChoice, KernelMode, Manifest, ParamSpec, PjRtBackend,
+    Precision, ReferenceBackend, StepBatch,
 };
 use crate::scenario::{FaultEvent, FaultKind, FaultTrace};
 use crate::util::rng::{Rng, RngState};
@@ -104,6 +104,11 @@ pub struct TrainConfig {
     /// Rank 0 aborts the whole process (exit code 3) right after
     /// completing this step — the CI crash-resume smoke. 0 = never.
     pub kill_at: usize,
+    /// Intra-core executor threads for the reference backend's tiled
+    /// kernels (1 = serial; 0 = host parallelism). Output is bit-identical
+    /// for every value — the split is over disjoint output rows, never a
+    /// cross-thread reduction. PJRT ignores this.
+    pub exec_threads: usize,
 }
 
 impl TrainConfig {
@@ -146,6 +151,7 @@ impl TrainConfig {
             resume: None,
             faults: None,
             kill_at: 0,
+            exec_threads: 1,
         }
     }
 }
@@ -171,6 +177,11 @@ pub struct TrainReport {
     pub params_total: usize,
     /// Cumulative backend execute seconds (PJRT or reference fwd/bwd).
     pub exec_s: f64,
+    /// Forward share of `exec_s` (reference backend times fwd and bwd
+    /// separately inside the pass; PJRT reports everything as forward).
+    pub fwd_s: f64,
+    /// Backward share of `exec_s`.
+    pub bwd_s: f64,
     /// Final parameter tensors (for resume bit-identity checks).
     pub final_params: Vec<Vec<f32>>,
     /// Step the run resumed from (0 = fresh start).
@@ -262,7 +273,12 @@ fn make_backend(ctx: &RunCtx) -> Result<Box<dyn Backend>> {
                 BackendChoice::ReferenceBf16 => Precision::Bf16,
                 _ => Precision::F32,
             };
-            Ok(Box::new(ReferenceBackend::with_dims(*dims, precision)))
+            Ok(Box::new(ReferenceBackend::with_options(
+                *dims,
+                precision,
+                KernelMode::Tiled,
+                ctx.cfg.exec_threads,
+            )))
         }
         BackendCtx::PjRt(p) => {
             Ok(Box::new(PjRtBackend::new(&p.manifest_dir, &p.train_art, &p.eval_art)?))
@@ -564,6 +580,8 @@ fn merge_incarnation(report: &mut TrainReport, inc: TrainReport) {
     report.wallclock_s += inc.wallclock_s;
     report.init_s += inc.init_s;
     report.exec_s += inc.exec_s;
+    report.fwd_s += inc.fwd_s;
+    report.bwd_s += inc.bwd_s;
     report.params_total = inc.params_total;
     if report.converged_at.is_none() {
         report.converged_at = inc.converged_at;
@@ -946,6 +964,9 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
     }
     report.wallclock_s = wall.secs();
     report.exec_s = backend.execute_seconds();
+    let (fwd, bwd) = backend.phase_seconds();
+    report.fwd_s = fwd;
+    report.bwd_s = bwd;
     report.final_params = params;
     Ok(report)
 }

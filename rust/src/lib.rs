@@ -12,7 +12,12 @@
 //! * Executors — the trainer drives a [`runtime::Backend`]: the in-Rust
 //!   reference fwd/bwd ([`runtime::reference`], exact analytic gradients
 //!   over the [`models::proxy`] dense proxies; no artifacts, tier-1) or
-//!   PJRT over the AOT artifacts ([`runtime::PjRtBackend`]).
+//!   PJRT over the AOT artifacts ([`runtime::PjRtBackend`]). The
+//!   reference executor runs blocked/tiled kernels
+//!   ([`runtime::kernels`]) with per-step workspace reuse and an
+//!   optional intra-core threaded split (`--exec-threads`), bit-identical
+//!   to the serial scalar baseline by construction; `BENCH_backend.json`
+//!   tracks the naive/tiled/threaded step-time matrix.
 //! * L2/L1 (python/, build-time only) — JAX model fwd/bwd + Pallas kernels,
 //!   AOT-lowered to `artifacts/*.hlo.txt` and executed via PJRT from
 //!   [`runtime`] when `--backend pjrt` is selected.
@@ -47,7 +52,13 @@
 //! a prior run (nonzero exit on regression); `BENCH_sweep.json` tracks
 //! the engine's own throughput; `rust/src/scenario/README.md` maps
 //! sweeps to the paper's figures and documents the attribution and grid
-//! naming schemas.
+//! naming schemas. `sweep --live` closes the loop between the two
+//! engines: the [`calibrate`] module runs a micro-grid of real training
+//! points on the live reference trainer, records measured per-phase
+//! wall-clock next to the simulator's attribution, gates on trend
+//! agreement (batch-scaling monotonicity, cross-family ordering; nonzero
+//! exit on disagreement) and fits the live compute coefficient a
+//! measured `StepCostModel` would use.
 //!
 //! The test matrix:
 //! * unit tests inside every module (the substrate contracts),
@@ -65,9 +76,18 @@
 //!   [`scenario::FaultTrace`] layer: kill-and-resume bit-identity for
 //!   every optimizer (replicated and WUS), elastic halving restarts on
 //!   chip death, and the sweep engine's goodput accounting (an empty
-//!   trace is a byte-level no-op).
+//!   trace is a byte-level no-op),
+//! * `rust/tests/exec_threads.rs` — the threaded executor's determinism
+//!   contract end to end: `--exec-threads N` bit-identical to serial for
+//!   every optimizer (replicated and WUS), seeded threaded runs
+//!   reproducible, executor time split into fwd/bwd,
+//! * `rust/tests/bench_backend.rs` + `rust/tests/bench_sweep.rs` — the
+//!   perf trajectory: regenerate `BENCH_backend.json` (naive/tiled/
+//!   threaded executor matrix, bit-identity cross-checked) and
+//!   `BENCH_sweep.json` on every `cargo test` run.
 
 pub mod benchkit;
+pub mod calibrate;
 pub mod checkpoint;
 pub mod collectives;
 pub mod config;

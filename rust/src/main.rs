@@ -8,7 +8,9 @@
 //! * `simulate` — TPU-v3 pod time-to-train simulation for one MLPerf model.
 //! * `sweep`    — scenario sweep engine: models × pod slices, JSON report
 //!                (the Figs. 7-10 / Table 1 experiment driver); `--grid`
-//!                runs the §2 ablation cross-product over `--jobs` workers.
+//!                runs the §2 ablation cross-product over `--jobs` workers;
+//!                `--live` calibrates the simulator against the live
+//!                reference trainer (nonzero exit on trend disagreement).
 //! * `submit`   — full simulated MLPerf-0.6 submission (all five models,
 //!                Fig. 9-style table).
 //! * `faults`   — generate a seeded fault/straggler trace for `train
@@ -16,6 +18,7 @@
 //! * `info`     — list artifacts, models and device constants.
 
 use tpu_pod_train::benchkit::Table;
+use tpu_pod_train::calibrate::{run_live_calibration, LiveGridOptions};
 use tpu_pod_train::config::Config;
 use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
 use tpu_pod_train::models::{all_models, model};
@@ -71,6 +74,11 @@ fn cmd_train(tokens: &[String]) -> i32 {
         .opt("resume", "", "checkpoint file to resume from")
         .opt("faults", "", "fault/straggler trace JSON (chip = worker rank)")
         .opt("kill-at", "0", "abort the process (exit 3) after this step (CI smoke; 0 = never)")
+        .opt(
+            "exec-threads",
+            "1",
+            "intra-core executor threads, reference backend (0 = all host threads)",
+        )
         .flag("wus", "shard the weight update across cores (paper §2)")
         .flag("serial-gradsum", "disable the pipelined gradient summation")
         .flag("check-improved", "exit 1 unless the final loss beats the seeded-start loss (CI)");
@@ -158,6 +166,7 @@ fn cmd_train(tokens: &[String]) -> i32 {
         resume: (!resume.is_empty()).then(|| std::path::PathBuf::from(&resume)),
         faults,
         kill_at: a.get_usize("kill-at", 0),
+        exec_threads: a.get_usize("exec-threads", 1),
     };
     println!(
         "training {} on {} cores, {} steps (backend={}, wus={}, gradsum={:?})",
@@ -171,8 +180,8 @@ fn cmd_train(tokens: &[String]) -> i32 {
     match train(&cfg) {
         Ok(rep) => {
             println!(
-                "init {:.1}s, train wall {:.1}s, exec {:.1}s, params {}",
-                rep.init_s, rep.wallclock_s, rep.exec_s, rep.params_total
+                "init {:.1}s, train wall {:.1}s, exec {:.1}s (fwd {:.1}s, bwd {:.1}s), params {}",
+                rep.init_s, rep.wallclock_s, rep.exec_s, rep.fwd_s, rep.bwd_s, rep.params_total
             );
             println!("{}", rep.breakdown.report());
             if rep.resumed_from > 0 {
@@ -302,6 +311,11 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
         .opt("compare", "", "baseline SweepReport JSON to diff against (exit 1 on regression)")
         .opt("tolerance", "0.02", "relative benchmark-seconds regression tolerance for --compare")
         .opt("faults", "", "fault trace JSON: reprice every point under failures, report goodput")
+        .opt("live-steps", "12", "training steps per live calibration point (--live)")
+        .opt("live-cores", "2", "data-parallel workers per live point, power of two (--live)")
+        .opt("live-threads", "1", "executor threads for --live (0 = all host threads)")
+        .opt("live-tolerance", "0.35", "relative slack for the --live trend checks")
+        .flag("live", "calibrate: run the grid on the live trainer; exit 1 on trend disagreement")
         .flag("grid", "run the §2 ablation grid (spatial/WUS x gradsum schedule x LARS/SGD)")
         .flag("serial-gradsum", "expose the non-contiguous gathers (no pipelining)")
         .flag("no-2d", "use the 1-D ring gradient-summation schedule")
@@ -316,6 +330,79 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
             return 2;
         }
     };
+    if a.flag("live") {
+        // Live calibration is a different engine (coordinator::train +
+        // simulator attribution, see `calibrate`); the sweep axes do not
+        // apply to it.
+        for f in ["grid", "serial-gradsum", "no-2d", "no-wus", "no-dist-eval", "no-spatial"] {
+            if a.flag(f) {
+                eprintln!("--{f} conflicts with --live (the live grid runs the reference trainer)");
+                return 2;
+            }
+        }
+        if !a.get_or("compare", "").is_empty() || !a.get_or("faults", "").is_empty() {
+            eprintln!("--compare/--faults conflict with --live");
+            return 2;
+        }
+        let defaults = LiveGridOptions::default();
+        let model_arg = a.get_or("model", "");
+        let models: Vec<String> = if model_arg.is_empty() || model_arg == "all" {
+            defaults.models.clone()
+        } else {
+            model_arg.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+        };
+        let opts = LiveGridOptions {
+            models,
+            cores: a.get_usize("live-cores", defaults.cores),
+            steps: a.get_usize("live-steps", defaults.steps),
+            exec_threads: a.get_usize("live-threads", defaults.exec_threads),
+            tolerance: a.get_f64("live-tolerance", defaults.tolerance),
+            ..defaults
+        };
+        if !opts.cores.is_power_of_two() {
+            eprintln!("--live-cores must be a power of two, got {}", opts.cores);
+            return 2;
+        }
+        if opts.steps == 0 {
+            eprintln!("--live-steps must be positive");
+            return 2;
+        }
+        eprintln!(
+            "live calibration: {} families x {:?} batch multipliers, {} cores, {} steps/point",
+            opts.models.len(),
+            opts.batch_mults,
+            opts.cores,
+            opts.steps
+        );
+        let rep = match run_live_calibration(&opts) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("live calibration error: {e:#}");
+                return 2;
+            }
+        };
+        println!("{}", rep.to_json().dump());
+        let out = a.get_or("out", "");
+        if !out.is_empty() {
+            if let Err(e) = rep.write(&out) {
+                eprintln!("writing {out}: {e}");
+                return 1;
+            }
+            eprintln!("report written to {out}");
+        }
+        if !rep.agrees() {
+            for d in &rep.disagreements {
+                eprintln!("trend disagreement: {d}");
+            }
+            return 1;
+        }
+        eprintln!(
+            "live/simulated trends agree within {:.0}% (fitted compute {:.2} GFLOP/s)",
+            100.0 * rep.tolerance,
+            rep.fitted_gflops
+        );
+        return 0;
+    }
     let grid_mode = a.flag("grid");
     let mut chips = Vec::new();
     for tok in a.get_or("chips", "").split(',') {

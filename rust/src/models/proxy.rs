@@ -59,16 +59,54 @@ impl ProxyDims {
             TaskKind::Image => self.classes,
         }
     }
+
+    /// Approximate forward FLOPs per *example* of the proxy (2 FLOPs per
+    /// MAC; the LM input layer is an embedding row lookup, not a matmul).
+    /// `sweep --live` fits measured seconds/example against this to get a
+    /// host GFLOP/s coefficient for `costs::StepCostModel` calibration.
+    pub fn flops_per_example(&self) -> f64 {
+        let h = self.hidden as f64;
+        let c = self.output_dim() as f64;
+        let per_unit = match self.kind {
+            TaskKind::Lm => h + h * h + h * c,
+            TaskKind::Image => self.input_dim() as f64 * h + h * h + h * c,
+        };
+        let units = match self.kind {
+            TaskKind::Lm => self.seq as f64,
+            TaskKind::Image => 1.0,
+        };
+        2.0 * per_unit * units
+    }
+
+    /// Forward FLOPs per default per-core step — the live-trainer analog
+    /// of a registry profile's per-step compute load.
+    pub fn flops_per_step(&self) -> f64 {
+        self.flops_per_example() * self.batch_per_core as f64
+    }
 }
 
 /// All proxy families (the five registry models plus the `cnn`/mini family
 /// the artifact pipeline uses for its trainable mini-models).
+///
+/// Widths are chosen so the *per-core step-time ratios* of the live
+/// trainer resemble the paper's Table 1 compute ordering (per-step FLOPs,
+/// see [`ProxyDims::flops_per_step`], resnet50 = 1.0):
+///
+/// ```text
+/// resnet50 1.0 < ssd ~1.8 < gnmt ~3.5 < transformer ~6.8 < maskrcnn ~10.6
+/// ```
+///
+/// — the same ordering as the registry's `fwd_flops_per_example`
+/// (3.9e9 < 7.5e9 < 1.1e10 < 1.4e10 < 1.5e12), with Mask-RCNN's spread
+/// deliberately compressed: at true scale it would dwarf every proxy and
+/// make live micro-grids unusable. `sweep --live` checks the *ordering*,
+/// not absolute ratios.
 pub const PROXY_FAMILIES: [ProxyDims; 6] = [
     ProxyDims {
         family: "transformer",
         kind: TaskKind::Lm,
-        hidden: 96,
-        batch_per_core: 8,
+        hidden: 160,
+        batch_per_core: 4,
         vocab: 64,
         seq: 16,
         image: 0,
@@ -77,9 +115,9 @@ pub const PROXY_FAMILIES: [ProxyDims; 6] = [
     ProxyDims {
         family: "gnmt",
         kind: TaskKind::Lm,
-        hidden: 64,
-        batch_per_core: 8,
-        vocab: 48,
+        hidden: 128,
+        batch_per_core: 4,
+        vocab: 64,
         seq: 12,
         image: 0,
         classes: 0,
@@ -87,7 +125,7 @@ pub const PROXY_FAMILIES: [ProxyDims; 6] = [
     ProxyDims {
         family: "resnet50",
         kind: TaskKind::Image,
-        hidden: 96,
+        hidden: 128,
         batch_per_core: 8,
         vocab: 0,
         seq: 0,
@@ -97,27 +135,27 @@ pub const PROXY_FAMILIES: [ProxyDims; 6] = [
     ProxyDims {
         family: "ssd",
         kind: TaskKind::Image,
-        hidden: 64,
+        hidden: 160,
         batch_per_core: 8,
         vocab: 0,
         seq: 0,
-        image: 8,
-        classes: 8,
+        image: 10,
+        classes: 16,
     },
     ProxyDims {
         family: "maskrcnn",
         kind: TaskKind::Image,
-        hidden: 80,
+        hidden: 384,
         batch_per_core: 8,
         vocab: 0,
         seq: 0,
-        image: 8,
-        classes: 8,
+        image: 16,
+        classes: 16,
     },
     ProxyDims {
         family: "cnn",
         kind: TaskKind::Image,
-        hidden: 96,
+        hidden: 128,
         batch_per_core: 8,
         vocab: 0,
         seq: 0,
@@ -169,5 +207,21 @@ mod tests {
         for img in ["resnet50", "ssd", "maskrcnn"] {
             assert_eq!(proxy_dims(img).unwrap().kind, TaskKind::Image);
         }
+    }
+
+    /// The widths must keep the registry's per-step compute ordering so
+    /// live step-time ratios resemble Table 1 (`sweep --live` gates on
+    /// this ordering at trainer level; this pins the static version).
+    #[test]
+    fn per_step_flops_follow_the_registry_ordering() {
+        let f = |m: &str| proxy_dims(m).unwrap().flops_per_step();
+        assert!(f("resnet50") < f("ssd"));
+        assert!(f("ssd") < f("gnmt"));
+        assert!(f("gnmt") < f("transformer"));
+        assert!(f("transformer") < f("maskrcnn"));
+        // Sensible spread: the heaviest proxy is 5-20x the lightest, so a
+        // live micro-grid finishes in CI time.
+        let ratio = f("maskrcnn") / f("resnet50");
+        assert!((5.0..20.0).contains(&ratio), "spread {ratio:.1}");
     }
 }

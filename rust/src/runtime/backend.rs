@@ -88,6 +88,14 @@ pub trait Backend {
     /// Cumulative executor seconds (perf accounting; PJRT execute time or
     /// reference fwd/bwd time).
     fn execute_seconds(&self) -> f64;
+
+    /// Executor seconds split `(forward, backward)` for phase-by-phase
+    /// comparison against the simulator's compute attribution. Backends
+    /// that cannot attribute (PJRT runs fwd+bwd as one executable) report
+    /// everything as forward.
+    fn phase_seconds(&self) -> (f64, f64) {
+        (self.execute_seconds(), 0.0)
+    }
 }
 
 /// [`Backend`] over the AOT artifacts: marshals params + batch into the

@@ -1,0 +1,331 @@
+//! Blocked/tiled f32 kernels for the reference executor.
+//!
+//! Every kernel here obeys one contract: **each output element is a sum
+//! over its reduction axis in ascending index order**, no matter how the
+//! loop nest is tiled and no matter which thread computes it. Tiling
+//! reorders the *traversal* (so a `TILE_K`-row block of the weight matrix
+//! or a `TILE_N`-row block of the activations stays cache-hot across the
+//! rows that reuse it) but never the per-element accumulation sequence —
+//! f32 addition is not associative, so that fixed order is what makes the
+//! executor bit-deterministic run-to-run, thread-count-invariant, and
+//! bit-identical to the pre-tiling scalar loops.
+//!
+//! The kernels operate on *row spans*: the caller hands each worker a
+//! contiguous block of output rows (units for activations, weight-matrix
+//! rows for gradients, column ranges for bias sums). Because no two spans
+//! overlap and every reduction runs over its full axis inside one kernel
+//! call, splitting work across `--exec-threads` needs no cross-thread
+//! reduction tree at all — the "tree" is degenerate by construction.
+//!
+//! Tile sizes are compile-time constants (they are part of the
+//! determinism contract only in that they must not depend on the thread
+//! count; the accumulation order is tile-size-invariant anyway). 64-row
+//! blocks keep a `64 x 512` f32 panel at 128 KiB — inside L2 on anything
+//! we run on, the same reasoning as the MXU-feeding 8x128 tiles on the
+//! real hardware.
+
+/// Reduction-axis block: rows of `w` (or units of `x`) revisited while a
+/// panel is cache-hot.
+pub const TILE_K: usize = 64;
+/// Unit-axis block for weight-gradient accumulation.
+pub const TILE_N: usize = 64;
+
+/// Contiguous span `t` of `n` items split across `threads` workers:
+/// the first `n % threads` spans get one extra item. Empty spans (when
+/// `n < threads`) are fine — the kernels no-op on them.
+pub fn span_of(t: usize, threads: usize, n: usize) -> (usize, usize) {
+    let base = n / threads;
+    let rem = n % threads;
+    let lo = t * base + t.min(rem);
+    let hi = lo + base + usize::from(t < rem);
+    (lo, hi.min(n))
+}
+
+/// All `threads` spans of `n` items, in order.
+pub fn spans(n: usize, threads: usize) -> Vec<(usize, usize)> {
+    let threads = threads.max(1);
+    (0..threads).map(|t| span_of(t, threads, n)).collect()
+}
+
+/// `out[r] = bias + x[r] · w` for `rows` rows: `out[r*jdim + j] =
+/// bias[j] + Σ_k x[r*kdim + k] · w[k*jdim + j]`, k ascending. Zero inputs
+/// skip their row of `w` (a relu-sparsity win; skipping an exact-zero
+/// contribution does not change the sum).
+pub fn matmul_bias_rows(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    kdim: usize,
+    jdim: usize,
+) {
+    debug_assert!(x.len() >= rows * kdim);
+    debug_assert_eq!(w.len(), kdim * jdim);
+    debug_assert_eq!(bias.len(), jdim);
+    debug_assert!(out.len() >= rows * jdim);
+    for r in 0..rows {
+        out[r * jdim..(r + 1) * jdim].copy_from_slice(bias);
+    }
+    let mut kb = 0;
+    while kb < kdim {
+        let kend = (kb + TILE_K).min(kdim);
+        for r in 0..rows {
+            let xrow = &x[r * kdim..(r + 1) * kdim];
+            let orow = &mut out[r * jdim..(r + 1) * jdim];
+            for k in kb..kend {
+                let xv = xrow[k];
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[k * jdim..(k + 1) * jdim];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        kb = kend;
+    }
+}
+
+/// `out[r] = dy[r] · wᵀ` for `rows` rows: `out[r*kdim + k] =
+/// Σ_j dy[r*jdim + j] · w[k*jdim + j]`, j ascending. The j-axis is
+/// blocked so the `dy` row segment and the `w` panel stay hot, but each
+/// output element accumulates straight through ascending j.
+pub fn matmul_wt_rows(
+    dy: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    jdim: usize,
+    kdim: usize,
+) {
+    debug_assert!(dy.len() >= rows * jdim);
+    debug_assert_eq!(w.len(), kdim * jdim);
+    debug_assert!(out.len() >= rows * kdim);
+    out[..rows * kdim].fill(0.0);
+    let mut jb = 0;
+    while jb < jdim {
+        let jend = (jb + TILE_K).min(jdim);
+        for r in 0..rows {
+            let dyrow = &dy[r * jdim..(r + 1) * jdim];
+            let orow = &mut out[r * kdim..(r + 1) * kdim];
+            for (k, o) in orow.iter_mut().enumerate() {
+                let wrow = &w[k * jdim..(k + 1) * jdim];
+                let mut acc = *o;
+                for j in jb..jend {
+                    acc += dyrow[j] * wrow[j];
+                }
+                *o = acc;
+            }
+        }
+        jb = jend;
+    }
+}
+
+/// Weight-gradient rows `k_lo..k_hi` of `gw = xᵀ · dy`:
+/// `gw[(k-k_lo)*jdim + j] += Σ_n x[n*kdim + k] · dy[n*jdim + j]`, n
+/// ascending (blocked by [`TILE_N`] so the `dy` panel is reused across
+/// the span's k rows). `gw` must cover exactly the span and start zeroed
+/// (or hold a prior partial — the kernel accumulates).
+#[allow(clippy::too_many_arguments)]
+pub fn grad_weights_rows(
+    x: &[f32],
+    dy: &[f32],
+    gw: &mut [f32],
+    k_lo: usize,
+    k_hi: usize,
+    kdim: usize,
+    jdim: usize,
+    n_units: usize,
+) {
+    debug_assert!(x.len() >= n_units * kdim);
+    debug_assert!(dy.len() >= n_units * jdim);
+    debug_assert!(gw.len() >= (k_hi - k_lo) * jdim);
+    let mut nb = 0;
+    while nb < n_units {
+        let nend = (nb + TILE_N).min(n_units);
+        for k in k_lo..k_hi {
+            let grow = &mut gw[(k - k_lo) * jdim..(k - k_lo + 1) * jdim];
+            for n in nb..nend {
+                let xv = x[n * kdim + k];
+                if xv == 0.0 {
+                    continue;
+                }
+                let dyrow = &dy[n * jdim..(n + 1) * jdim];
+                for (g, &dv) in grow.iter_mut().zip(dyrow) {
+                    *g += xv * dv;
+                }
+            }
+        }
+        nb = nend;
+    }
+}
+
+/// Column-range weighted sum `out[j-j_lo] += Σ_n dy[n*jdim + j] ·
+/// x[n*jdim + j]`, n ascending — the LayerNorm scale-gradient kernel
+/// (`dscale = Σ dn0 ⊙ xhat`), split by output columns across workers.
+pub fn colsum_mul_rows(
+    dy: &[f32],
+    x: &[f32],
+    out: &mut [f32],
+    j_lo: usize,
+    j_hi: usize,
+    jdim: usize,
+    n_units: usize,
+) {
+    debug_assert!(dy.len() >= n_units * jdim);
+    debug_assert!(x.len() >= n_units * jdim);
+    debug_assert!(out.len() >= j_hi - j_lo);
+    for n in 0..n_units {
+        let drow = &dy[n * jdim..(n + 1) * jdim];
+        let xrow = &x[n * jdim..(n + 1) * jdim];
+        for j in j_lo..j_hi {
+            out[j - j_lo] += drow[j] * xrow[j];
+        }
+    }
+}
+
+/// Column-range sum `out[j-j_lo] += Σ_n dy[n*jdim + j]`, n ascending —
+/// the bias-gradient kernel, split by output columns across workers.
+pub fn colsum_rows(
+    dy: &[f32],
+    out: &mut [f32],
+    j_lo: usize,
+    j_hi: usize,
+    jdim: usize,
+    n_units: usize,
+) {
+    debug_assert!(dy.len() >= n_units * jdim);
+    debug_assert!(out.len() >= j_hi - j_lo);
+    for n in 0..n_units {
+        let row = &dy[n * jdim..(n + 1) * jdim];
+        for j in j_lo..j_hi {
+            out[j - j_lo] += row[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_matmul_bias(
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        n: usize,
+        k: usize,
+        j: usize,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * j];
+        for r in 0..n {
+            out[r * j..(r + 1) * j].copy_from_slice(b);
+            for ki in 0..k {
+                let xv = x[r * k + ki];
+                if xv == 0.0 {
+                    continue;
+                }
+                for ji in 0..j {
+                    out[r * j + ji] += xv * w[ki * j + ji];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn spans_partition_exactly() {
+        for n in [0, 1, 5, 17, 64, 1000] {
+            for t in [1, 2, 3, 7, 16] {
+                let sp = spans(n, t);
+                assert_eq!(sp.len(), t);
+                assert_eq!(sp[0].0, 0);
+                assert_eq!(sp[t - 1].1, n);
+                for w in sp.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "spans must tile {n} over {t}");
+                }
+            }
+        }
+    }
+
+    /// The crux of the determinism contract: tiled accumulation order is
+    /// per-element ascending, i.e. bit-identical to the plain scalar loop
+    /// — not merely close.
+    #[test]
+    fn tiled_matmul_bitwise_matches_naive_order() {
+        let (n, k, j) = (13, TILE_K + 9, 37); // force multiple k-blocks
+        let mut rng = Rng::new(7);
+        let mut x = rng.normal_vec(n * k, 1.0);
+        for v in x.iter_mut().step_by(3) {
+            *v = 0.0; // exercise the sparsity skip
+        }
+        let w = rng.normal_vec(k * j, 0.5);
+        let b = rng.normal_vec(j, 0.1);
+        let expected = naive_matmul_bias(&x, &w, &b, n, k, j);
+        let mut out = vec![0.0f32; n * j];
+        matmul_bias_rows(&x, &w, &b, &mut out, n, k, j);
+        assert_eq!(out, expected, "tiled kernel must keep ascending-k accumulation");
+    }
+
+    #[test]
+    fn wt_kernel_matches_naive_dot() {
+        let (n, jdim, kdim) = (9, TILE_K + 5, 31);
+        let mut rng = Rng::new(8);
+        let dy = rng.normal_vec(n * jdim, 1.0);
+        let w = rng.normal_vec(kdim * jdim, 0.5);
+        let mut expected = vec![0.0f32; n * kdim];
+        for r in 0..n {
+            for k in 0..kdim {
+                let mut acc = 0.0f32;
+                for j in 0..jdim {
+                    acc += dy[r * jdim + j] * w[k * jdim + j];
+                }
+                expected[r * kdim + k] = acc;
+            }
+        }
+        let mut out = vec![1.0f32; n * kdim]; // kernel must overwrite, not accumulate into garbage
+        matmul_wt_rows(&dy, &w, &mut out, n, jdim, kdim);
+        assert_eq!(out, expected);
+    }
+
+    #[test]
+    fn grad_kernel_span_split_is_exact() {
+        let (n, kdim, jdim) = (TILE_N + 11, 23, 17);
+        let mut rng = Rng::new(9);
+        let mut x = rng.normal_vec(n * kdim, 1.0);
+        for v in x.iter_mut().step_by(5) {
+            *v = 0.0;
+        }
+        let dy = rng.normal_vec(n * jdim, 1.0);
+        // Whole-matrix reference: units ascending per element.
+        let mut full = vec![0.0f32; kdim * jdim];
+        grad_weights_rows(&x, &dy, &mut full, 0, kdim, kdim, jdim, n);
+        // Span-split (as --exec-threads does): must reassemble bitwise.
+        for threads in [2, 3, 5] {
+            let mut pieced = vec![0.0f32; kdim * jdim];
+            for (lo, hi) in spans(kdim, threads) {
+                let span = &mut pieced[lo * jdim..hi * jdim];
+                grad_weights_rows(&x, &dy, span, lo, hi, kdim, jdim, n);
+            }
+            assert_eq!(pieced, full, "row-span split must be bit-exact at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn colsum_span_split_is_exact() {
+        let (n, jdim) = (40, 29);
+        let mut rng = Rng::new(10);
+        let dy = rng.normal_vec(n * jdim, 1.0);
+        let mut full = vec![0.0f32; jdim];
+        colsum_rows(&dy, &mut full, 0, jdim, jdim, n);
+        for threads in [2, 4, 31] {
+            let mut pieced = vec![0.0f32; jdim];
+            for (lo, hi) in spans(jdim, threads) {
+                colsum_rows(&dy, &mut pieced[lo..hi], lo, hi, jdim, n);
+            }
+            assert_eq!(pieced, full);
+        }
+    }
+}

@@ -25,6 +25,7 @@
 
 pub mod artifact;
 pub mod backend;
+pub mod kernels;
 pub mod reference;
 mod xla;
 
@@ -36,7 +37,7 @@ use anyhow::{bail, Context, Result};
 
 pub use artifact::{ArtifactMeta, Dtype, IoSpec, Manifest, ParamSpec};
 pub use backend::{Backend, BackendChoice, PjRtBackend, StepBatch};
-pub use reference::{param_specs_for, Precision, ReferenceBackend};
+pub use reference::{param_specs_for, KernelMode, Precision, ReferenceBackend};
 
 /// A host-side tensor (f32) with shape — the currency between the
 /// coordinator (collectives, optimizers) and the PJRT boundary.

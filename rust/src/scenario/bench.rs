@@ -1,19 +1,34 @@
-//! Tier-1-runnable sweep perf harness (`BENCH_sweep.json`).
+//! Tier-1-runnable perf harnesses (`BENCH_sweep.json`, `BENCH_backend.json`).
 //!
-//! Times the §2 ablation grid three ways — the pre-memoization serial
-//! reference (fresh gradient census and full event-driven contention
-//! simulation per point), the memoized engine on one worker, and the
-//! memoized engine on the full worker pool — and cross-checks that all
-//! three produce byte-identical reports before reporting wall-clock and
-//! points/sec. `tests/bench_sweep.rs` runs it under plain `cargo test`
-//! (no artifacts needed) and writes `BENCH_sweep.json` at the workspace
-//! root so the perf trajectory is tracked per commit; the `sweep_grid`
-//! bench binary prints the same numbers as a table.
+//! [`run_sweep_bench`] times the §2 ablation grid three ways — the
+//! pre-memoization serial reference (fresh gradient census and full
+//! event-driven contention simulation per point), the memoized engine on
+//! one worker, and the memoized engine on the full worker pool — and
+//! cross-checks that all three produce byte-identical reports before
+//! reporting wall-clock and points/sec. `tests/bench_sweep.rs` runs it
+//! under plain `cargo test` (no artifacts needed) and writes
+//! `BENCH_sweep.json` at the workspace root so the perf trajectory is
+//! tracked per commit; the `sweep_grid` bench binary prints the same
+//! numbers as a table.
+//!
+//! [`run_backend_bench`] is the same pattern for the reference executor:
+//! it times `train_step` per proxy family through the naive scalar
+//! kernels, the tiled serial kernels and the tiled kernels at N executor
+//! threads — cross-checking that all three produce bit-identical losses
+//! and gradients first — and records steps/sec plus speedup-vs-naive in
+//! `BENCH_backend.json` (`tests/bench_backend.rs`; the `runtime_micro`
+//! bench binary prints the matrix as a table).
 
 use crate::costs::shard_imbalance;
+use crate::data::synthetic::{ImageTask, LmTask};
+use crate::models::proxy::{proxy_dims, TaskKind};
 use crate::models::registry::ModelProfile;
+use crate::runtime::{
+    param_specs_for, Backend, KernelMode, Precision, ReferenceBackend, StepBatch,
+};
 use crate::simulator::simulate;
 use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
 use super::grid::AblationGrid;
@@ -134,6 +149,171 @@ pub fn run_sweep_bench(grid: &AblationGrid, jobs: usize) -> Result<SweepBench, S
     })
 }
 
+/// One proxy family's `train_step` timings through the three executor
+/// configurations (same params, same batch, bit-identical outputs).
+#[derive(Clone, Debug)]
+pub struct BackendCase {
+    pub family: String,
+    /// Per-core batch the step was timed at (the family default).
+    pub batch: usize,
+    /// Executor threads of the threaded configuration.
+    pub threads: usize,
+    pub naive_step_s: f64,
+    pub tiled_step_s: f64,
+    pub threaded_step_s: f64,
+}
+
+impl BackendCase {
+    pub fn speedup_tiled(&self) -> f64 {
+        self.naive_step_s / self.tiled_step_s.max(1e-12)
+    }
+
+    pub fn speedup_threaded(&self) -> f64 {
+        self.naive_step_s / self.threaded_step_s.max(1e-12)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("family", Json::from(self.family.as_str())),
+            ("batch_per_core", Json::from(self.batch)),
+            ("threads", Json::from(self.threads)),
+            ("naive_step_seconds", Json::from(self.naive_step_s)),
+            ("tiled_step_seconds", Json::from(self.tiled_step_s)),
+            ("threaded_step_seconds", Json::from(self.threaded_step_s)),
+            ("naive_steps_per_sec", Json::from(1.0 / self.naive_step_s.max(1e-12))),
+            ("tiled_steps_per_sec", Json::from(1.0 / self.tiled_step_s.max(1e-12))),
+            ("threaded_steps_per_sec", Json::from(1.0 / self.threaded_step_s.max(1e-12))),
+            ("speedup_tiled_vs_naive", Json::from(self.speedup_tiled())),
+            ("speedup_threaded_vs_naive", Json::from(self.speedup_threaded())),
+        ])
+    }
+}
+
+/// The full naive / tiled / threaded matrix (`BENCH_backend.json`).
+#[derive(Clone, Debug)]
+pub struct BackendBench {
+    /// Resolved executor thread count of the threaded column.
+    pub threads: usize,
+    /// Timed steps per configuration (after one warmup step).
+    pub steps: usize,
+    pub cases: Vec<BackendCase>,
+}
+
+impl BackendBench {
+    /// Geometric-mean threaded speedup across families (the headline).
+    pub fn geomean_speedup_threaded(&self) -> f64 {
+        if self.cases.is_empty() {
+            return 1.0;
+        }
+        let log_sum: f64 = self.cases.iter().map(|c| c.speedup_threaded().ln()).sum();
+        (log_sum / self.cases.len() as f64).exp()
+    }
+
+    pub fn max_speedup_threaded(&self) -> f64 {
+        self.cases.iter().map(BackendCase::speedup_threaded).fold(0.0, f64::max)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("bench", Json::from("backend_matrix")),
+            ("threads", Json::from(self.threads)),
+            ("steps_timed", Json::from(self.steps)),
+            ("cases", Json::Arr(self.cases.iter().map(BackendCase::to_json).collect())),
+            ("geomean_speedup_threaded", Json::from(self.geomean_speedup_threaded())),
+            ("max_speedup_threaded", Json::from(self.max_speedup_threaded())),
+        ])
+    }
+
+    /// Write the record (`BENCH_backend.json`).
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().dump())
+    }
+}
+
+/// Seeded params + one batch for a proxy family (shared by all three
+/// executor configurations so outputs are comparable bit-for-bit).
+fn bench_inputs(family: &str) -> Result<(Vec<Vec<f32>>, StepBatch, usize), String> {
+    let dims = proxy_dims(family).ok_or_else(|| format!("unknown proxy family {family:?}"))?;
+    let mut rng = Rng::new(0xB0B).fold_in(family.len() as u64);
+    let params: Vec<Vec<f32>> =
+        param_specs_for(&dims).iter().map(|s| rng.normal_vec(s.numel(), 0.05)).collect();
+    let batch = match dims.kind {
+        TaskKind::Lm => {
+            let task = LmTask::new(dims.vocab, 0.05);
+            let b = task.batch(&mut rng, dims.batch_per_core, dims.seq);
+            StepBatch::Lm { tokens: b.tokens, targets: b.targets }
+        }
+        TaskKind::Image => {
+            let task = ImageTask::new(dims.image, dims.classes, 2.0, 0xEEE);
+            let b = task.batch(&mut rng, dims.batch_per_core);
+            StepBatch::Image { images: b.images, labels: b.labels }
+        }
+    };
+    Ok((params, batch, dims.batch_per_core))
+}
+
+/// Mean `train_step` seconds over `steps` timed iterations (one warmup).
+fn time_steps(
+    backend: &ReferenceBackend,
+    params: &[Vec<f32>],
+    batch: &StepBatch,
+    steps: usize,
+) -> Result<f64, String> {
+    backend.train_step(params, batch).map_err(|e| e.to_string())?;
+    let t = Timer::start();
+    for _ in 0..steps.max(1) {
+        std::hint::black_box(backend.train_step(params, batch).map_err(|e| e.to_string())?);
+    }
+    Ok(t.secs() / steps.max(1) as f64)
+}
+
+/// Time the naive / tiled / threaded matrix over `families`, erroring out
+/// unless all three configurations produce bit-identical losses and
+/// gradients (the determinism contract `BENCH_backend.json` rides on).
+/// `threads == 0` means one per available hardware thread.
+pub fn run_backend_bench(
+    families: &[&str],
+    steps: usize,
+    threads: usize,
+) -> Result<BackendBench, String> {
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    let mut cases = Vec::with_capacity(families.len());
+    for family in families {
+        let (params, batch, per_core) = bench_inputs(family)?;
+        let dims = proxy_dims(family).expect("checked by bench_inputs");
+        let naive =
+            ReferenceBackend::with_options(dims, Precision::F32, KernelMode::Naive, 1);
+        let tiled =
+            ReferenceBackend::with_options(dims, Precision::F32, KernelMode::Tiled, 1);
+        let threaded =
+            ReferenceBackend::with_options(dims, Precision::F32, KernelMode::Tiled, threads);
+
+        let (l0, g0) = naive.train_step(&params, &batch).map_err(|e| e.to_string())?;
+        for (label, b) in [("tiled", &tiled), ("threaded", &threaded)] {
+            let (l, g) = b.train_step(&params, &batch).map_err(|e| e.to_string())?;
+            if l.to_bits() != l0.to_bits() || g != g0 {
+                return Err(format!(
+                    "{family}: {label} executor is not bit-identical to naive"
+                ));
+            }
+        }
+
+        cases.push(BackendCase {
+            family: family.to_string(),
+            batch: per_core,
+            threads,
+            naive_step_s: time_steps(&naive, &params, &batch, steps)?,
+            tiled_step_s: time_steps(&tiled, &params, &batch, steps)?,
+            threaded_step_s: time_steps(&threaded, &params, &batch, steps)?,
+        });
+    }
+    Ok(BackendBench { threads, steps, cases })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,5 +331,22 @@ mod tests {
         let j = b.to_json();
         assert_eq!(j.get("points").and_then(Json::as_usize), Some(64));
         assert!(j.get("speedup_vs_baseline").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn backend_matrix_is_bit_identical_and_records_speedups() {
+        // Two families, few steps: the cross-check (naive == tiled ==
+        // threaded, bit-for-bit) is the assertion that matters; timing
+        // numbers are recorded, not asserted (CI machines are noisy).
+        let b = run_backend_bench(&["gnmt", "resnet50"], 2, 2).unwrap();
+        assert_eq!(b.cases.len(), 2);
+        assert_eq!(b.threads, 2);
+        for c in &b.cases {
+            assert!(c.naive_step_s > 0.0 && c.tiled_step_s > 0.0 && c.threaded_step_s > 0.0);
+        }
+        let j = b.to_json();
+        assert_eq!(j.get("bench").and_then(Json::as_str), Some("backend_matrix"));
+        assert!(j.get("geomean_speedup_threaded").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(j.get("cases").and_then(Json::as_arr).map(|a| a.len()), Some(2));
     }
 }

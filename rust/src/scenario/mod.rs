@@ -48,7 +48,9 @@ pub mod grid;
 pub mod presets;
 pub mod runner;
 
-pub use bench::{reference_point, run_sweep_bench, SweepBench};
+pub use bench::{
+    reference_point, run_backend_bench, run_sweep_bench, BackendBench, BackendCase, SweepBench,
+};
 pub use faults::{price_fault_trace, FaultEvent, FaultKind, FaultOutcome, FaultTrace};
 pub use grid::{AblationGrid, OptimizerAxis};
 pub use presets::{

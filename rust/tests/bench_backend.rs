@@ -1,0 +1,42 @@
+//! Tier-1 perf harness for the reference-backend executors: run every
+//! proxy family's `train_step` through the naive (pre-tiling scalar
+//! baseline), tiled, and tiled+threaded configurations, cross-check
+//! bit-identity, and record the wall-clocks in `BENCH_backend.json` at
+//! the workspace root so every `cargo test` run refreshes the perf
+//! trajectory. Timing assertions are deliberately absent — CI machines
+//! are noisy; the recorded numbers (and the ≥4x speedup acceptance) are
+//! read from the artifact, not gated here.
+
+use tpu_pod_train::models::proxy::PROXY_FAMILIES;
+use tpu_pod_train::scenario::run_backend_bench;
+use tpu_pod_train::util::json::Json;
+
+#[test]
+fn backend_matrix_records_perf_trajectory() {
+    let families: Vec<&str> = PROXY_FAMILIES.iter().map(|d| d.family).collect();
+    let bench = run_backend_bench(&families, 20, 0)
+        .expect("backend bench (bit-identity cross-check)");
+    assert_eq!(bench.cases.len(), families.len());
+    assert!(bench.threads >= 1);
+    for c in &bench.cases {
+        assert!(
+            c.naive_step_s > 0.0 && c.tiled_step_s > 0.0 && c.threaded_step_s > 0.0,
+            "{}: zero step time recorded",
+            c.family
+        );
+    }
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_backend.json");
+    bench.write(path).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+
+    // Round-trip: the record parses and carries the headline fields.
+    let text = std::fs::read_to_string(path).unwrap();
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(j.get("bench").and_then(|v| v.as_str()), Some("backend_matrix"));
+    assert_eq!(
+        j.get("cases").and_then(|v| v.as_arr()).map(|a| a.len()),
+        Some(families.len())
+    );
+    let geomean = j.get("geomean_speedup_threaded").and_then(|v| v.as_f64()).unwrap();
+    assert!(geomean > 0.0, "geomean speedup must be populated, got {geomean}");
+}

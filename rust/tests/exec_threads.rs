@@ -1,0 +1,87 @@
+//! Determinism contract of the threaded reference backend, end to end
+//! through the live trainer: `--exec-threads N` must be bit-identical to
+//! the serial executor for every optimizer and update-sharding mode, and
+//! two seeded threaded runs must be bit-identical to each other. The
+//! backend guarantees this by construction — threads own disjoint output
+//! row spans and every element keeps its serial reduction order — and
+//! these tests pin the guarantee where it matters: final parameters and
+//! the full loss curve of real training runs.
+
+use tpu_pod_train::coordinator::{train, OptChoice, TrainConfig, TrainReport};
+use tpu_pod_train::optim::{AdamConfig, LarsConfig};
+
+fn run(model: &str, opt: OptChoice, wus: bool, threads: usize, seed: u64) -> TrainReport {
+    let mut cfg = TrainConfig::quick(model, 2, 8);
+    cfg.opt = opt;
+    cfg.use_wus = wus;
+    cfg.exec_threads = threads;
+    cfg.seed = seed;
+    train(&cfg).expect("training run")
+}
+
+fn assert_bit_identical(a: &TrainReport, b: &TrainReport, what: &str) {
+    assert_eq!(a.step_losses.len(), b.step_losses.len(), "{what}: step count");
+    for (i, (x, y)) in a.step_losses.iter().zip(&b.step_losses).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: loss diverged at step {i}");
+    }
+    assert_eq!(a.final_params.len(), b.final_params.len(), "{what}: param tensor count");
+    for (t, (pa, pb)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        assert_eq!(pa.len(), pb.len(), "{what}: tensor {t} length");
+        for (i, (x, y)) in pa.iter().zip(pb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: tensor {t} diverged at element {i}");
+        }
+    }
+}
+
+/// Threaded output == serial output, bit for bit, across every optimizer
+/// and both weight-update modes (replicated and sharded).
+#[test]
+fn threaded_trainer_is_bit_identical_to_serial() {
+    let optimizers: [(&str, fn() -> OptChoice); 3] = [
+        ("sgd", || OptChoice::Sgd { lr: 0.05, momentum: 0.9 }),
+        ("adam", || OptChoice::Adam { cfg: AdamConfig::default(), lr: 1e-3 }),
+        ("lars", || OptChoice::Lars { cfg: LarsConfig::default(), lr: 0.02 }),
+    ];
+    for (name, opt) in optimizers {
+        for wus in [false, true] {
+            let serial = run("gnmt", opt(), wus, 1, 7);
+            for threads in [2, 5] {
+                let threaded = run("gnmt", opt(), wus, threads, 7);
+                assert_bit_identical(
+                    &serial,
+                    &threaded,
+                    &format!("{name} wus={wus} threads={threads}"),
+                );
+            }
+        }
+    }
+}
+
+/// Two identically-seeded runs at `--exec-threads 4` are bit-identical:
+/// thread scheduling never leaks into the numerics.
+#[test]
+fn seeded_threaded_runs_are_reproducible() {
+    for model in ["transformer", "resnet50"] {
+        let a = run(model, OptChoice::Adam { cfg: AdamConfig::default(), lr: 1e-3 }, true, 4, 42);
+        let b = run(model, OptChoice::Adam { cfg: AdamConfig::default(), lr: 1e-3 }, true, 4, 42);
+        assert_bit_identical(&a, &b, &format!("{model} repeat run"));
+    }
+}
+
+/// The report splits executor time into fwd and bwd, and the split
+/// accounts for the whole executor total.
+#[test]
+fn exec_time_is_split_into_fwd_and_bwd() {
+    let rep = run("ssd", OptChoice::Sgd { lr: 0.05, momentum: 0.9 }, false, 2, 0);
+    assert!(rep.fwd_s > 0.0, "forward seconds must be timed, got {}", rep.fwd_s);
+    assert!(rep.bwd_s > 0.0, "backward seconds must be timed, got {}", rep.bwd_s);
+    assert!(rep.exec_s > 0.0);
+    let sum = rep.fwd_s + rep.bwd_s;
+    assert!(
+        (sum - rep.exec_s).abs() <= 1e-9 + rep.exec_s * 1e-6,
+        "fwd {} + bwd {} must account for exec {}",
+        rep.fwd_s,
+        rep.bwd_s,
+        rep.exec_s
+    );
+}
