@@ -1,0 +1,453 @@
+//! Shared-trace goodput audit (`sweep --faults TRACE --live`).
+//!
+//! PR 6 gave the repo two independent goodput models: the live trainer's
+//! incarnation loop (`coordinator::train` — real rollbacks to real
+//! checkpoint files, elastic restart on exactly the survivors) and the
+//! simulator's [`price_fault_trace`] (an analytic walk over the same
+//! event timeline). Nothing ever checked them against each other. This
+//! module replays **one shared [`FaultTrace`] through both** and gates on
+//! agreement:
+//!
+//! * the fatal events are replayed as a severity ladder — the empty
+//!   prefix, then one fatal event, then two, … — so each rung adds
+//!   exactly one rollback to both models;
+//! * **lost steps must match exactly** per rung: both sides roll back to
+//!   the same `floor((step-1)/every)*every` durable frontier, so any gap
+//!   means one of the two rollback models drifted;
+//! * **goodput must agree** per rung within an absolute tolerance, in the
+//!   one currency both sides share: *steps*. The trainer reports
+//!   `useful / executed` steps directly; the simulator's lost-step count
+//!   converts to the same ratio (`steps / (steps + lost)`), and that pair
+//!   is gated. The simulator's native wall-clock goodput (repriced
+//!   seconds) is reported alongside but **not** gap-gated — after a death
+//!   the survivors run every remaining step slower, so seconds-domain
+//!   goodput degrades faster than steps-domain by construction, and the
+//!   gap between the two grows with the step horizon. Both goodputs must
+//!   still be non-increasing along the ladder — more faults can never
+//!   mean more goodput;
+//! * **survivor sets must match**: after `d` deaths the trainer must be
+//!   on `cores − d` workers and the simulator's degraded layout on the
+//!   matching chip count — the arbitrary-survivor policy, not a
+//!   power-of-two halving.
+//!
+//! Slowdown events are excluded from the replay: the live trainer models
+//! a straggler as a stretched (but useful) step while the simulator
+//! charges wall-clock, so they move the two goodput definitions in
+//! structurally different ways. The audit is about the *lost-work* model.
+//!
+//! `sweep --faults TRACE --live` prints the comparison JSON and exits
+//! nonzero on any disagreement — the CI gate that keeps the simulator's
+//! elasticity model honest against the thing it claims to predict.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{train, TrainConfig};
+use crate::scenario::{price_fault_trace, FaultEvent, FaultKind, FaultTrace, ScalingScenario};
+use crate::simulator::simulate;
+use crate::util::json::{obj, Json};
+
+/// Audit configuration (CLI: `--live-*` / `--audit-*` flags).
+#[derive(Clone, Debug)]
+pub struct FaultAuditOptions {
+    /// Registry family for the live runs (and the simulated scenario).
+    pub model: String,
+    /// Live worker count; one trace `chip` = one worker = one simulated
+    /// chip. Any positive count — non-power-of-two worlds are the point.
+    pub cores: usize,
+    /// Total steps of the audited run (both sides share this horizon).
+    pub steps: usize,
+    /// Durable-checkpoint cadence used by both rollback models.
+    pub checkpoint_every: usize,
+    /// Absolute goodput slack per rung (goodput is in [0, 1]).
+    pub tolerance: f64,
+    /// Cap on ladder length (fatal events replayed), to bound audit cost.
+    pub max_fatal_events: usize,
+    pub seed: u64,
+    /// Scratch directory for the live runs' checkpoints.
+    pub workdir: std::path::PathBuf,
+}
+
+impl Default for FaultAuditOptions {
+    fn default() -> FaultAuditOptions {
+        FaultAuditOptions {
+            model: "transformer".into(),
+            cores: 4,
+            steps: 24,
+            checkpoint_every: 4,
+            tolerance: 0.15,
+            max_fatal_events: 3,
+            seed: 0,
+            workdir: std::env::temp_dir().join(format!("tpu-fault-audit-{}", std::process::id())),
+        }
+    }
+}
+
+/// One severity rung: the same fatal-event prefix through both models.
+#[derive(Clone, Debug)]
+pub struct AuditPoint {
+    /// Fatal events replayed at this rung (ladder position).
+    pub fatal_events: usize,
+    /// Death events among them (each shrinks both worlds by one).
+    pub deaths: usize,
+    pub live_goodput: f64,
+    pub live_lost_steps: u64,
+    pub live_restores: usize,
+    /// Live worker count at the end of the run.
+    pub live_final_cores: usize,
+    /// Simulator wall-clock goodput (base seconds / repriced seconds).
+    /// Reported and trend-checked, but not gap-gated — see module doc.
+    pub sim_goodput: f64,
+    pub sim_lost_steps: f64,
+    /// Simulator goodput in the trainer's currency:
+    /// `steps / (steps + lost_steps)`. This is what the gap gate compares
+    /// against `live_goodput`.
+    pub sim_step_goodput: f64,
+    /// Participating cores of the simulator's final (degraded) layout.
+    pub sim_final_cores: usize,
+}
+
+impl AuditPoint {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("fatal_events", Json::from(self.fatal_events)),
+            ("deaths", Json::from(self.deaths)),
+            ("live_goodput", Json::from(self.live_goodput)),
+            ("live_lost_steps", Json::from(self.live_lost_steps as usize)),
+            ("live_restores", Json::from(self.live_restores)),
+            ("live_final_cores", Json::from(self.live_final_cores)),
+            ("sim_goodput", Json::from(self.sim_goodput)),
+            ("sim_lost_steps", Json::from(self.sim_lost_steps)),
+            ("sim_step_goodput", Json::from(self.sim_step_goodput)),
+            ("sim_final_cores", Json::from(self.sim_final_cores)),
+        ])
+    }
+}
+
+/// The full audit record (`sweep --faults --live` output).
+#[derive(Clone, Debug)]
+pub struct FaultAuditReport {
+    pub trace_name: String,
+    pub model: String,
+    pub cores: usize,
+    pub steps: usize,
+    pub checkpoint_every: usize,
+    pub tolerance: f64,
+    pub points: Vec<AuditPoint>,
+    /// Human-readable agreement failures (empty = the two goodput models
+    /// describe the same degraded machine).
+    pub disagreements: Vec<String>,
+}
+
+impl FaultAuditReport {
+    pub fn agrees(&self) -> bool {
+        self.disagreements.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("report", Json::from("fault_goodput_audit")),
+            ("trace", Json::from(self.trace_name.as_str())),
+            ("model", Json::from(self.model.as_str())),
+            ("cores", Json::from(self.cores)),
+            ("steps", Json::from(self.steps)),
+            ("checkpoint_every", Json::from(self.checkpoint_every)),
+            ("tolerance", Json::from(self.tolerance)),
+            ("points", Json::Arr(self.points.iter().map(AuditPoint::to_json).collect())),
+            (
+                "disagreements",
+                Json::Arr(self.disagreements.iter().map(|s| Json::from(s.as_str())).collect()),
+            ),
+            ("agrees", Json::Bool(self.agrees())),
+        ])
+    }
+
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().dump())
+    }
+}
+
+/// The agreement checks, pure over the collected rungs (unit-testable
+/// with fabricated data). `cores` is the starting world size and
+/// `base_participating`/`base_cores` describe the fault-free simulated
+/// layout (the survivor check on the sim side only fires when the base
+/// layout fully occupies its slice — a batch-limited layout has idle
+/// cores whose loss costs nothing).
+pub fn audit_disagreements(
+    points: &[AuditPoint],
+    cores: usize,
+    base_participating: usize,
+    base_cores: usize,
+    tolerance: f64,
+) -> Vec<String> {
+    let tol = tolerance.max(0.0);
+    let mut out = Vec::new();
+    for p in points {
+        let k = p.fatal_events;
+        if (p.live_lost_steps as f64 - p.sim_lost_steps).abs() > 1e-9 {
+            out.push(format!(
+                "rung {k}: lost steps disagree — trainer rolled back {} steps, \
+                 simulator priced {} (both must land on the same checkpoint frontier)",
+                p.live_lost_steps, p.sim_lost_steps
+            ));
+        }
+        if (p.live_goodput - p.sim_step_goodput).abs() > tol {
+            out.push(format!(
+                "rung {k}: goodput gap {:.3} (trainer) vs {:.3} (simulator, steps domain) \
+                 exceeds tolerance {tol}",
+                p.live_goodput, p.sim_step_goodput
+            ));
+        }
+        if p.live_final_cores != cores - p.deaths {
+            out.push(format!(
+                "rung {k}: trainer finished on {} workers, expected exactly the {} survivors \
+                 of {cores} after {} death(s)",
+                p.live_final_cores,
+                cores - p.deaths,
+                p.deaths
+            ));
+        }
+        if base_participating == base_cores
+            && p.sim_final_cores != base_participating - 2 * p.deaths
+        {
+            out.push(format!(
+                "rung {k}: simulator's final layout has {} participating cores, expected \
+                 {} ({} minus {} dead chips)",
+                p.sim_final_cores,
+                base_participating - 2 * p.deaths,
+                base_participating,
+                p.deaths
+            ));
+        }
+    }
+    for w in points.windows(2) {
+        let (a, b) = (&w[0], &w[1]);
+        for (side, ga, gb) in [
+            ("trainer", a.live_goodput, b.live_goodput),
+            ("simulator", a.sim_goodput, b.sim_goodput),
+        ] {
+            if gb > ga + tol {
+                out.push(format!(
+                    "{side} goodput rose {ga:.3} -> {gb:.3} from rung {} to rung {} — \
+                     more faults can never mean more goodput",
+                    a.fatal_events, b.fatal_events
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Replay `trace` through the live trainer and the simulator and assemble
+/// the comparison report. Every live run writes (and cleans up) real
+/// checkpoints under `opts.workdir`.
+pub fn run_fault_audit(opts: &FaultAuditOptions, trace: &FaultTrace) -> Result<FaultAuditReport> {
+    if opts.cores < 2 {
+        return Err(anyhow!("the audit needs at least 2 workers (a death must leave survivors)"));
+    }
+    if opts.checkpoint_every == 0 || opts.steps == 0 {
+        return Err(anyhow!("the audit needs a positive step count and checkpoint cadence"));
+    }
+    trace
+        .validate_in_context(opts.steps as u64, opts.cores)
+        .map_err(|e| anyhow!("fault trace fails strict validation: {e}"))?;
+
+    let fatal: Vec<FaultEvent> = trace
+        .events
+        .iter()
+        .filter(|ev| !matches!(ev.kind, FaultKind::Slowdown { .. }))
+        .copied()
+        .collect();
+    if fatal.is_empty() {
+        return Err(anyhow!(
+            "trace {:?} has no death/preemption events — nothing to audit",
+            trace.name
+        ));
+    }
+    let rungs = fatal.len().min(opts.max_fatal_events.max(1));
+
+    // The simulated twin: one chip per live worker, the same step horizon.
+    // The base point is simulated once; each rung reprices it under its
+    // event prefix via `price_fault_trace`.
+    let scenario = ScalingScenario::submission(&opts.model, vec![opts.cores]);
+    let profile = scenario.profile().map_err(|e| anyhow!("audit scenario: {e}"))?;
+    let sim_cores = opts.cores * 2;
+    let mut base = simulate(&profile, sim_cores, &scenario.sim_options(sim_cores));
+    base.steps = opts.steps as f64;
+    base.converged = true; // the audit horizon is fixed-step, not to-quality
+
+    let mut points = Vec::new();
+    for k in 0..=rungs {
+        let prefix = FaultTrace {
+            name: format!("{}-rung{k}", trace.name),
+            ckpt_every_steps: opts.checkpoint_every as u64,
+            restore_seconds: trace.restore_seconds,
+            events: fatal[..k].to_vec(),
+        };
+        let deaths =
+            prefix.events.iter().filter(|ev| ev.kind == FaultKind::Death).count();
+
+        let sim = price_fault_trace(&scenario, &profile, &base, &prefix);
+
+        let ckpt_dir = opts.workdir.join(format!("rung{k}"));
+        let mut cfg = TrainConfig::quick(&opts.model, opts.cores, opts.steps);
+        cfg.seed = opts.seed;
+        cfg.checkpoint_every = opts.checkpoint_every;
+        cfg.checkpoint_dir = Some(ckpt_dir.clone());
+        cfg.faults = Some(prefix);
+        let live = train(&cfg)?;
+        let _ = std::fs::remove_dir_all(&ckpt_dir);
+
+        points.push(AuditPoint {
+            fatal_events: k,
+            deaths,
+            live_goodput: live.goodput,
+            live_lost_steps: live.lost_steps,
+            live_restores: live.restores,
+            live_final_cores: live.final_cores,
+            sim_goodput: sim.goodput,
+            sim_lost_steps: sim.lost_steps,
+            sim_step_goodput: opts.steps as f64 / (opts.steps as f64 + sim.lost_steps),
+            sim_final_cores: sim.final_cores,
+        });
+    }
+
+    let disagreements = audit_disagreements(
+        &points,
+        opts.cores,
+        base.participating_cores,
+        base.cores,
+        opts.tolerance,
+    );
+    Ok(FaultAuditReport {
+        trace_name: trace.name.clone(),
+        model: opts.model.clone(),
+        cores: opts.cores,
+        steps: opts.steps,
+        checkpoint_every: opts.checkpoint_every,
+        tolerance: opts.tolerance,
+        points,
+        disagreements,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rung(
+        k: usize,
+        deaths: usize,
+        live_g: f64,
+        sim_g: f64,
+        lost: u64,
+        cores: usize,
+    ) -> AuditPoint {
+        AuditPoint {
+            fatal_events: k,
+            deaths,
+            live_goodput: live_g,
+            live_lost_steps: lost,
+            live_restores: k,
+            live_final_cores: cores - deaths,
+            sim_goodput: sim_g,
+            sim_lost_steps: lost as f64,
+            // An agreeing simulator prices the same lost work, so its
+            // steps-domain goodput lands exactly on the trainer's.
+            sim_step_goodput: live_g,
+            sim_final_cores: 2 * (cores - deaths),
+        }
+    }
+
+    #[test]
+    fn agreeing_rungs_produce_no_disagreements() {
+        let pts = vec![
+            rung(0, 0, 1.0, 1.0, 0, 4),
+            rung(1, 1, 0.9, 0.88, 3, 4),
+            rung(2, 2, 0.8, 0.77, 6, 4),
+        ];
+        assert_eq!(audit_disagreements(&pts, 4, 8, 8, 0.15), Vec::<String>::new());
+    }
+
+    #[test]
+    fn lost_step_mismatch_is_flagged() {
+        let mut pts = vec![rung(0, 0, 1.0, 1.0, 0, 4), rung(1, 1, 0.9, 0.9, 3, 4)];
+        pts[1].sim_lost_steps = 5.0;
+        let d = audit_disagreements(&pts, 4, 8, 8, 0.15);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].contains("lost steps disagree"), "{}", d[0]);
+    }
+
+    #[test]
+    fn goodput_gap_and_rise_are_flagged() {
+        let mut pts = vec![rung(0, 0, 1.0, 0.5, 0, 4), rung(1, 1, 0.4, 0.9, 3, 4)];
+        // Simulator claims far less lost work than the trainer saw…
+        pts[1].sim_step_goodput = 0.9;
+        let d = audit_disagreements(&pts, 4, 8, 8, 0.15);
+        assert!(d.iter().any(|m| m.contains("goodput gap")), "{d:?}");
+        // …and its wall-clock goodput rose along the ladder (0.5 → 0.9).
+        assert!(d.iter().any(|m| m.contains("never mean more goodput")), "{d:?}");
+    }
+
+    #[test]
+    fn wrong_survivor_sets_are_flagged() {
+        // Trainer halved instead of continuing on the survivors.
+        let mut pts = vec![rung(1, 1, 0.9, 0.9, 3, 6)];
+        pts[0].live_final_cores = 3;
+        let d = audit_disagreements(&pts, 6, 12, 12, 0.15);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].contains("exactly the 5 survivors"), "{}", d[0]);
+
+        // Simulator halved its layout instead of dropping one chip.
+        let mut pts = vec![rung(1, 1, 0.9, 0.9, 3, 6)];
+        pts[0].sim_final_cores = 6;
+        let d = audit_disagreements(&pts, 6, 12, 12, 0.15);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].contains("dead chips"), "{}", d[0]);
+    }
+
+    #[test]
+    fn audit_rejects_traces_without_fatal_events() {
+        let opts = FaultAuditOptions::default();
+        let mut t = FaultTrace::empty("slow-only");
+        t.events = vec![FaultEvent {
+            step: 2,
+            chip: 0,
+            kind: FaultKind::Slowdown { factor: 2.0, steps: 2 },
+        }];
+        let err = run_fault_audit(&opts, &t).unwrap_err().to_string();
+        assert!(err.contains("no death/preemption"), "{err}");
+    }
+
+    /// End-to-end on a non-power-of-two world: 3 workers, one death, both
+    /// models must agree rung for rung. This is the in-process twin of the
+    /// CI `sweep --faults --live` gate.
+    #[test]
+    fn live_and_sim_agree_on_a_three_worker_death() {
+        let opts = FaultAuditOptions {
+            cores: 3,
+            steps: 8,
+            checkpoint_every: 2,
+            max_fatal_events: 1,
+            workdir: std::env::temp_dir()
+                .join(format!("tpu-audit-test-{}", std::process::id())),
+            ..Default::default()
+        };
+        let mut trace = FaultTrace::empty("one-death");
+        trace.events = vec![FaultEvent { step: 6, chip: 1, kind: FaultKind::Death }];
+        let rep = run_fault_audit(&opts, &trace).unwrap();
+        assert_eq!(rep.points.len(), 2);
+        assert_eq!(rep.disagreements, Vec::<String>::new());
+        let p = &rep.points[1];
+        // Died entering step 6: 5 done, frontier at 4, one step lost.
+        assert_eq!(p.live_lost_steps, 1);
+        assert_eq!(p.live_final_cores, 2, "3 workers minus 1 death");
+        assert!(p.live_goodput < 1.0 && p.sim_goodput < 1.0);
+        // Same lost work → identical steps-domain goodput (8 useful of 9
+        // executed); the wall-clock goodput additionally prices the
+        // survivors' slower remaining steps, so it may sit anywhere below 1.
+        assert!((p.live_goodput - p.sim_step_goodput).abs() < 1e-12);
+        let j = Json::parse(&rep.to_json().dump()).unwrap();
+        assert_eq!(j.get("report").and_then(Json::as_str), Some("fault_goodput_audit"));
+        assert_eq!(j.get("agrees").and_then(Json::as_bool), Some(true));
+    }
+}

@@ -31,6 +31,10 @@
 //! when any trend check fails — the CI gate that keeps the simulator's
 //! shape honest as the kernels underneath it change.
 
+pub mod audit;
+
+pub use audit::{run_fault_audit, AuditPoint, FaultAuditOptions, FaultAuditReport};
+
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::{train, TrainConfig};
@@ -44,7 +48,7 @@ use crate::util::json::{obj, Json};
 pub struct LiveGridOptions {
     /// Registry families to calibrate (default: all five).
     pub models: Vec<String>,
-    /// Data-parallel worker threads per live point (power of two).
+    /// Data-parallel worker threads per live point (any positive count).
     pub cores: usize,
     /// Training steps per live point (timed; no eval, no checkpoints).
     pub steps: usize,

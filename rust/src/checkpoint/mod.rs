@@ -227,6 +227,75 @@ pub fn save(path: impl AsRef<Path>, specs: &[ParamSpec], state: &TrainState) -> 
     Ok(())
 }
 
+/// The scratch name [`save_atomic`] streams into before the rename.
+/// Readers ([`load`], `latest_checkpoint`) never look at `.tmp` files, so
+/// a torn one is inert garbage, not a corrupt checkpoint.
+pub fn tmp_path(path: &Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    std::path::PathBuf::from(os)
+}
+
+/// Durable save with a crash-safe publish: stream the full file into
+/// `<path>.tmp`, then atomically rename it over the final name. A crash at
+/// any point mid-write leaves either no file or a stale `.tmp` — the
+/// previously published checkpoint at `path` (if any) stays valid.
+pub fn save_atomic(path: impl AsRef<Path>, specs: &[ParamSpec], state: &TrainState) -> Result<()> {
+    let path = path.as_ref();
+    let tmp = tmp_path(path);
+    save(&tmp, specs, state)?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing {tmp:?} -> {path:?}"))?;
+    Ok(())
+}
+
+/// Double-buffered background checkpoint writer (rank 0 only).
+///
+/// The training loop hands a fully materialized [`TrainState`] snapshot to
+/// [`enqueue`](Self::enqueue) and keeps stepping while a writer thread
+/// streams it to disk via [`save_atomic`]; the snapshot being an owned
+/// second buffer is what makes the overlap safe. At most one save is in
+/// flight: enqueueing the next checkpoint first drains the previous write
+/// (propagating its error), so a slow disk back-pressures the step loop
+/// instead of queueing unbounded snapshots. Call [`drain`](Self::drain)
+/// before exiting — including crash-injection exits — so the last queued
+/// checkpoint is durable.
+#[derive(Default)]
+pub struct AsyncWriter {
+    inflight: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl AsyncWriter {
+    pub fn new() -> AsyncWriter {
+        AsyncWriter { inflight: None }
+    }
+
+    /// Queue one durable save; blocks only if the previous one is still
+    /// being written.
+    pub fn enqueue(
+        &mut self,
+        path: std::path::PathBuf,
+        specs: Vec<ParamSpec>,
+        state: TrainState,
+    ) -> Result<()> {
+        self.drain()?;
+        self.inflight =
+            Some(std::thread::spawn(move || save_atomic(&path, &specs, &state)));
+        Ok(())
+    }
+
+    /// Wait for the in-flight save (if any) to be published, surfacing its
+    /// error. Idempotent.
+    pub fn drain(&mut self) -> Result<()> {
+        match self.inflight.take() {
+            Some(h) => {
+                h.join().map_err(|_| anyhow::anyhow!("checkpoint writer thread panicked"))?
+            }
+            None => Ok(()),
+        }
+    }
+}
+
 /// Save parameters (+ step) in the legacy v1 format. Kept for
 /// compatibility tests and for interop with pre-v2 tooling; new code
 /// should use [`save`].

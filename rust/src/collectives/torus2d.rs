@@ -20,8 +20,11 @@ pub struct Placement {
 }
 
 impl Placement {
+    /// Any world size: ranks are laid out on the near-square exact
+    /// factorization of `world` (primes degenerate to a 1-D ring, which
+    /// `torus2d_all_reduce` handles with a plain ring all-reduce).
     pub fn new(world: usize) -> Placement {
-        assert!(world.is_power_of_two(), "world must be a power of two");
+        assert!(world >= 1, "world must be at least 1");
         Placement { torus: Torus::for_chips(world) }
     }
 
@@ -110,6 +113,13 @@ mod tests {
     #[test]
     fn matches_flat_sum_two_ranks() {
         check_allreduce(2, 9);
+    }
+
+    #[test]
+    fn matches_flat_sum_non_power_of_two() {
+        check_allreduce(3, 17); // 3x1 ring
+        check_allreduce(6, 29); // 3x2
+        check_allreduce(12, 53); // 4x3
     }
 
     #[test]

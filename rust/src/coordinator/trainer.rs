@@ -67,7 +67,8 @@ pub struct TrainConfig {
     /// Model key: a proxy family (`transformer`, `resnet50`, …) for the
     /// reference backend, a manifest key (`transformer_tiny`) for PJRT.
     pub model: String,
-    /// Data-parallel worker threads ("cores"); power of two.
+    /// Data-parallel worker threads ("cores"); any positive count —
+    /// collectives run on the near-square factorization of the world.
     pub cores: usize,
     pub steps: usize,
     /// Evaluate every N steps (0 = never).
@@ -595,10 +596,13 @@ fn merge_incarnation(report: &mut TrainReport, inc: TrainReport) {
 /// trains until the run finishes or the next fatal (death/preemption)
 /// event strikes; a fatal event rolls the run back to the newest durable
 /// checkpoint — losing the steps since it — and, for a death, restarts
-/// elastically on half the cores. Goodput = useful steps / executed steps
-/// (exactly 1.0 when no fault applies).
+/// elastically on **exactly the survivors** (world − 1; any world size is
+/// a valid world size, powers of two included but not required). Goodput
+/// = useful steps / executed steps (exactly 1.0 when no fault applies).
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
-    assert!(cfg.cores.is_power_of_two(), "cores must be a power of two");
+    if cfg.cores == 0 {
+        bail!("--cores must be at least 1");
+    }
     if cfg.checkpoint_every > 0 {
         let dir = cfg
             .checkpoint_dir
@@ -691,7 +695,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             if world == 1 {
                 bail!("fault trace killed the last worker at step {fstep}");
             }
-            world /= 2; // elastic restart on the next power-of-two slice
+            world -= 1; // elastic restart on exactly the survivors
         }
         resume = ckpt_path;
         start = ckpt_step;
@@ -802,6 +806,10 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
     // steps (on TPU this is the fixed on-device staging area; reallocating
     // it every step pays page-fault zeroing on the whole gradient set).
     let mut gradsum_ws = GradSumWorkspace::default();
+    // Rank 0's background checkpoint writer: saves stream to `<file>.tmp`
+    // on a writer thread and publish via atomic rename while the step loop
+    // keeps training; at most one save is in flight (see checkpoint docs).
+    let mut ckpt_writer = checkpoint::AsyncWriter::new();
     let wall = Timer::start();
 
     // ---- nested train-and-eval tight loop (§2) ---------------------------
@@ -950,7 +958,11 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
                     rng: rng_states,
                     world,
                 };
-                checkpoint::save(&path, &ctx.specs, &state)
+                // The owned snapshot goes to the writer thread; training
+                // continues while the save streams to `<path>.tmp` and is
+                // published by atomic rename.
+                ckpt_writer
+                    .enqueue(path.clone(), ctx.specs.clone(), state)
                     .map_err(|e| anyhow!("checkpoint {}: {e}", path.display()))?;
                 report.checkpoints.push(step as u64);
             }
@@ -958,10 +970,21 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
 
         // -- crash injection (CI crash-resume smoke) --
         if cfg.kill_at == step && ep.rank == 0 {
+            // The in-flight save (if any) must be published before the
+            // abort: a kill at or after a checkpoint step never loses that
+            // checkpoint, only a kill *during* the write does — and then
+            // the torn bytes sit in a `.tmp` the loaders never read.
+            if let Err(e) = ckpt_writer.drain() {
+                eprintln!("kill-at: draining checkpoint writer failed: {e:#}");
+            }
             eprintln!("kill-at: aborting the process after step {step}");
             std::process::exit(3);
         }
     }
+    // Surface any in-flight save before reporting success: a checkpoint
+    // the caller saw in `report.checkpoints` must be durable by the time
+    // `train()` returns.
+    ckpt_writer.drain().map_err(|e| anyhow!("checkpoint writer: {e}"))?;
     report.wallclock_s = wall.secs();
     report.exec_s = backend.execute_seconds();
     let (fwd, bwd) = backend.phase_seconds();

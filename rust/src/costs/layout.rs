@@ -71,11 +71,25 @@ impl PodLayout {
         self.mp
     }
 
+    /// Aspect-ratio cap for [`participating_torus`](Self::participating_torus):
+    /// ragged chip counts whose exact factorization would degenerate into a
+    /// long 1-D ring leave a few chips idle instead.
+    pub const TORUS_MAX_ASPECT: usize = 4;
+
     /// Torus spanned by the participating cores (surplus chips carry no
-    /// collective traffic). Rounded up to the nearest power-of-two slice,
-    /// matching how pod slices are allocated.
+    /// collective traffic). Any chip count is allowed: the layout is the
+    /// near-square rectangle over at most that many chips, with the
+    /// remainder explicitly idle ([`idle_torus_chips`](Self::idle_torus_chips)).
+    /// Power-of-two participations keep their exact historical slices.
     pub fn participating_torus(&self) -> Torus {
-        Torus::for_chips((self.participating_cores() / 2).max(1).next_power_of_two())
+        Torus::for_chips_idle((self.participating_cores() / 2).max(1), Self::TORUS_MAX_ASPECT).0
+    }
+
+    /// Chips left out of the participating torus because the survivor count
+    /// does not factor into an acceptable rectangle (0 for well-factoring
+    /// counts, including every power of two).
+    pub fn idle_torus_chips(&self) -> usize {
+        Torus::for_chips_idle((self.participating_cores() / 2).max(1), Self::TORUS_MAX_ASPECT).1
     }
 }
 
@@ -122,6 +136,19 @@ mod tests {
         assert_eq!(p.participating_cores(), 1);
         assert_eq!(p.surplus_cores(), 0);
         assert_eq!(p.participating_torus().chips(), 1);
+    }
+
+    #[test]
+    fn non_power_of_two_participation_gets_exact_torus() {
+        // 6 cores -> 3 chips, exact 3x1 ring, nothing idle.
+        let p = layout(6, 1, 6, 24);
+        assert_eq!(p.participating_cores(), 6);
+        assert_eq!(p.participating_torus().chips(), 3);
+        assert_eq!(p.idle_torus_chips(), 0);
+        // 194 cores -> 97 chips (prime): 12x8 rectangle with 1 chip idle.
+        let p = layout(194, 1, 194, 1024);
+        assert_eq!(p.participating_torus().chips(), 96);
+        assert_eq!(p.idle_torus_chips(), 1);
     }
 
     #[test]

@@ -18,7 +18,9 @@
 //! * `info`     — list artifacts, models and device constants.
 
 use tpu_pod_train::benchkit::Table;
-use tpu_pod_train::calibrate::{run_live_calibration, LiveGridOptions};
+use tpu_pod_train::calibrate::{
+    run_fault_audit, run_live_calibration, FaultAuditOptions, LiveGridOptions,
+};
 use tpu_pod_train::config::Config;
 use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
 use tpu_pod_train::models::{all_models, model};
@@ -59,7 +61,7 @@ fn cmd_train(tokens: &[String]) -> i32 {
         .opt("config", "", "TOML config file (CLI flags override)")
         .opt("model", "transformer", "model family (reference) or manifest key (pjrt)")
         .opt("backend", "reference", "fwd/bwd executor: reference | reference-bf16 | pjrt")
-        .opt("cores", "4", "data-parallel workers (power of two)")
+        .opt("cores", "4", "data-parallel workers (any positive count)")
         .opt("steps", "100", "training steps")
         .opt("batch-per-core", "0", "per-core batch override (reference backend; 0 = default)")
         .opt("eval-every", "25", "eval cadence in steps (0 = never)")
@@ -168,6 +170,14 @@ fn cmd_train(tokens: &[String]) -> i32 {
         kill_at: a.get_usize("kill-at", 0),
         exec_threads: a.get_usize("exec-threads", 1),
     };
+    if cfg.cores == 0 {
+        eprintln!("--cores must be at least 1 (any positive count; no power-of-two requirement)");
+        return 2;
+    }
+    if cfg.steps == 0 {
+        eprintln!("--steps must be at least 1");
+        return 2;
+    }
     println!(
         "training {} on {} cores, {} steps (backend={}, wus={}, gradsum={:?})",
         cfg.model,
@@ -301,6 +311,69 @@ fn cmd_simulate(tokens: &[String]) -> i32 {
     0
 }
 
+/// `sweep --faults TRACE --live`: the shared-trace goodput audit.
+/// Replays the trace's fatal-event ladder through the live reference
+/// trainer and the simulator's `price_fault_trace`, prints the
+/// comparison JSON, and exits 1 on any trend disagreement.
+fn cmd_fault_audit(a: &tpu_pod_train::util::cli::Args) -> i32 {
+    let defaults = FaultAuditOptions::default();
+    let model_arg = a.get_or("model", "");
+    if model_arg.contains(',') || model_arg == "all" {
+        eprintln!("the fault audit replays one model family, got --model {model_arg}");
+        return 2;
+    }
+    let opts = FaultAuditOptions {
+        model: if model_arg.is_empty() { defaults.model.clone() } else { model_arg },
+        cores: a.get_usize("live-cores", defaults.cores),
+        steps: a.get_usize("live-steps", defaults.steps),
+        checkpoint_every: a.get_usize("audit-ckpt-every", defaults.checkpoint_every),
+        tolerance: a.get_f64("live-tolerance", defaults.tolerance),
+        max_fatal_events: a.get_usize("audit-max-events", defaults.max_fatal_events),
+        seed: a.get_usize("audit-seed", defaults.seed as usize) as u64,
+        ..defaults
+    };
+    let faults_path = a.get_or("faults", "");
+    let trace = match FaultTrace::load(&faults_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("loading fault trace {faults_path}: {e}");
+            return 2;
+        }
+    };
+    eprintln!(
+        "fault audit: {} on {} workers, {} steps, checkpoint every {}, trace {:?}",
+        opts.model, opts.cores, opts.steps, opts.checkpoint_every, trace.name
+    );
+    let rep = match run_fault_audit(&opts, &trace) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("fault audit error: {e:#}");
+            return 2;
+        }
+    };
+    println!("{}", rep.to_json().dump());
+    let out = a.get_or("out", "");
+    if !out.is_empty() {
+        if let Err(e) = rep.write(&out) {
+            eprintln!("writing {out}: {e}");
+            return 1;
+        }
+        eprintln!("report written to {out}");
+    }
+    if !rep.agrees() {
+        for d in &rep.disagreements {
+            eprintln!("fault-audit disagreement: {d}");
+        }
+        return 1;
+    }
+    eprintln!(
+        "live/simulated goodput agree over {} ladder rung(s) (|gap| <= {:.2})",
+        rep.points.len(),
+        rep.tolerance
+    );
+    0
+}
+
 fn cmd_sweep(tokens: &[String]) -> i32 {
     let cli = Cli::new("sweep", "pod-scale scenario sweep (Figs. 7-10 / Table 1 engine)")
         .opt("model", "", "resnet50|ssd|maskrcnn|transformer|gnmt|all (all with --grid)")
@@ -312,9 +385,12 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
         .opt("tolerance", "0.02", "relative benchmark-seconds regression tolerance for --compare")
         .opt("faults", "", "fault trace JSON: reprice every point under failures, report goodput")
         .opt("live-steps", "12", "training steps per live calibration point (--live)")
-        .opt("live-cores", "2", "data-parallel workers per live point, power of two (--live)")
+        .opt("live-cores", "2", "data-parallel workers per live point, any positive count (--live)")
         .opt("live-threads", "1", "executor threads for --live (0 = all host threads)")
         .opt("live-tolerance", "0.35", "relative slack for the --live trend checks")
+        .opt("audit-ckpt-every", "4", "checkpoint cadence for the fault audit (--faults --live)")
+        .opt("audit-max-events", "3", "fatal-event ladder cap for the fault audit")
+        .opt("audit-seed", "0", "data/init seed for the fault audit's live runs")
         .flag("live", "calibrate: run the grid on the live trainer; exit 1 on trend disagreement")
         .flag("grid", "run the §2 ablation grid (spatial/WUS x gradsum schedule x LARS/SGD)")
         .flag("serial-gradsum", "expose the non-contiguous gathers (no pipelining)")
@@ -340,9 +416,15 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
                 return 2;
             }
         }
-        if !a.get_or("compare", "").is_empty() || !a.get_or("faults", "").is_empty() {
-            eprintln!("--compare/--faults conflict with --live");
+        if !a.get_or("compare", "").is_empty() {
+            eprintln!("--compare conflicts with --live");
             return 2;
+        }
+        if !a.get_or("faults", "").is_empty() {
+            // `--faults TRACE --live` is the shared-trace goodput audit:
+            // replay the same trace through the live trainer and the
+            // simulator's price_fault_trace, gate on agreement.
+            return cmd_fault_audit(&a);
         }
         let defaults = LiveGridOptions::default();
         let model_arg = a.get_or("model", "");
@@ -359,8 +441,8 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
             tolerance: a.get_f64("live-tolerance", defaults.tolerance),
             ..defaults
         };
-        if !opts.cores.is_power_of_two() {
-            eprintln!("--live-cores must be a power of two, got {}", opts.cores);
+        if opts.cores == 0 {
+            eprintln!("--live-cores must be at least 1");
             return 2;
         }
         if opts.steps == 0 {
@@ -577,7 +659,12 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
 }
 
 fn cmd_faults(tokens: &[String]) -> i32 {
-    let cli = Cli::new("faults", "generate a seeded fault/straggler trace")
+    let cli = Cli::new("faults", "generate or validate a seeded fault/straggler trace")
+        .opt(
+            "validate",
+            "",
+            "validate an existing trace JSON against --steps/--chips instead of generating",
+        )
         .opt("name", "trace", "trace name (recorded in the JSON)")
         .opt("seed", "0", "rng seed (traces are deterministic given the seed)")
         .opt("steps", "1000", "training steps the trace covers")
@@ -595,6 +682,34 @@ fn cmd_faults(tokens: &[String]) -> i32 {
             return 2;
         }
     };
+    let validate_path = a.get_or("validate", "");
+    if !validate_path.is_empty() {
+        // Structural validation (ordering, zero steps, empty windows)
+        // happens in load(); contextual validation then rejects traces
+        // that contradict the run they are meant for: events past the
+        // horizon, chips outside the slice, events on already-dead chips.
+        let trace = match FaultTrace::load(&validate_path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("loading fault trace {validate_path}: {e}");
+                return 2;
+            }
+        };
+        let steps = a.get_usize("steps", 1000) as u64;
+        let chips = a.get_usize("chips", 16);
+        if let Err(e) = trace.validate_in_context(steps, chips) {
+            eprintln!("invalid fault trace {validate_path}: {e}");
+            return 1;
+        }
+        println!(
+            "trace {:?} valid: {} event(s) within {} steps on {} chips",
+            trace.name,
+            trace.events.len(),
+            steps,
+            chips
+        );
+        return 0;
+    }
     let trace = FaultTrace::generate(
         &a.get_or("name", "trace"),
         a.get_usize("seed", 0) as u64,

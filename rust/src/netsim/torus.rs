@@ -42,13 +42,37 @@ impl Torus {
         Torus { nx, ny }
     }
 
-    /// Square-ish torus for a given chip count (powers of two): 1024 → 32x32.
+    /// Square-ish torus for a given chip count: the exact factorization
+    /// `nx * ny == chips` with `ny` the largest divisor at most √chips
+    /// (1024 → 32x32, 128 → 16x8, 12 → 4x3, primes → 1-D ring).
     pub fn for_chips(chips: usize) -> Torus {
-        assert!(chips.is_power_of_two(), "chip count must be a power of two");
-        let log = chips.trailing_zeros();
-        let nx = 1usize << (log / 2 + log % 2);
-        let ny = 1usize << (log / 2);
-        Torus::new(nx, ny)
+        assert!(chips >= 1, "chip count must be at least 1");
+        let mut ny = 1;
+        let mut d = 1;
+        while d * d <= chips {
+            if chips % d == 0 {
+                ny = d;
+            }
+            d += 1;
+        }
+        Torus::new(chips / ny, ny)
+    }
+
+    /// Best rectangular torus of *at most* `chips` chips with aspect ratio
+    /// `nx/ny <= max_aspect`, plus the explicit idle remainder. Ragged chip
+    /// counts whose exact factorization would degenerate (97 → 97x1) drop a
+    /// few chips instead (97 → 12x8 with 1 idle); chip counts that factor
+    /// well — every power of two included — use all chips with zero idle.
+    pub fn for_chips_idle(chips: usize, max_aspect: usize) -> (Torus, usize) {
+        assert!(chips >= 1, "chip count must be at least 1");
+        assert!(max_aspect >= 1);
+        for used in (1..=chips).rev() {
+            let t = Torus::for_chips(used);
+            if t.nx <= t.ny * max_aspect {
+                return (t, chips - used);
+            }
+        }
+        (Torus::new(1, 1), chips - 1)
     }
 
     pub fn chips(&self) -> usize {
@@ -139,6 +163,32 @@ mod tests {
     fn non_square_power_of_two() {
         let t = Torus::for_chips(128);
         assert_eq!((t.nx, t.ny), (16, 8));
+    }
+
+    #[test]
+    fn non_power_of_two_factors_exactly() {
+        for chips in 1..=200 {
+            let t = Torus::for_chips(chips);
+            assert_eq!(t.chips(), chips, "for_chips({chips}) must use every chip");
+            assert!(t.ny <= t.nx, "ny <= nx convention");
+            assert!(t.ny * t.ny <= chips, "ny is at most sqrt(chips)");
+        }
+        assert_eq!((Torus::for_chips(12).nx, Torus::for_chips(12).ny), (4, 3));
+        assert_eq!((Torus::for_chips(96).nx, Torus::for_chips(96).ny), (12, 8));
+        assert_eq!((Torus::for_chips(7).nx, Torus::for_chips(7).ny), (7, 1));
+    }
+
+    #[test]
+    fn idle_remainder_caps_aspect_ratio() {
+        // Primes drop chips to stay rectangular; good factorizations keep all.
+        let (t, idle) = Torus::for_chips_idle(97, 4);
+        assert_eq!((t.nx, t.ny, idle), (12, 8, 1));
+        for chips in [1usize, 2, 3, 6, 12, 96, 128, 1024] {
+            let (t, idle) = Torus::for_chips_idle(chips, 4);
+            assert_eq!(idle, 0, "{chips} chips factor within aspect 4");
+            assert_eq!(t.chips(), chips);
+            assert!(t.nx <= t.ny * 4);
+        }
     }
 
     #[test]

@@ -6,9 +6,10 @@
 //!
 //! * the **simulator** ([`price_fault_trace`]): replays the events against
 //!   a completed [`SimResult`], repricing the remaining steps over the
-//!   degraded layout after each death (the torus shrinks to the next
-//!   power of two, exactly the live trainer's elastic policy) and charging
-//!   rolled-back steps plus checkpoint-restore time;
+//!   degraded layout after each death (the dead chip's two cores leave and
+//!   the run continues on exactly the survivors, the live trainer's
+//!   elastic policy) and charging rolled-back steps plus
+//!   checkpoint-restore time;
 //! * the **live trainer** (`coordinator::trainer`): slowdown events mark
 //!   straggled steps, death/preemption events kill the incarnation, and
 //!   the coordinator restores from the last checkpoint on fewer cores.
@@ -40,7 +41,7 @@ pub enum FaultKind {
     /// whole pod pays the factor.
     Slowdown { factor: f64, steps: u64 },
     /// The chip dies permanently; the run restores from the last
-    /// checkpoint on the next power-of-two-smaller slice.
+    /// checkpoint on exactly the surviving chips.
     Death,
     /// The slice is preempted for `down_seconds`, then resumes from the
     /// last checkpoint on the same cores.
@@ -227,6 +228,41 @@ impl FaultTrace {
         Ok(())
     }
 
+    /// Strict validation against the run the trace is meant for: on top of
+    /// [`validate`](Self::validate), reject events the pricing/replay
+    /// machinery would otherwise silently skip or that contradict each
+    /// other — an event past `total_steps`, a chip outside the slice, any
+    /// event aimed at a chip that an earlier event already killed (a dead
+    /// chip cannot die again, straggle, or be preempted).
+    pub fn validate_in_context(&self, total_steps: u64, chips: usize) -> Result<(), String> {
+        self.validate()?;
+        let mut dead: Vec<usize> = Vec::new();
+        for ev in &self.events {
+            if total_steps > 0 && ev.step > total_steps {
+                return Err(format!(
+                    "trace {:?}: event at step {} is past the run's {total_steps} steps",
+                    self.name, ev.step
+                ));
+            }
+            if chips > 0 && ev.chip >= chips {
+                return Err(format!(
+                    "trace {:?}: chip {} is outside the {chips}-chip slice",
+                    self.name, ev.chip
+                ));
+            }
+            if dead.contains(&ev.chip) {
+                return Err(format!(
+                    "trace {:?}: step {} targets chip {}, which is already dead",
+                    self.name, ev.step, ev.chip
+                ));
+            }
+            if ev.kind == FaultKind::Death {
+                dead.push(ev.chip);
+            }
+        }
+        Ok(())
+    }
+
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("format", Json::Str(FORMAT.into())),
@@ -302,11 +338,12 @@ pub struct FaultOutcome {
 /// the last durable checkpoint (`ckpt_every_steps` cadence; 0 = only the
 /// initial state). Slowdowns stretch the overlapped steps (synchronous
 /// SPMD: the pod runs at the straggler's pace). Death rolls back to the
-/// frontier, pays a restore, and reprices the remaining steps over the
-/// next power-of-two-smaller slice — mp capped to the surviving cores,
-/// replicas refilled up to the global batch, the same elastic re-layout
-/// the live trainer performs. Preemption rolls back, pays the downtime
-/// plus a restore, and continues on the same cores.
+/// frontier, pays a restore, and reprices the remaining steps over
+/// exactly the survivors (the dead chip's two cores leave the slice) —
+/// mp capped to the surviving cores, replicas refilled up to the global
+/// batch, the same elastic re-layout the live trainer performs.
+/// Preemption rolls back, pays the downtime plus a restore, and
+/// continues on the same cores.
 pub fn price_fault_trace(
     s: &ScalingScenario,
     m: &ModelProfile,
@@ -364,8 +401,9 @@ pub fn price_fault_trace(
                 if let FaultKind::Preemption { down_seconds } = ev.kind {
                     wall += down_seconds;
                 } else if cur_cores > 2 {
-                    // Elastic re-layout on the next power-of-two slice.
-                    cur_cores /= 2;
+                    // Elastic re-layout on exactly the survivors: the dead
+                    // chip takes its two cores with it.
+                    cur_cores -= 2;
                     let mp = base.layout.mp.min(cur_cores).max(1);
                     let replicas = (cur_cores / mp).min(base.layout.global_batch).max(1);
                     let mut opts = s.sim_options(cur_cores);
@@ -486,6 +524,45 @@ mod tests {
         t.events = Vec::new();
         t.restore_seconds = -1.0;
         assert!(t.validate().is_err(), "negative restore");
+    }
+
+    #[test]
+    fn contextual_validation_rejects_contradictory_traces() {
+        // Baseline: a sane trace passes with context.
+        let mut t = FaultTrace::empty("ctx");
+        t.events = vec![death_at(5, 1), death_at(9, 2)];
+        t.validate_in_context(100, 16).unwrap();
+
+        // Event past the run's total steps.
+        t.events = vec![death_at(101, 1)];
+        let err = t.validate_in_context(100, 16).unwrap_err();
+        assert!(err.contains("past the run"), "{err}");
+
+        // Chip outside the slice.
+        t.events = vec![death_at(5, 16)];
+        let err = t.validate_in_context(100, 16).unwrap_err();
+        assert!(err.contains("outside the 16-chip slice"), "{err}");
+
+        // Death of an already-dead chip.
+        t.events = vec![death_at(5, 3), death_at(9, 3)];
+        let err = t.validate_in_context(100, 16).unwrap_err();
+        assert!(err.contains("already dead"), "{err}");
+
+        // Any later event aimed at a dead chip is contradictory too.
+        t.events = vec![
+            death_at(5, 3),
+            FaultEvent {
+                step: 9,
+                chip: 3,
+                kind: FaultKind::Slowdown { factor: 2.0, steps: 2 },
+            },
+        ];
+        let err = t.validate_in_context(100, 16).unwrap_err();
+        assert!(err.contains("already dead"), "{err}");
+
+        // Zero context fields disable the respective checks.
+        t.events = vec![death_at(101, 31)];
+        t.validate_in_context(0, 0).unwrap();
     }
 
     #[test]

@@ -21,7 +21,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::benchkit::Table;
-use crate::costs::{gradient_census, shard_imbalance_from_census, Phase};
+use crate::costs::{gradient_census, shard_imbalance_from_census, Phase, PodLayout};
 use crate::models::registry::ModelProfile;
 use crate::netsim::{torus2d_gradsum_makespan, Dir, Message, NetParams, NetSim, Torus};
 use crate::simulator::{simulate, SimResult};
@@ -323,7 +323,7 @@ impl SweepCache {
     /// the 1-D ring embedding is priced by the full event-driven
     /// simulation. Either way the result is memoized by torus + payload.
     fn contention_makespan(&self, payload_bytes: f64, chips: usize, two_d: bool) -> f64 {
-        let torus = Torus::for_chips(chips.max(1).next_power_of_two());
+        let torus = Torus::for_chips_idle(chips.max(1), PodLayout::TORUS_MAX_ASPECT).0;
         let key = (torus.nx, torus.ny, payload_bytes.to_bits(), two_d);
         if let Some(&v) = self.makespans.lock().unwrap().get(&key) {
             return v;
@@ -593,7 +593,7 @@ fn bidirectional_ring_step(
 ///   crosses two links (the embedding cost the 2-D schedule avoids),
 ///   which the simulator prices via store-and-forward.
 pub fn gradsum_contention_makespan(payload_bytes: f64, chips: usize, two_d: bool) -> f64 {
-    let torus = Torus::for_chips(chips.max(1).next_power_of_two());
+    let torus = Torus::for_chips_idle(chips.max(1), PodLayout::TORUS_MAX_ASPECT).0;
     let n = torus.chips();
     if n <= 1 {
         return 0.0;

@@ -276,16 +276,18 @@ fn prop_gradsum_extreme_quanta_match_local_reference() {
     forall(
         10,
         |rng| {
-            let world = 1usize << rng.below(3); // 1, 2, 4
+            let world = rng.below(6) as usize + 1; // 1..=6, non-powers-of-two included
             let ntensors = rng.below(5) as usize + 1;
             let sizes: Vec<usize> =
                 (0..ntensors).map(|_| rng.below(25) as usize + 1).collect();
             (world, sizes)
         },
         |&(world, ref sizes)| {
-            // Shrinking may propose worlds the torus placement rejects
-            // (0, 3, ...); skip them so a failure still shrinks cleanly.
-            if world == 0 || !world.is_power_of_two() {
+            // Shrinking may propose a zero world; skip it so a failure
+            // still shrinks cleanly. (Any positive world is valid now —
+            // non-powers-of-two run the collectives on a 1-D ring or a
+            // near-square torus.)
+            if world == 0 {
                 return Ok(());
             }
             let total: usize = sizes.iter().sum();
@@ -334,6 +336,134 @@ fn prop_gradsum_extreme_quanta_match_local_reference() {
             Ok(())
         },
     );
+}
+
+/// Tentpole contract of the arbitrary-survivor work: ring gradient
+/// summation is **exact** — `== the serial per-element sum`, bit for
+/// bit — at non-power-of-two worlds. The payloads are integer-valued
+/// f32 (magnitudes ≤ 5, ≤ 96 addends), so every summation order yields
+/// the same float; equality here pins exactness, not a tolerance.
+#[test]
+fn prop_ring_gradsum_equals_serial_sum_at_non_power_of_two_worlds() {
+    for world in [3usize, 6, 12, 96] {
+        let cases = if world >= 48 { 2 } else { 6 };
+        forall(
+            cases,
+            |rng| {
+                let ntensors = rng.below(4) as usize + 1;
+                let sizes: Vec<usize> =
+                    (0..ntensors).map(|_| rng.below(30) as usize + 1).collect();
+                let quantum = rng.below(48) as usize + 1;
+                (sizes, quantum)
+            },
+            |&(ref sizes, quantum)| {
+                if sizes.is_empty() || quantum == 0 {
+                    return Ok(()); // degenerate shrink proposals
+                }
+                let sizes_in = sizes.clone();
+                let make = move |rank: usize| -> Vec<Vec<f32>> {
+                    sizes_in
+                        .iter()
+                        .enumerate()
+                        .map(|(t, &s)| {
+                            (0..s).map(|i| ((rank * 7 + t * 3 + i) % 11) as f32 - 5.0).collect()
+                        })
+                        .collect()
+                };
+                let out = run_spmd(world, move |ep| {
+                    let place = Placement::new(world);
+                    let mut serial = make(ep.rank);
+                    let mut pipelined = make(ep.rank);
+                    gradsum_serial(ep, &place, &mut serial);
+                    gradsum_pipelined(ep, &place, &mut pipelined, quantum);
+                    (serial, pipelined)
+                });
+                for (r, (serial, pipelined)) in out.iter().enumerate() {
+                    for (ti, &s) in sizes.iter().enumerate() {
+                        for i in 0..s {
+                            let reference: f32 = (0..world)
+                                .map(|rr| ((rr * 7 + ti * 3 + i) % 11) as f32 - 5.0)
+                                .sum();
+                            if serial[ti][i].to_bits() != reference.to_bits() {
+                                return Err(format!(
+                                    "world {world} serial rank {r} t{ti}[{i}]: \
+                                     {} != serial sum {reference}",
+                                    serial[ti][i]
+                                ));
+                            }
+                            if pipelined[ti][i].to_bits() != reference.to_bits() {
+                                return Err(format!(
+                                    "world {world} pipelined rank {r} t{ti}[{i}] \
+                                     (q={quantum}): {} != serial sum {reference}",
+                                    pipelined[ti][i]
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// WUS checkpoint contract at arbitrary worlds: restoring full-length
+/// optimizer slots into per-rank shards (uneven remainder shards at
+/// non-power-of-two worlds) and all-gathering them back is the
+/// identity, bit for bit — the round-trip the v2 checkpoint resume
+/// path depends on.
+#[test]
+fn prop_shard_state_gather_restore_roundtrip_at_non_power_of_two_worlds() {
+    use tpu_pod_train::wus::ShardedSgd;
+    for world in [3usize, 6, 12, 96] {
+        let cases = if world >= 48 { 2 } else { 6 };
+        forall(
+            cases,
+            |rng| {
+                let ntensors = rng.below(6) as usize + 1;
+                (0..ntensors).map(|_| rng.below(300) as usize).collect::<Vec<usize>>()
+            },
+            |sizes: &Vec<usize>| {
+                let total: usize = sizes.iter().sum();
+                if total == 0 {
+                    return Ok(()); // nothing to shard
+                }
+                let full: Vec<f32> = (0..total).map(|i| (i % 17) as f32 - 8.0).collect();
+                let full_in = full.clone();
+                let sizes_in = sizes.clone();
+                let out = run_spmd(world, move |ep| {
+                    let plan = ShardPlan::balanced(&sizes_in, world);
+                    let mut opt = ShardedSgd::new(0.9, plan, ep.rank);
+                    opt.restore_full_state(&[("velocity".into(), full_in.clone())])
+                        .expect("restore_full_state");
+                    let group: Vec<usize> = (0..world).collect();
+                    opt.gather_full_state(ep, &group)
+                });
+                for (r, slots) in out.iter().enumerate() {
+                    let (name, v) = &slots[0];
+                    if name != "velocity" {
+                        return Err(format!("world {world} rank {r}: slot {name:?}"));
+                    }
+                    if v.len() != full.len() {
+                        return Err(format!(
+                            "world {world} rank {r}: gathered {} of {} elements",
+                            v.len(),
+                            full.len()
+                        ));
+                    }
+                    for i in 0..v.len() {
+                        if v[i].to_bits() != full[i].to_bits() {
+                            return Err(format!(
+                                "world {world} rank {r} elt {i}: {} != {}",
+                                v[i], full[i]
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
 }
 
 /// `ShardPlan::balanced` contracts beyond gap-free coverage: the

@@ -5,9 +5,13 @@
 //!   replicated and weight-update-sharded — the v2 checkpoint carries
 //!   params, optimizer accumulators and every rank's data-RNG state, so
 //!   an interrupted run replays to exactly the uninterrupted weights;
+//! * the same bit-identity holds on a **non-power-of-two world** (3
+//!   workers) — arbitrary survivor sets are first-class;
 //! * an injected chip death rolls back to the newest durable checkpoint
-//!   and restarts elastically on half the cores, with the lost work
-//!   reported as goodput;
+//!   and restarts elastically on **exactly the survivors** (world − 1,
+//!   power of two or not), with the lost work reported as goodput;
+//! * a torn async write (a crash mid-`.tmp`) never corrupts the
+//!   previous durable checkpoint;
 //! * stragglers stretch steps but never kill the run;
 //! * the sweep engine's fault axis: an empty trace leaves every
 //!   `SweepRecord` byte-identical (goodput exactly 1.0), a real trace
@@ -38,8 +42,11 @@ fn death_at(step: u64, chip: usize) -> FaultTrace {
     }
 }
 
-#[test]
-fn kill_and_resume_is_bit_identical_for_every_optimizer() {
+/// Kill-and-resume bit-identity at a given world size, across every
+/// optimizer, replicated and weight-update-sharded. `cores` may be any
+/// positive count — non-power-of-two worlds shard unevenly (remainder
+/// shards) and must still round-trip exactly.
+fn assert_kill_resume_bit_identical(cores: usize) {
     let opts: [(&str, OptChoice); 3] = [
         ("sgd", OptChoice::Sgd { lr: 0.05, momentum: 0.9 }),
         ("adam", OptChoice::Adam { cfg: AdamConfig::default(), lr: 1e-3 }),
@@ -47,11 +54,11 @@ fn kill_and_resume_is_bit_identical_for_every_optimizer() {
     ];
     for (name, opt) in opts {
         for wus in [false, true] {
-            let tag = format!("resume_{name}_{}", if wus { "wus" } else { "rep" });
+            let tag = format!("resume_{cores}c_{name}_{}", if wus { "wus" } else { "rep" });
 
             // Uninterrupted run, checkpointing as it goes.
             let full_dir = scratch_dir(&format!("{tag}_full"));
-            let mut cfg = TrainConfig::quick("transformer", 4, 12);
+            let mut cfg = TrainConfig::quick("transformer", cores, 12);
             cfg.opt = opt;
             cfg.use_wus = wus;
             cfg.checkpoint_every = 4;
@@ -96,7 +103,20 @@ fn kill_and_resume_is_bit_identical_for_every_optimizer() {
 }
 
 #[test]
-fn chip_death_triggers_elastic_restart_on_half_the_cores() {
+fn kill_and_resume_is_bit_identical_for_every_optimizer() {
+    assert_kill_resume_bit_identical(4);
+}
+
+#[test]
+fn kill_and_resume_is_bit_identical_on_a_non_power_of_two_world() {
+    // Three workers: the world size the old power-of-two stack rejected
+    // outright. WUS shards unevenly here (remainder shards), and the
+    // resume must still reproduce the uninterrupted run bit for bit.
+    assert_kill_resume_bit_identical(3);
+}
+
+#[test]
+fn chip_death_triggers_elastic_restart_on_the_survivors() {
     let dir = scratch_dir("death");
     let mut cfg = TrainConfig::quick("transformer", 4, 10);
     cfg.checkpoint_every = 2;
@@ -106,10 +126,11 @@ fn chip_death_triggers_elastic_restart_on_half_the_cores() {
 
     // Incarnation 1 runs steps 1..=5 (the death strikes mid-step 6),
     // rolls back to the step-4 checkpoint, and incarnation 2 replays
-    // 5..=10 on 2 cores: 11 executed steps, 10 useful, 1 lost.
+    // 5..=10 on exactly the 3 survivors — not a power-of-two halving:
+    // 11 executed steps, 10 useful, 1 lost.
     assert_eq!(rep.restores, 1);
     assert_eq!(rep.lost_steps, 1);
-    assert_eq!(rep.final_cores, 2);
+    assert_eq!(rep.final_cores, 3);
     assert_eq!(rep.step_losses.len(), 11);
     assert!((rep.goodput - 10.0 / 11.0).abs() < 1e-12, "goodput {}", rep.goodput);
     // Checkpoints: steps 2, 4 before the death; 6, 8, 10 after.
@@ -118,17 +139,98 @@ fn chip_death_triggers_elastic_restart_on_half_the_cores() {
 }
 
 #[test]
+fn consecutive_deaths_walk_the_world_down_one_survivor_at_a_time() {
+    // 5 workers, two deaths: 5 → 4 → 3. Every intermediate world is a
+    // valid world; nothing rounds to a power of two.
+    let dir = scratch_dir("ladder");
+    let mut cfg = TrainConfig::quick("transformer", 5, 12);
+    cfg.checkpoint_every = 3;
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.faults = Some(FaultTrace {
+        name: "two-deaths".into(),
+        ckpt_every_steps: 0,
+        restore_seconds: 0.0,
+        events: vec![
+            FaultEvent { step: 5, chip: 4, kind: FaultKind::Death },
+            FaultEvent { step: 9, chip: 3, kind: FaultKind::Death },
+        ],
+    });
+    let rep = train(&cfg).unwrap();
+    assert_eq!(rep.restores, 2);
+    assert_eq!(rep.final_cores, 3);
+    // Death mid-step 5 rolls back to step 3 (1 lost), mid-step 9 rolls
+    // back to step 6 (2 lost): 12 useful + 3 replayed = 15 executed.
+    assert_eq!(rep.lost_steps, 3);
+    assert_eq!(rep.step_losses.len(), 15);
+    assert!((rep.goodput - 12.0 / 15.0).abs() < 1e-12, "goodput {}", rep.goodput);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn death_without_any_checkpoint_replays_from_scratch() {
     let mut cfg = TrainConfig::quick("transformer", 4, 6);
     cfg.faults = Some(death_at(4, 0));
     let rep = train(&cfg).unwrap();
-    // 3 steps lost (no durable checkpoint existed), full replay on 2
-    // cores from a fresh init: 3 + 6 executed, 6 useful.
+    // 3 steps lost (no durable checkpoint existed), full replay on the
+    // 3 survivors from a fresh init: 3 + 6 executed, 6 useful.
     assert_eq!(rep.restores, 1);
     assert_eq!(rep.lost_steps, 3);
-    assert_eq!(rep.final_cores, 2);
+    assert_eq!(rep.final_cores, 3);
     assert_eq!(rep.step_losses.len(), 9);
     assert!((rep.goodput - 6.0 / 9.0).abs() < 1e-12, "goodput {}", rep.goodput);
+}
+
+#[test]
+fn torn_async_write_never_corrupts_the_durable_checkpoint() {
+    use tpu_pod_train::checkpoint;
+    use tpu_pod_train::models::proxy::proxy_dims;
+    use tpu_pod_train::runtime::param_specs_for;
+
+    let dir = scratch_dir("torn");
+    let mut cfg = TrainConfig::quick("transformer", 3, 8);
+    cfg.checkpoint_every = 4;
+    cfg.checkpoint_dir = Some(dir.clone());
+    let rep = train(&cfg).unwrap();
+    assert_eq!(rep.checkpoints, vec![4, 8]);
+
+    // The async writer publishes via tmp-file + atomic rename: a clean
+    // run leaves no `.tmp` litter behind.
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let p = entry.unwrap().path();
+        assert!(
+            p.extension().map(|e| e != "tmp").unwrap_or(true),
+            "leftover tmp file {p:?} — publish must be tmp+rename"
+        );
+    }
+
+    // Simulate a crash mid-write of the *next* save: a truncated `.tmp`
+    // sitting beside the durable file, exactly what a torn write leaves.
+    let durable = checkpoint_path(&dir, 8);
+    let bytes = std::fs::read(&durable).unwrap();
+    let torn = checkpoint::tmp_path(&durable);
+    std::fs::write(&torn, &bytes[..bytes.len() / 2]).unwrap();
+
+    // The durable checkpoint is untouched by the torn write…
+    let specs = param_specs_for(&proxy_dims("transformer").unwrap());
+    assert_eq!(checkpoint::peek_step(&durable).unwrap(), 8);
+    let st = checkpoint::load(&durable, &specs).unwrap();
+    assert_eq!(st.step, 8);
+    // …and the torn half-file itself is detectably invalid, so nothing
+    // can mistake it for a checkpoint.
+    assert!(
+        checkpoint::load(&torn, &specs).is_err(),
+        "a truncated tmp file must never load as a valid checkpoint"
+    );
+
+    // Resuming from the durable file still works with the torn tmp
+    // sitting in the directory.
+    let mut res = cfg.clone();
+    res.steps = 10;
+    res.resume = Some(durable);
+    let resumed = train(&res).unwrap();
+    assert_eq!(resumed.resumed_from, 8);
+    assert_eq!(resumed.step_losses.len(), 2);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
