@@ -9,6 +9,7 @@
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
 use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
+use tpu_pod_train::metrics::TraceSink;
 use tpu_pod_train::optim::AdamConfig;
 use tpu_pod_train::runtime::BackendChoice;
 use tpu_pod_train::util::cli::Cli;
@@ -36,6 +37,13 @@ fn main() -> anyhow::Result<()> {
         image_alpha: 2.0,
         quality_target: Some(0.85),
         warmup_steps: 0,
+        checkpoint_every: 0,
+        checkpoint_dir: None,
+        resume: None,
+        faults: None,
+        kill_at: 0,
+        exec_threads: 1,
+        trace: TraceSink::disabled(),
     };
     println!("== e2e_train: {} on {} cores, {} steps ==", cfg.model, cfg.cores, cfg.steps);
     let rep = train(&cfg)?;

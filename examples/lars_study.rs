@@ -7,6 +7,7 @@
 
 use tpu_pod_train::benchkit::Table;
 use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
+use tpu_pod_train::metrics::TraceSink;
 use tpu_pod_train::optim::{LarsConfig, LarsVariant};
 use tpu_pod_train::runtime::BackendChoice;
 
@@ -32,6 +33,13 @@ fn run(variant: LarsVariant, momentum: f32, lr: f32) -> (Option<usize>, f64) {
         image_alpha: 0.3,
         quality_target: Some(0.70),
         warmup_steps: 80,
+        checkpoint_every: 0,
+        checkpoint_dir: None,
+        resume: None,
+        faults: None,
+        kill_at: 0,
+        exec_threads: 1,
+        trace: TraceSink::disabled(),
     };
     let rep = train(&cfg).expect("train failed");
     let best = rep.evals.iter().map(|e| e.accuracy).fold(0.0, f64::max);

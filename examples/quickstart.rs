@@ -5,6 +5,7 @@
 //!   cargo run --release --example quickstart
 
 use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
+use tpu_pod_train::metrics::TraceSink;
 use tpu_pod_train::optim::AdamConfig;
 use tpu_pod_train::runtime::BackendChoice;
 
@@ -25,6 +26,13 @@ fn main() -> anyhow::Result<()> {
         image_alpha: 2.0,
         quality_target: Some(0.80),
         warmup_steps: 0,
+        checkpoint_every: 0,
+        checkpoint_dir: None,
+        resume: None,
+        faults: None,
+        kill_at: 0,
+        exec_threads: 1,
+        trace: TraceSink::disabled(),
     };
     println!("== tpu-pod-train quickstart ==");
     println!("model {}, {} cores, wus on, pipelined 2-D gradient summation", cfg.model, cfg.cores);

@@ -38,6 +38,7 @@ pub use audit::{run_fault_audit, AuditPoint, FaultAuditOptions, FaultAuditReport
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::{train, TrainConfig};
+use crate::metrics::{AttrVal, TraceSink, TRACK_CALIBRATE};
 use crate::models::proxy::{proxy_dims, ProxyDims};
 use crate::models::registry::{model, Layout};
 use crate::simulator::{simulate, SimOptions};
@@ -59,6 +60,8 @@ pub struct LiveGridOptions {
     /// Relative slack for every trend comparison (0.35 = 35%).
     pub tolerance: f64,
     pub seed: u64,
+    /// Trace sink for per-point `calibrate.*` spans (disabled = no-op).
+    pub trace: TraceSink,
 }
 
 impl Default for LiveGridOptions {
@@ -73,6 +76,7 @@ impl Default for LiveGridOptions {
             batch_mults: vec![1, 2, 4],
             tolerance: 0.35,
             seed: 0,
+            trace: TraceSink::disabled(),
         }
     }
 }
@@ -292,6 +296,32 @@ pub fn trend_disagreements(
     out
 }
 
+/// Load the fitted compute coefficient from a `sweep --live` calibration
+/// report on disk (`sweep --costs-from FILE`). Errors name the file and
+/// what was wrong: not JSON, not a live-calibration report, or a missing
+/// or non-positive `fitted_gflops`.
+pub fn fitted_gflops_from_file(path: &str) -> Result<f64> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("cannot read calibration file {path}: {e}"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("{path} is not JSON: {e}"))?;
+    match j.get("report").and_then(Json::as_str) {
+        Some("live_calibration") => {}
+        _ => {
+            return Err(anyhow!(
+                "{path} is not a live-calibration report (expected report=\"live_calibration\")"
+            ))
+        }
+    }
+    let g = j
+        .get("fitted_gflops")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("{path} has no fitted_gflops field"))?;
+    if !g.is_finite() || g <= 0.0 {
+        return Err(anyhow!("{path}: fitted_gflops {g} is not a positive finite coefficient"));
+    }
+    Ok(g)
+}
+
 fn median(mut xs: Vec<f64>) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -326,6 +356,7 @@ pub fn run_live_calibration(opts: &LiveGridOptions) -> Result<CalibrationReport>
     let base_order: Vec<(String, usize)> =
         dims.iter().map(|(n, d)| (n.clone(), d.batch_per_core)).collect();
 
+    let mut tl = opts.trace.local(TRACK_CALIBRATE, 0);
     let mut points = Vec::new();
     let mut fits = Vec::new();
     for (name, d) in &dims {
@@ -333,11 +364,27 @@ pub fn run_live_calibration(opts: &LiveGridOptions) -> Result<CalibrationReport>
             let batch = d.batch_per_core * mult;
             // Two runs, keep the faster: a one-off host stall in either
             // run cannot manufacture a trend violation.
+            let t_live = tl.start();
             let a = live_point(opts, name, batch)?;
             let b = live_point(opts, name, batch)?;
             let live = if a.0 <= b.0 { a } else { b };
+            tl.span("calibrate.live_point", t_live, || {
+                vec![
+                    ("family", AttrVal::Str(name.clone())),
+                    ("batch_per_core", AttrVal::from(batch)),
+                    ("live_step_s", AttrVal::Num(live.0)),
+                ]
+            });
+            let t_sim = tl.start();
             let (sim_compute, sim_gradsum, sim_update, sim_step) =
                 sim_point(name, opts.cores, batch)?;
+            tl.span("calibrate.sim_point", t_sim, || {
+                vec![
+                    ("family", AttrVal::Str(name.clone())),
+                    ("batch_per_core", AttrVal::from(batch)),
+                    ("sim_step_s", AttrVal::Num(sim_step)),
+                ]
+            });
             points.push(LivePoint {
                 family: name.clone(),
                 batch_per_core: batch,
@@ -446,6 +493,42 @@ mod tests {
         let d = trend_disagreements(&points, &order(), 0.35);
         assert_eq!(d.len(), 1, "{d:?}");
         assert!(d[0].contains("ordering"), "{}", d[0]);
+    }
+
+    #[test]
+    fn costs_from_file_roundtrip_and_rejections() {
+        let dir = std::env::temp_dir().join(format!("tpt-costs-from-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("cal.json");
+        std::fs::write(
+            &good,
+            obj(vec![
+                ("report", Json::from("live_calibration")),
+                ("fitted_gflops", Json::from(12.5)),
+            ])
+            .dump(),
+        )
+        .unwrap();
+        let g = fitted_gflops_from_file(good.to_str().unwrap()).unwrap();
+        assert_eq!(g, 12.5);
+
+        let missing = dir.join("absent.json");
+        assert!(fitted_gflops_from_file(missing.to_str().unwrap()).is_err());
+        let wrong = dir.join("wrong.json");
+        std::fs::write(&wrong, obj(vec![("report", Json::from("sweep"))]).dump()).unwrap();
+        assert!(fitted_gflops_from_file(wrong.to_str().unwrap()).is_err());
+        let bad = dir.join("bad.json");
+        std::fs::write(
+            &bad,
+            obj(vec![
+                ("report", Json::from("live_calibration")),
+                ("fitted_gflops", Json::from(0.0)),
+            ])
+            .dump(),
+        )
+        .unwrap();
+        assert!(fitted_gflops_from_file(bad.to_str().unwrap()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -260,14 +260,28 @@ pub fn save_atomic(path: impl AsRef<Path>, specs: &[ParamSpec], state: &TrainSta
 /// instead of queueing unbounded snapshots. Call [`drain`](Self::drain)
 /// before exiting — including crash-injection exits — so the last queued
 /// checkpoint is durable.
+///
+/// With a trace sink ([`AsyncWriter::with_trace`]) the writer thread
+/// records `ckpt.write` (streaming into `<path>.tmp`) and `ckpt.publish`
+/// (the atomic rename) spans on the checkpoint track — the window between
+/// them is exactly the crash window where only the `.tmp` exists.
 #[derive(Default)]
 pub struct AsyncWriter {
     inflight: Option<std::thread::JoinHandle<Result<()>>>,
+    trace: crate::metrics::TraceSink,
+    epoch: u32,
+    saves: u32,
 }
 
 impl AsyncWriter {
     pub fn new() -> AsyncWriter {
-        AsyncWriter { inflight: None }
+        AsyncWriter::with_trace(crate::metrics::TraceSink::disabled(), 0)
+    }
+
+    /// A writer whose saves are recorded on the trace's checkpoint track;
+    /// `epoch` is the trainer incarnation index (the trace epoch).
+    pub fn with_trace(trace: crate::metrics::TraceSink, epoch: u32) -> AsyncWriter {
+        AsyncWriter { inflight: None, trace, epoch, saves: 0 }
     }
 
     /// Queue one durable save; blocks only if the previous one is still
@@ -279,8 +293,33 @@ impl AsyncWriter {
         state: TrainState,
     ) -> Result<()> {
         self.drain()?;
-        self.inflight =
-            Some(std::thread::spawn(move || save_atomic(&path, &specs, &state)));
+        // Each save gets a short-lived local on the checkpoint track with a
+        // per-save sequence base, so events from successive writer threads
+        // order by save index regardless of merge timing.
+        let mut tl = self.trace.local_from(crate::metrics::TRACK_CKPT, self.epoch, self.saves * 8);
+        self.saves += 1;
+        self.inflight = Some(std::thread::spawn(move || {
+            use crate::metrics::AttrVal;
+            let step = state.step;
+            let file = path
+                .file_name()
+                .and_then(|f| f.to_str())
+                .unwrap_or("ckpt")
+                .to_string();
+            let tmp = tmp_path(&path);
+            let t0 = tl.start();
+            save(&tmp, &specs, &state)?;
+            tl.span("ckpt.write", t0, || {
+                vec![("step", AttrVal::from(step)), ("file", AttrVal::from(file.clone()))]
+            });
+            let t1 = tl.start();
+            std::fs::rename(&tmp, &path)
+                .with_context(|| format!("publishing {tmp:?} -> {path:?}"))?;
+            tl.span("ckpt.publish", t1, || {
+                vec![("step", AttrVal::from(step)), ("file", AttrVal::from(file))]
+            });
+            Ok(())
+        }));
         Ok(())
     }
 

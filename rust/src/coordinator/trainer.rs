@@ -29,7 +29,7 @@ use crate::collectives::{
 use crate::data::synthetic::{ImageTask, LmTask};
 use crate::evaluation::{distributed_eval, EvalChunk, EvalSharding};
 use crate::fabric::{run_spmd, Endpoint};
-use crate::metrics::StepBreakdown;
+use crate::metrics::{AttrVal, StepBreakdown, TraceLocal, TraceSink, TRACK_COORD, TRACK_STEP};
 use crate::models::proxy::{proxy_dims, TaskKind};
 use crate::optim::{
     adam_step, lars_step, sgd_momentum_step, AdamConfig, AdamState, LarsConfig, LarsState,
@@ -110,6 +110,12 @@ pub struct TrainConfig {
     /// for every value — the split is over disjoint output rows, never a
     /// cross-thread reduction. PJRT ignores this.
     pub exec_threads: usize,
+    /// Structured trace recorder (`--trace FILE`). The disabled sink is
+    /// free: no allocation, no clock reads, and the step loop's numerics
+    /// never depend on it, so a traced run is bit-identical to an untraced
+    /// one. Rank 0 records per-step phase spans; the coordinator records
+    /// incarnation/fault/rollback events and the final report counters.
+    pub trace: TraceSink,
 }
 
 impl TrainConfig {
@@ -153,6 +159,7 @@ impl TrainConfig {
             faults: None,
             kill_at: 0,
             exec_threads: 1,
+            trace: TraceSink::disabled(),
         }
     }
 }
@@ -208,6 +215,9 @@ struct IncarnationPlan {
     /// Global steps already completed before this incarnation.
     start: usize,
     stop_before: Option<usize>,
+    /// Incarnation index — the trace epoch, so a restarted rank-0 step
+    /// loop gets its own ordering namespace on the same track.
+    epoch: u32,
 }
 
 /// Static per-run context shared (read-only) by all workers.
@@ -633,8 +643,21 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let mut report = TrainReport { resumed_from, goodput: 1.0, ..Default::default() };
     let mut executed = 0usize;
     let mut completed;
+    // Coordinator-track trace timeline: incarnation boundaries, fault and
+    // rollback instants, and (at the end) the report's accounting counters
+    // that `trace summarize` cross-checks span sums against.
+    let mut co = cfg.trace.local(TRACK_COORD, 0);
+    let mut incarnation: u32 = 0;
 
     loop {
+        co.instant("incarnation.start", || {
+            vec![
+                ("incarnation", AttrVal::from(incarnation as usize)),
+                ("start_step", AttrVal::from(start)),
+                ("world", AttrVal::from(world)),
+                ("resumed", AttrVal::Int(resume.is_some() as i64)),
+            ]
+        });
         // Next fault event that can kill this incarnation (an event aimed
         // at an already-dead rank, or at already-replayed steps, skips).
         let mut stop: Option<(usize, usize)> = None;
@@ -657,6 +680,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             resume: resume.clone(),
             start,
             stop_before: stop.map(|(_, s)| s),
+            epoch: incarnation,
         };
         let ctx = build_ctx(cfg, plan)?;
         let results = Mutex::new(Vec::<(usize, TrainReport)>::new());
@@ -691,6 +715,19 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         report.restores += 1;
         let (ckpt_step, ckpt_path) = latest_checkpoint(cfg, completed);
         report.lost_steps += (completed - ckpt_step) as u64;
+        let fault_name = match fatal[idx].kind {
+            FaultKind::Death => "fault.death",
+            _ => "fault.preemption",
+        };
+        co.instant(fault_name, || {
+            vec![("step", AttrVal::from(fstep)), ("chip", AttrVal::from(fatal[idx].chip))]
+        });
+        co.instant("rollback", || {
+            vec![
+                ("to_step", AttrVal::from(ckpt_step)),
+                ("lost_steps", AttrVal::from(completed - ckpt_step)),
+            ]
+        });
         if fatal[idx].kind == FaultKind::Death {
             if world == 1 {
                 bail!("fault trace killed the last worker at step {fstep}");
@@ -700,11 +737,27 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         resume = ckpt_path;
         start = ckpt_step;
         fi = idx + 1;
+        incarnation += 1;
     }
 
     let useful = completed.saturating_sub(resumed_from as usize);
     report.goodput = if executed == 0 { 1.0 } else { useful as f64 / executed as f64 };
     report.final_cores = world;
+    // Embed the final accounting in the trace itself: `trace summarize`
+    // re-derives these from the span durations and fails on disagreement.
+    co.counter("report.steps", report.breakdown.steps as f64);
+    co.counter("report.input_s", report.breakdown.input_s);
+    co.counter("report.compute_s", report.breakdown.compute_s);
+    co.counter("report.gradsum_s", report.breakdown.gradsum_s);
+    co.counter("report.update_s", report.breakdown.update_s);
+    co.counter("report.exec_s", report.exec_s);
+    co.counter("report.fwd_s", report.fwd_s);
+    co.counter("report.bwd_s", report.bwd_s);
+    co.counter("report.goodput", report.goodput);
+    co.counter("report.lost_steps", report.lost_steps as f64);
+    co.counter("report.restores", report.restores as f64);
+    co.counter("report.checkpoints", report.checkpoints.len() as f64);
+    co.counter("report.final_cores", world as f64);
     Ok(report)
 }
 
@@ -806,10 +859,21 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
     // steps (on TPU this is the fixed on-device staging area; reallocating
     // it every step pays page-fault zeroing on the whole gradient set).
     let mut gradsum_ws = GradSumWorkspace::default();
+    // Rank 0 records the per-step phase spans (the report is the rank-0
+    // view, so its accounting and these spans must agree); other ranks
+    // carry a disabled local, which records nothing.
+    let mut tr = if ep.rank == 0 {
+        cfg.trace.local(TRACK_STEP, ctx.plan.epoch)
+    } else {
+        TraceLocal::disabled()
+    };
     // Rank 0's background checkpoint writer: saves stream to `<file>.tmp`
     // on a writer thread and publish via atomic rename while the step loop
     // keeps training; at most one save is in flight (see checkpoint docs).
-    let mut ckpt_writer = checkpoint::AsyncWriter::new();
+    let mut ckpt_writer = checkpoint::AsyncWriter::with_trace(
+        if ep.rank == 0 { cfg.trace.clone() } else { TraceSink::disabled() },
+        ctx.plan.epoch,
+    );
     let wall = Timer::start();
 
     // ---- nested train-and-eval tight loop (§2) ---------------------------
@@ -821,9 +885,10 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
         }
         // Injected stragglers stretch the step but never kill it — the
         // synchronous SPMD step is gated on the slowest live participant.
+        let mut straggled = false;
         if let Some(trace) = &cfg.faults {
             let s = step as u64;
-            let straggled = trace.events.iter().any(|ev| {
+            straggled = trace.events.iter().any(|ev| {
                 matches!(ev.kind, FaultKind::Slowdown { steps, .. }
                     if ev.chip < world && s >= ev.step && s < ev.step.saturating_add(steps))
             });
@@ -831,6 +896,7 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
                 report.straggled_steps += 1;
             }
         }
+        let t_step = tr.start();
 
         // -- input pipeline --
         let t_in = Timer::start();
@@ -844,14 +910,31 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
                 StepBatch::Image { images: b.images, labels: b.labels }
             }
         };
-        report.breakdown.input_s += t_in.secs();
+        let d_in = t_in.secs();
+        report.breakdown.input_s += d_in;
+        tr.span_at("trainer.input", t_step, d_in, || vec![("step", AttrVal::from(step))]);
 
         // -- fwd/bwd on the backend executor --
+        // The span reuses the exact Timer duration the breakdown adds, so
+        // span sums reproduce report accounting; fwd/bwd sub-spans come
+        // from the executor's cumulative phase clock deltas (which also
+        // advance during eval — the eval span accounts for those).
+        let (pf0, pb0) =
+            if tr.is_enabled() { backend.phase_seconds() } else { (0.0, 0.0) };
+        let t_c0 = tr.start();
         let t_c = Timer::start();
         let (loss, mut grads) = backend.train_step(&params, &batch)?;
-        report.breakdown.compute_s += t_c.secs();
+        let d_c = t_c.secs();
+        report.breakdown.compute_s += d_c;
+        if tr.is_enabled() {
+            let (pf1, pb1) = backend.phase_seconds();
+            tr.span_at("trainer.compute", t_c0, d_c, || vec![("step", AttrVal::from(step))]);
+            tr.span_at("trainer.fwd", t_c0, pf1 - pf0, Vec::new);
+            tr.span_at("trainer.bwd", t_c0 + (pf1 - pf0), pb1 - pb0, Vec::new);
+        }
 
         // -- gradient summation (§2) --
+        let t_g0 = tr.start();
         let t_g = Timer::start();
         match cfg.gradsum {
             GradSumMode::Serial => gradsum_serial(ep, &place, &mut grads),
@@ -865,9 +948,12 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
                 *x *= scale;
             }
         }
-        report.breakdown.gradsum_s += t_g.secs();
+        let d_g = t_g.secs();
+        report.breakdown.gradsum_s += d_g;
+        tr.span_at("trainer.gradsum", t_g0, d_g, || vec![("step", AttrVal::from(step))]);
 
         // -- weight update (replicated or WUS, §2 Fig. 4) --
+        let t_u0 = tr.start();
         let t_u = Timer::start();
         let lrf = cfg.lr_factor(step);
         match &mut replicated {
@@ -914,12 +1000,20 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
                 }
             }
         }
-        report.breakdown.update_s += t_u.secs();
+        let d_u = t_u.secs();
+        report.breakdown.update_s += d_u;
+        tr.span_at("trainer.update", t_u0, d_u, || vec![("step", AttrVal::from(step))]);
         report.breakdown.steps += 1;
         report.step_losses.push(loss);
 
         // -- distributed evaluation (§2) --
         if cfg.eval_every > 0 && step % cfg.eval_every == 0 {
+            // Eval runs the same executor, advancing its cumulative fwd/bwd
+            // clocks; the deltas ride the eval span so `trace summarize`
+            // can still reconcile span sums with `report.fwd_s`/`bwd_s`.
+            let (ef0, eb0) =
+                if tr.is_enabled() { backend.phase_seconds() } else { (0.0, 0.0) };
+            let t_e0 = tr.start();
             let sharding = EvalSharding::new(cfg.eval_examples, world, ctx.batch);
             let res = distributed_eval(ep, &group, &sharding, |chunk| {
                 let eb = eval_batch_for(ctx, chunk, &lm_task, &img_task);
@@ -927,10 +1021,27 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
                     .eval_step(&params, &eb, &chunk.mask)
                     .expect("eval execution failed")
             });
+            if tr.is_enabled() {
+                let (ef1, eb1) = backend.phase_seconds();
+                tr.span("trainer.eval", t_e0, || {
+                    vec![
+                        ("step", AttrVal::from(step)),
+                        ("accuracy", AttrVal::Num(res.accuracy)),
+                        ("exec_fwd_s", AttrVal::Num(ef1 - ef0)),
+                        ("exec_bwd_s", AttrVal::Num(eb1 - eb0)),
+                    ]
+                });
+            }
             report.evals.push(EvalPoint { step, loss: res.loss, accuracy: res.accuracy });
             if let Some(target) = cfg.quality_target {
                 if res.accuracy >= target && report.converged_at.is_none() {
                     report.converged_at = Some(step);
+                    tr.span("trainer.step", t_step, || {
+                        vec![
+                            ("step", AttrVal::from(step)),
+                            ("straggled", AttrVal::Int(straggled as i64)),
+                        ]
+                    });
                     break; // synchronous: all workers see the same metric
                 }
             }
@@ -941,6 +1052,7 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
             // Every rank contributes its data-RNG state (u16 limbs ride
             // the f32 fabric exactly) and, under WUS, its optimizer shard;
             // rank 0 then writes one self-contained v2 file.
+            let t_s0 = tr.start();
             let mine = encode_rng_state(&data_rng.state());
             let gathered = all_gather_concat(ep, &group, &mine);
             let rng_states: Vec<RngState> = (0..world)
@@ -958,15 +1070,28 @@ fn worker(ep: &mut Endpoint, ctx: &RunCtx) -> Result<TrainReport> {
                     rng: rng_states,
                     world,
                 };
+                tr.span("trainer.ckpt.snapshot", t_s0, || {
+                    vec![("step", AttrVal::from(step))]
+                });
                 // The owned snapshot goes to the writer thread; training
                 // continues while the save streams to `<path>.tmp` and is
-                // published by atomic rename.
+                // published by atomic rename. An enqueue that waits here is
+                // back-pressure from the previous save — the span makes
+                // that stall visible.
+                let t_q0 = tr.start();
                 ckpt_writer
                     .enqueue(path.clone(), ctx.specs.clone(), state)
                     .map_err(|e| anyhow!("checkpoint {}: {e}", path.display()))?;
+                tr.span("trainer.ckpt.enqueue", t_q0, || {
+                    vec![("step", AttrVal::from(step))]
+                });
                 report.checkpoints.push(step as u64);
             }
         }
+
+        tr.span("trainer.step", t_step, || {
+            vec![("step", AttrVal::from(step)), ("straggled", AttrVal::Int(straggled as i64))]
+        });
 
         // -- crash injection (CI crash-resume smoke) --
         if cfg.kill_at == step && ep.rank == 0 {

@@ -61,6 +61,24 @@ impl Device {
     pub fn update_time(&self, params: f64, bytes_per_param: f64) -> f64 {
         params * bytes_per_param / self.hbm_bw
     }
+
+    /// A [`TPU_V3`]-shaped device whose dense-batch compute coefficient is
+    /// the given achieved forward-GFLOP/s (the `fitted_gflops` a live
+    /// calibration reports: forward FLOPs over full fwd+bwd seconds, the
+    /// 3x forward-FLOPs convention of `costs::ComputePhase` folded in).
+    /// The batch-starvation curve ([`Device::efficiency_at`]) and the HBM
+    /// roofline keep their TPU-v3 shape — only the dense compute ceiling
+    /// is rescaled, so `with_compute_gflops` of TPU-v3's own dense
+    /// coefficient reproduces [`TPU_V3`] exactly.
+    pub fn with_compute_gflops(gflops: f64) -> Device {
+        Device { peak_flops: 3.0 * gflops * 1e9 / TPU_V3.mxu_efficiency, ..TPU_V3 }
+    }
+
+    /// Dense-limit achieved forward-GFLOP/s of this device (the inverse of
+    /// [`Device::with_compute_gflops`]).
+    pub fn dense_fwd_gflops(&self) -> f64 {
+        self.peak_flops * self.mxu_efficiency / 3.0 / 1e9
+    }
 }
 
 /// Optimizer HBM traffic per parameter (f32 state).
@@ -157,6 +175,22 @@ mod tests {
         // Memory-bound case.
         let t = TPU_V3.compute_time(1e6, 45e9);
         assert!((t - 0.1).abs() < 1e-6);
+    }
+
+    /// `with_compute_gflops` built from TPU-v3's own dense coefficient is
+    /// TPU-v3 again: the fitted-GFLOP/s preset only rescales the compute
+    /// ceiling, it never warps the starvation curve or the HBM roofline.
+    #[test]
+    fn fitted_gflops_preset_roundtrip() {
+        let d = Device::with_compute_gflops(TPU_V3.dense_fwd_gflops());
+        assert!((d.peak_flops - TPU_V3.peak_flops).abs() / TPU_V3.peak_flops < 1e-12);
+        assert_eq!(d.hbm_bw, TPU_V3.hbm_bw);
+        assert_eq!(d.mxu_efficiency, TPU_V3.mxu_efficiency);
+        // Halving the fitted coefficient exactly doubles dense compute time.
+        let half = Device::with_compute_gflops(TPU_V3.dense_fwd_gflops() / 2.0);
+        let t1 = TPU_V3.compute_time(1e12, 0.0);
+        let t2 = half.compute_time(1e12, 0.0);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9, "{t2} vs {t1}");
     }
 
     /// Paper §2: ResNet-50 LARS weight update ≈ 6% of step @ 2048 cores,

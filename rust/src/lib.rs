@@ -58,7 +58,27 @@
 //! wall-clock next to the simulator's attribution, gates on trend
 //! agreement (batch-scaling monotonicity, cross-family ordering; nonzero
 //! exit on disagreement) and fits the live compute coefficient a
-//! measured `StepCostModel` would use.
+//! measured `StepCostModel` would use; `sweep --costs-from` feeds that
+//! fitted GFLOP/s back into the simulator's compute pricing, and
+//! `sweep --grid --marginals` reduces a grid report to the per-axis
+//! marginal-speedup table (what each §2 toggle bought at each scale).
+//!
+//! # Observability
+//!
+//! Every timed phase records into one structured tracing layer
+//! ([`metrics::TraceSink`]): the trainer step loop (input/compute/
+//! fwd/bwd/gradsum/update/eval spans per step, rank 0), the async
+//! checkpoint writer (write/publish spans), fault handling
+//! (incarnation/death/preemption/rollback instants), the sweep worker
+//! pool (per-point spans with queue-wait attribution + cache-hit
+//! counters) and `sweep --live` calibration points. `--trace FILE` on
+//! `train` and `sweep` exports JSON-lines or Chrome trace-event format
+//! (load at ui.perfetto.dev), and `trace summarize` reduces a trace to
+//! per-phase p50/p99 tables *and cross-checks it against the run's own
+//! `TrainReport` accounting* (nonzero exit on disagreement). Tracing
+//! off is bit-identical to the layer not existing; traced runs are
+//! deterministic modulo timestamps. See `rust/src/metrics/README.md`
+//! for the schema and span taxonomy.
 //!
 //! The test matrix:
 //! * unit tests inside every module (the substrate contracts),
@@ -81,10 +101,18 @@
 //!   contract end to end: `--exec-threads N` bit-identical to serial for
 //!   every optimizer (replicated and WUS), seeded threaded runs
 //!   reproducible, executor time split into fwd/bwd,
-//! * `rust/tests/bench_backend.rs` + `rust/tests/bench_sweep.rs` — the
-//!   perf trajectory: regenerate `BENCH_backend.json` (naive/tiled/
-//!   threaded executor matrix, bit-identity cross-checked) and
-//!   `BENCH_sweep.json` on every `cargo test` run.
+//! * `rust/tests/trace.rs` — the tracing layer's contracts end to end:
+//!   traced faulted runs deterministic modulo timestamps
+//!   (`canonical_dump` byte-identity), tracing never perturbs the
+//!   numerics (disabled vs enabled bit-identical for every optimizer,
+//!   replicated and WUS), JSONL/Chrome round-trips pass the
+//!   `summarize` accounting cross-check, tampered traces fail it,
+//! * `rust/tests/bench_backend.rs` + `rust/tests/bench_sweep.rs` +
+//!   `rust/tests/bench_trace.rs` — the perf trajectory: regenerate
+//!   `BENCH_backend.json` (naive/tiled/threaded executor matrix,
+//!   bit-identity cross-checked), `BENCH_sweep.json`, and
+//!   `BENCH_trace.json` (tracing-overhead pair, bit-identity
+//!   cross-checked) on every `cargo test` run.
 
 pub mod benchkit;
 pub mod calibrate;

@@ -15,20 +15,26 @@
 //!                Fig. 9-style table).
 //! * `faults`   — generate a seeded fault/straggler trace for `train
 //!                --faults` and `sweep --faults` (goodput reporting).
+//! * `trace`    — summarize a `--trace` file: per-phase p50/p99 tables,
+//!                goodput timeline, cache-hit rates, and the accounting
+//!                cross-check against the TrainReport counters (nonzero
+//!                exit on disagreement).
 //! * `info`     — list artifacts, models and device constants.
 
 use tpu_pod_train::benchkit::Table;
 use tpu_pod_train::calibrate::{
-    run_fault_audit, run_live_calibration, FaultAuditOptions, LiveGridOptions,
+    fitted_gflops_from_file, run_fault_audit, run_live_calibration, FaultAuditOptions,
+    LiveGridOptions,
 };
 use tpu_pod_train::config::Config;
 use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
+use tpu_pod_train::metrics::{summarize, Trace, TraceSink, DEFAULT_TOLERANCE};
 use tpu_pod_train::models::{all_models, model};
 use tpu_pod_train::optim::{AdamConfig, LarsConfig, LarsVariant};
 use tpu_pod_train::runtime::{BackendChoice, Manifest};
 use tpu_pod_train::scenario::{
-    compare_reports, AblationGrid, BatchSchedule, FaultTrace, GradSumChoice, ScalingScenario,
-    SweepReport, SweepRunner,
+    compare_reports, grid_marginals, AblationGrid, BatchSchedule, FaultTrace, GradSumChoice,
+    ScalingScenario, SweepReport, SweepRunner,
 };
 use tpu_pod_train::simulator::{simulate, SimOptions};
 use tpu_pod_train::util::cli::Cli;
@@ -43,11 +49,12 @@ fn main() {
         "sweep" => cmd_sweep(&rest),
         "submit" => cmd_submit(&rest),
         "faults" => cmd_faults(&rest),
+        "trace" => cmd_trace(&rest),
         "info" => cmd_info(),
         _ => {
             eprintln!(
                 "tpu-pod-train — MLPerf-0.6 TPU-v3 pod reproduction\n\n\
-                 Usage: tpu-pod-train <train|simulate|sweep|submit|faults|info> [options]\n\
+                 Usage: tpu-pod-train <train|simulate|sweep|submit|faults|trace|info> [options]\n\
                  Run a subcommand with --help for its options."
             );
             2
@@ -75,6 +82,11 @@ fn cmd_train(tokens: &[String]) -> i32 {
         .opt("checkpoint-dir", "", "directory for ckpt-step*.ckpt files")
         .opt("resume", "", "checkpoint file to resume from")
         .opt("faults", "", "fault/straggler trace JSON (chip = worker rank)")
+        .opt(
+            "trace",
+            "",
+            "write a structured trace here (.jsonl = JSON-lines, else Chrome/Perfetto format)",
+        )
         .opt("kill-at", "0", "abort the process (exit 3) after this step (CI smoke; 0 = never)")
         .opt(
             "exec-threads",
@@ -143,6 +155,9 @@ fn cmd_train(tokens: &[String]) -> i32 {
             }
         }
     };
+    let trace_path = get_s("trace", "");
+    let trace_sink =
+        if trace_path.is_empty() { TraceSink::disabled() } else { TraceSink::enabled() };
     let cfg = TrainConfig {
         model: get_s("model", "transformer"),
         cores: a.get_usize("cores", file_cfg.usize_or("train.cores", 4)),
@@ -169,6 +184,7 @@ fn cmd_train(tokens: &[String]) -> i32 {
         faults,
         kill_at: a.get_usize("kill-at", 0),
         exec_threads: a.get_usize("exec-threads", 1),
+        trace: trace_sink.clone(),
     };
     if cfg.cores == 0 {
         eprintln!("--cores must be at least 1 (any positive count; no power-of-two requirement)");
@@ -187,7 +203,20 @@ fn cmd_train(tokens: &[String]) -> i32 {
         cfg.use_wus,
         cfg.gradsum
     );
-    match train(&cfg) {
+    let result = train(&cfg);
+    // Export the trace even when training failed: a partial trace of a
+    // crashed run is exactly what the postmortem needs.
+    if !trace_path.is_empty() {
+        let t = trace_sink.drain();
+        match t.write(std::path::Path::new(&trace_path)) {
+            Ok(()) => eprintln!("trace written to {trace_path} ({} events)", t.len()),
+            Err(e) => {
+                eprintln!("writing trace {trace_path}: {e}");
+                return 1;
+            }
+        }
+    }
+    match result {
         Ok(rep) => {
             println!(
                 "init {:.1}s, train wall {:.1}s, exec {:.1}s (fwd {:.1}s, bwd {:.1}s), params {}",
@@ -277,6 +306,7 @@ fn cmd_simulate(tokens: &[String]) -> i32 {
         spatial_partitioning: !a.flag("no-spatial"),
         epochs_override: None,
         layout_override: None,
+        compute_gflops: None,
     };
     let r = simulate(&m, a.get_usize("cores", 2048), &opts);
     println!("{name} @ {} cores: layout {:?}", r.cores, r.layout);
@@ -384,6 +414,16 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
         .opt("compare", "", "baseline SweepReport JSON to diff against (exit 1 on regression)")
         .opt("tolerance", "0.02", "relative benchmark-seconds regression tolerance for --compare")
         .opt("faults", "", "fault trace JSON: reprice every point under failures, report goodput")
+        .opt(
+            "costs-from",
+            "",
+            "live calibration JSON (sweep --live --out): price compute at its fitted_gflops",
+        )
+        .opt(
+            "trace",
+            "",
+            "write a structured trace here (.jsonl = JSON-lines, else Chrome/Perfetto format)",
+        )
         .opt("live-steps", "12", "training steps per live calibration point (--live)")
         .opt("live-cores", "2", "data-parallel workers per live point, any positive count (--live)")
         .opt("live-threads", "1", "executor threads for --live (0 = all host threads)")
@@ -398,6 +438,7 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
         .flag("no-wus", "disable weight-update sharding")
         .flag("no-dist-eval", "use side-card evaluation")
         .flag("no-spatial", "disable spatial partitioning")
+        .flag("marginals", "with --grid: print the per-axis marginal speedup table")
         .flag("table", "print a human-readable table before the JSON report");
     let a = match cli.parse_tokens(tokens) {
         Ok(a) => a,
@@ -410,7 +451,9 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
         // Live calibration is a different engine (coordinator::train +
         // simulator attribution, see `calibrate`); the sweep axes do not
         // apply to it.
-        for f in ["grid", "serial-gradsum", "no-2d", "no-wus", "no-dist-eval", "no-spatial"] {
+        for f in
+            ["grid", "serial-gradsum", "no-2d", "no-wus", "no-dist-eval", "no-spatial", "marginals"]
+        {
             if a.flag(f) {
                 eprintln!("--{f} conflicts with --live (the live grid runs the reference trainer)");
                 return 2;
@@ -420,10 +463,18 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
             eprintln!("--compare conflicts with --live");
             return 2;
         }
+        if !a.get_or("costs-from", "").is_empty() {
+            eprintln!("--costs-from conflicts with --live (--live *produces* the calibration)");
+            return 2;
+        }
         if !a.get_or("faults", "").is_empty() {
             // `--faults TRACE --live` is the shared-trace goodput audit:
             // replay the same trace through the live trainer and the
             // simulator's price_fault_trace, gate on agreement.
+            if !a.get_or("trace", "").is_empty() {
+                eprintln!("--trace is not supported with the --faults --live audit");
+                return 2;
+            }
             return cmd_fault_audit(&a);
         }
         let defaults = LiveGridOptions::default();
@@ -433,12 +484,16 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
         } else {
             model_arg.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
         };
+        let trace_path = a.get_or("trace", "");
+        let sink =
+            if trace_path.is_empty() { TraceSink::disabled() } else { TraceSink::enabled() };
         let opts = LiveGridOptions {
             models,
             cores: a.get_usize("live-cores", defaults.cores),
             steps: a.get_usize("live-steps", defaults.steps),
             exec_threads: a.get_usize("live-threads", defaults.exec_threads),
             tolerance: a.get_f64("live-tolerance", defaults.tolerance),
+            trace: sink.clone(),
             ..defaults
         };
         if opts.cores == 0 {
@@ -456,7 +511,20 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
             opts.cores,
             opts.steps
         );
-        let rep = match run_live_calibration(&opts) {
+        let result = run_live_calibration(&opts);
+        // Written even when calibration fails: a partial trace of a crashed
+        // run is exactly the postmortem artifact.
+        if !trace_path.is_empty() {
+            let t = sink.drain();
+            match t.write(std::path::Path::new(&trace_path)) {
+                Ok(()) => eprintln!("trace written to {trace_path} ({} events)", t.len()),
+                Err(e) => {
+                    eprintln!("writing trace {trace_path}: {e}");
+                    return 1;
+                }
+            }
+        }
+        let rep = match result {
             Ok(r) => r,
             Err(e) => {
                 eprintln!("live calibration error: {e:#}");
@@ -486,6 +554,10 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
         return 0;
     }
     let grid_mode = a.flag("grid");
+    if a.flag("marginals") && !grid_mode {
+        eprintln!("--marginals requires --grid (marginals pair points across the ablation grid)");
+        return 2;
+    }
     let mut chips = Vec::new();
     for tok in a.get_or("chips", "").split(',') {
         let tok = tok.trim();
@@ -607,7 +679,34 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
         );
         scenarios.into_iter().map(|s| s.with_faults(trace.clone())).collect()
     };
-    let report = match SweepRunner::new(scenarios).run_jobs(jobs) {
+    let costs_path = a.get_or("costs-from", "");
+    let scenarios: Vec<ScalingScenario> = if costs_path.is_empty() {
+        scenarios
+    } else {
+        let gflops = match fitted_gflops_from_file(&costs_path) {
+            Ok(g) => g,
+            Err(e) => {
+                eprintln!("costs-from error: {e:#}");
+                return 2;
+            }
+        };
+        eprintln!("pricing compute at the live-fitted {gflops:.2} GFLOP/s (from {costs_path})");
+        scenarios.into_iter().map(|s| s.with_compute_gflops(gflops)).collect()
+    };
+    let trace_path = a.get_or("trace", "");
+    let sink = if trace_path.is_empty() { TraceSink::disabled() } else { TraceSink::enabled() };
+    let result = SweepRunner::new(scenarios).run_jobs_traced(jobs, &sink);
+    if !trace_path.is_empty() {
+        let t = sink.drain();
+        match t.write(std::path::Path::new(&trace_path)) {
+            Ok(()) => eprintln!("trace written to {trace_path} ({} events)", t.len()),
+            Err(e) => {
+                eprintln!("writing trace {trace_path}: {e}");
+                return 1;
+            }
+        }
+    }
+    let report = match result {
         Ok(r) => r,
         Err(e) => {
             eprintln!("sweep error: {e}");
@@ -626,6 +725,18 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
             return 1;
         }
         eprintln!("report written to {out}");
+    }
+    if a.flag("marginals") {
+        match grid_marginals(&report) {
+            Ok(m) => {
+                println!();
+                m.print();
+            }
+            Err(e) => {
+                eprintln!("marginals error: {e}");
+                return 2;
+            }
+        }
     }
     let baseline_path = a.get_or("compare", "");
     if !baseline_path.is_empty() {
@@ -729,6 +840,50 @@ fn cmd_faults(tokens: &[String]) -> i32 {
             return 1;
         }
         eprintln!("trace written to {out} ({} event(s))", trace.events.len());
+    }
+    0
+}
+
+fn cmd_trace(tokens: &[String]) -> i32 {
+    let cli = Cli::new("trace summarize FILE", "summarize a structured trace written by --trace")
+        .opt(
+            "tolerance",
+            "",
+            "relative tolerance for the accounting cross-check (default 1e-9)",
+        );
+    let a = match cli.parse_tokens(tokens) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    // `summarize` is the only verb today; keeping it explicit leaves room
+    // for `trace diff` / `trace convert` without breaking invocations.
+    let (verb, file) = match (a.positional.first(), a.positional.get(1)) {
+        (Some(v), Some(f)) if a.positional.len() == 2 => (v.as_str(), f.clone()),
+        _ => {
+            eprintln!("usage: tpu-pod-train trace summarize FILE [--tolerance T]");
+            return 2;
+        }
+    };
+    if verb != "summarize" {
+        eprintln!("unknown trace verb {verb:?} (expected \"summarize\")");
+        return 2;
+    }
+    let trace = match Trace::load(std::path::Path::new(&file)) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("loading trace {file}: {e}");
+            return 2;
+        }
+    };
+    let tol = a.get_f64("tolerance", DEFAULT_TOLERANCE);
+    let s = summarize(&trace, tol);
+    s.print();
+    if !s.ok() {
+        eprintln!("trace accounting cross-check FAILED (see checks above)");
+        return 1;
     }
     0
 }

@@ -1,0 +1,361 @@
+//! Trace serialization: JSON-lines (stable documented schema) and Chrome
+//! trace-event format (loadable in Perfetto / `chrome://tracing`), plus the
+//! auto-detecting parser the `trace summarize` CLI uses.
+//!
+//! ## JSON-lines schema (`tpu-pod-train-trace-v1`)
+//!
+//! First line is a header: `{"format":"tpu-pod-train-trace-v1"}`. Every
+//! following line is one event object:
+//!
+//! ```text
+//! {"kind":"span","name":"trainer.compute","track":0,"epoch":0,"seq":2,
+//!  "t_s":0.00121,"dur_s":0.00034,"attrs":{"step":0}}
+//! {"kind":"instant","name":"fault.death","track":1000,"epoch":0,"seq":3,
+//!  "t_s":0.5,"attrs":{"chip":2,"step":5}}
+//! {"kind":"counter","name":"report.steps","track":1000,"epoch":0,"seq":9,
+//!  "t_s":0.9,"value":8}
+//! ```
+//!
+//! `track`/`epoch`/`seq` are the deterministic ordering key (see
+//! [`super::trace`]); `t_s`/`dur_s` are f64 seconds since the sink origin
+//! and round-trip exactly (Rust's f64 `Display` is shortest-round-trip).
+//! Spans carry `dur_s`, counters carry `value`, instants carry neither.
+//!
+//! ## Chrome trace-event format
+//!
+//! `{"traceEvents":[...],"displayTimeUnit":"ms"}` with `ph:"X"` complete
+//! events (µs timestamps, fractional), `ph:"i"` thread-scoped instants,
+//! `ph:"C"` counters, and `thread_name` metadata naming each track. The
+//! ordering key is preserved in `args` as `trace_epoch`/`trace_seq` so the
+//! format parses back losslessly (tid = track).
+//!
+//! [`Trace::write`] picks the format by extension — `.jsonl` writes
+//! JSON-lines, anything else (the `--trace t.json` default) writes Chrome
+//! format. [`Trace::parse`] detects the format from content.
+
+use super::trace::{track_name, AttrVal, EventKind, Trace, TraceEvent};
+use crate::util::json::{obj, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// JSONL header tag; bump on schema change.
+pub const TRACE_FORMAT: &str = "tpu-pod-train-trace-v1";
+
+/// Chrome `args` keys that carry the ordering key rather than user attrs.
+const RESERVED_ARGS: [&str; 2] = ["trace_epoch", "trace_seq"];
+
+fn attr_to_json(v: &AttrVal) -> Json {
+    match v {
+        AttrVal::Int(x) => Json::Num(*x as f64),
+        AttrVal::Num(x) => Json::Num(*x),
+        AttrVal::Str(s) => Json::Str(s.clone()),
+    }
+}
+
+fn attr_from_json(v: &Json) -> Option<AttrVal> {
+    match v {
+        Json::Num(x) if x.fract() == 0.0 && x.abs() < 9e15 => Some(AttrVal::Int(*x as i64)),
+        Json::Num(x) => Some(AttrVal::Num(*x)),
+        Json::Str(s) => Some(AttrVal::Str(s.clone())),
+        _ => None,
+    }
+}
+
+fn attrs_obj(attrs: &[(String, AttrVal)]) -> Json {
+    Json::Obj(attrs.iter().map(|(k, v)| (k.clone(), attr_to_json(v))).collect())
+}
+
+impl Trace {
+    /// Serialize as JSON-lines (`tpu-pod-train-trace-v1`, schema above).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&obj(vec![("format", Json::from(TRACE_FORMAT))]).dump());
+        out.push('\n');
+        for ev in &self.events {
+            let mut pairs = vec![
+                ("kind", Json::from(ev.kind.label())),
+                ("name", Json::Str(ev.name.clone())),
+                ("track", Json::from(ev.track as usize)),
+                ("epoch", Json::from(ev.epoch as usize)),
+                ("seq", Json::from(ev.seq as usize)),
+                ("t_s", Json::Num(ev.t_s)),
+            ];
+            match ev.kind {
+                EventKind::Span => pairs.push(("dur_s", Json::Num(ev.dur_s))),
+                EventKind::Counter => pairs.push(("value", Json::Num(ev.dur_s))),
+                EventKind::Instant => {}
+            }
+            if !ev.attrs.is_empty() {
+                pairs.push(("attrs", attrs_obj(&ev.attrs)));
+            }
+            out.push_str(&obj(pairs).dump());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Serialize in Chrome trace-event format (Perfetto, `chrome://tracing`).
+    pub fn to_chrome(&self) -> String {
+        let mut events: Vec<Json> = Vec::with_capacity(self.events.len() + 8);
+        events.push(obj(vec![
+            ("ph", Json::from("M")),
+            ("pid", Json::from(0usize)),
+            ("tid", Json::from(0usize)),
+            ("name", Json::from("process_name")),
+            ("args", obj(vec![("name", Json::from("tpu-pod-train"))])),
+        ]));
+        let tracks: std::collections::BTreeSet<u32> =
+            self.events.iter().map(|e| e.track).collect();
+        for t in &tracks {
+            events.push(obj(vec![
+                ("ph", Json::from("M")),
+                ("pid", Json::from(0usize)),
+                ("tid", Json::from(*t as usize)),
+                ("name", Json::from("thread_name")),
+                ("args", obj(vec![("name", Json::Str(track_name(*t)))])),
+            ]));
+        }
+        for ev in &self.events {
+            let cat = ev.name.split('.').next().unwrap_or("trace").to_string();
+            let mut args: BTreeMap<String, Json> = ev
+                .attrs
+                .iter()
+                .map(|(k, v)| (k.clone(), attr_to_json(v)))
+                .collect();
+            args.insert("trace_epoch".to_string(), Json::from(ev.epoch as usize));
+            args.insert("trace_seq".to_string(), Json::from(ev.seq as usize));
+            let mut pairs = vec![
+                ("pid", Json::from(0usize)),
+                ("tid", Json::from(ev.track as usize)),
+                ("name", Json::Str(ev.name.clone())),
+                ("cat", Json::Str(cat)),
+                ("ts", Json::Num(ev.t_s * 1e6)),
+            ];
+            match ev.kind {
+                EventKind::Span => {
+                    pairs.push(("ph", Json::from("X")));
+                    pairs.push(("dur", Json::Num(ev.dur_s * 1e6)));
+                }
+                EventKind::Instant => {
+                    pairs.push(("ph", Json::from("i")));
+                    pairs.push(("s", Json::from("t")));
+                }
+                EventKind::Counter => {
+                    pairs.push(("ph", Json::from("C")));
+                    args.insert("value".to_string(), Json::Num(ev.dur_s));
+                }
+            }
+            pairs.push(("args", Json::Obj(args)));
+            events.push(obj(pairs));
+        }
+        obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::from("ms")),
+        ])
+        .dump()
+    }
+
+    /// Parse either export format, auto-detected from content.
+    pub fn parse(text: &str) -> Result<Trace, String> {
+        if let Ok(v) = Json::parse(text) {
+            if v.get("traceEvents").is_some() {
+                return parse_chrome(&v);
+            }
+        }
+        parse_jsonl(text)
+    }
+
+    /// Write `path`, format chosen by extension (`.jsonl` → JSON-lines,
+    /// anything else → Chrome trace-event format).
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        let jsonl = path.extension().and_then(|e| e.to_str()) == Some("jsonl");
+        let text = if jsonl { self.to_jsonl() } else { self.to_chrome() };
+        std::fs::write(path, text)
+    }
+
+    pub fn load(path: &Path) -> Result<Trace, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Trace::parse(&text)
+    }
+}
+
+fn parse_jsonl(text: &str) -> Result<Trace, String> {
+    let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+    let (_, header) = lines.next().ok_or("empty trace file")?;
+    let h = Json::parse(header).map_err(|e| format!("trace header: {e}"))?;
+    match h.get("format").and_then(|f| f.as_str()) {
+        Some(TRACE_FORMAT) => {}
+        Some(other) => return Err(format!("unknown trace format {other:?}")),
+        None => return Err("not a trace file (missing format header)".to_string()),
+    }
+    let mut events = Vec::new();
+    for (i, line) in lines {
+        let v = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        events.push(event_from_jsonl(&v).map_err(|e| format!("line {}: {e}", i + 1))?);
+    }
+    Ok(Trace { events })
+}
+
+fn event_from_jsonl(v: &Json) -> Result<TraceEvent, String> {
+    let kind = match v.get("kind").and_then(|k| k.as_str()) {
+        Some("span") => EventKind::Span,
+        Some("instant") => EventKind::Instant,
+        Some("counter") => EventKind::Counter,
+        other => return Err(format!("bad event kind {other:?}")),
+    };
+    let name = v.get("name").and_then(|n| n.as_str()).ok_or("missing name")?.to_string();
+    let num = |key: &str| v.get(key).and_then(|x| x.as_f64());
+    let dur_s = match kind {
+        EventKind::Span => num("dur_s").ok_or("span missing dur_s")?,
+        EventKind::Counter => num("value").ok_or("counter missing value")?,
+        EventKind::Instant => 0.0,
+    };
+    let mut attrs = Vec::new();
+    if let Some(Json::Obj(m)) = v.get("attrs") {
+        for (k, av) in m {
+            attrs.push((k.clone(), attr_from_json(av).ok_or("bad attr value")?));
+        }
+    }
+    Ok(TraceEvent {
+        track: num("track").ok_or("missing track")? as u32,
+        epoch: num("epoch").unwrap_or(0.0) as u32,
+        seq: num("seq").unwrap_or(0.0) as u32,
+        t_s: num("t_s").ok_or("missing t_s")?,
+        kind,
+        name,
+        dur_s,
+        attrs,
+    })
+}
+
+fn parse_chrome(v: &Json) -> Result<Trace, String> {
+    let evs = v
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or("traceEvents is not an array")?;
+    let mut events = Vec::new();
+    for ev in evs {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        let kind = match ph {
+            "X" => EventKind::Span,
+            "i" | "I" => EventKind::Instant,
+            "C" => EventKind::Counter,
+            _ => continue, // metadata and anything we did not emit
+        };
+        let name = ev.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string();
+        let track = ev.get("tid").and_then(|t| t.as_f64()).unwrap_or(0.0) as u32;
+        let t_s = ev.get("ts").and_then(|t| t.as_f64()).unwrap_or(0.0) / 1e6;
+        let mut epoch = 0;
+        let mut seq = 0;
+        let mut value = 0.0;
+        let mut attrs = Vec::new();
+        if let Some(Json::Obj(m)) = ev.get("args") {
+            for (k, av) in m {
+                match k.as_str() {
+                    "trace_epoch" => epoch = av.as_f64().unwrap_or(0.0) as u32,
+                    "trace_seq" => seq = av.as_f64().unwrap_or(0.0) as u32,
+                    "value" if kind == EventKind::Counter => {
+                        value = av.as_f64().unwrap_or(0.0);
+                    }
+                    _ => {
+                        if let Some(a) = attr_from_json(av) {
+                            attrs.push((k.clone(), a));
+                        }
+                    }
+                }
+            }
+        }
+        let dur_s = match kind {
+            EventKind::Span => ev.get("dur").and_then(|d| d.as_f64()).unwrap_or(0.0) / 1e6,
+            EventKind::Counter => value,
+            EventKind::Instant => 0.0,
+        };
+        events.push(TraceEvent { track, epoch, seq, t_s, kind, name, dur_s, attrs });
+    }
+    // Chrome args are unordered; restore the deterministic order key.
+    events.sort_by(|a, b| (a.track, a.epoch, a.seq).cmp(&(b.track, b.epoch, b.seq)));
+    Ok(Trace { events })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::trace::{TraceSink, TRACK_COORD, TRACK_STEP};
+
+    fn sample() -> Trace {
+        let sink = TraceSink::enabled();
+        let mut tr = sink.local(TRACK_STEP, 0);
+        let t0 = tr.start();
+        tr.span_at("trainer.compute", t0, 0.25, || {
+            vec![("step", AttrVal::from(0usize)), ("exec_fwd_s", AttrVal::from(0.125))]
+        });
+        tr.instant("fault.death", || {
+            vec![("chip", AttrVal::from(2usize)), ("kind", AttrVal::from("death"))]
+        });
+        tr.counter("report.steps", 8.0);
+        drop(tr);
+        let mut co = sink.local(TRACK_COORD, 1);
+        co.instant("incarnation.start", || vec![("world", AttrVal::from(3usize))]);
+        drop(co);
+        sink.drain()
+    }
+
+    #[test]
+    fn jsonl_round_trips() {
+        let t = sample();
+        let text = t.to_jsonl();
+        assert!(text.starts_with(&format!("{{\"format\":\"{TRACE_FORMAT}\"}}\n")));
+        let back = Trace::parse(&text).unwrap();
+        assert_eq!(back.len(), t.len());
+        // Serialization is a fixed point after one pass.
+        assert_eq!(back.to_jsonl(), text);
+        assert_eq!(back.canonical_dump(), t.canonical_dump());
+        // Exact f64 round-trip.
+        for (a, b) in t.events.iter().zip(back.events.iter()) {
+            assert_eq!(a.t_s.to_bits(), b.t_s.to_bits());
+            assert_eq!(a.dur_s.to_bits(), b.dur_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn chrome_round_trips_semantics() {
+        let t = sample();
+        let text = t.to_chrome();
+        let v = Json::parse(&text).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // process_name + 2 thread_name metadata + 4 events
+        assert_eq!(evs.len(), 3 + t.len());
+        assert!(text.contains("\"ph\":\"X\""));
+        assert!(text.contains("\"ph\":\"i\""));
+        assert!(text.contains("\"ph\":\"C\""));
+        assert!(text.contains("\"thread_name\""));
+        let back = Trace::parse(&text).unwrap();
+        assert_eq!(back.len(), t.len());
+        assert_eq!(back.canonical_dump(), t.canonical_dump());
+    }
+
+    #[test]
+    fn write_picks_format_by_extension(){
+        let dir = std::env::temp_dir().join(format!("trace-ext-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let t = sample();
+        let chrome = dir.join("t.json");
+        let jsonl = dir.join("t.jsonl");
+        t.write(&chrome).unwrap();
+        t.write(&jsonl).unwrap();
+        assert!(std::fs::read_to_string(&chrome).unwrap().contains("traceEvents"));
+        assert!(std::fs::read_to_string(&jsonl).unwrap().starts_with("{\"format\""));
+        assert_eq!(Trace::load(&chrome).unwrap().len(), t.len());
+        assert_eq!(Trace::load(&jsonl).unwrap().len(), t.len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_garbage_and_wrong_format() {
+        assert!(Trace::parse("").is_err());
+        assert!(Trace::parse("not json").is_err());
+        assert!(Trace::parse("{\"format\":\"other-v9\"}\n").is_err());
+        assert!(Trace::parse("{\"report\":\"live_calibration\"}").is_err());
+    }
+}

@@ -1,10 +1,29 @@
-//! MLPerf-style structured run logging and timing rules.
+//! MLPerf-style structured run logging, timing rules — and the structured
+//! trace subsystem.
 //!
 //! MLPerf time-to-train measures from `run_start` (after initialization —
 //! the v0.6 rules added "a time budget allowing for large scale systems to
 //! initialize") to the eval that first reaches the quality target. This
 //! module implements that clock plus simple counters the trainer and
 //! benches report.
+//!
+//! The [`trace`] / [`export`] / [`report`] submodules are the unified
+//! tracing layer: [`TraceSink`] records per-phase spans, instants, and
+//! counters across the trainer step loop, the checkpoint `AsyncWriter`,
+//! the sweep worker pool, and `calibrate` live runs; exporters emit
+//! JSON-lines or Chrome trace-event format (Perfetto); `trace summarize`
+//! reduces a trace and cross-checks it against `TrainReport` accounting.
+//! See `rust/src/metrics/README.md` for the schema and span taxonomy.
+
+pub mod export;
+pub mod report;
+pub mod trace;
+
+pub use report::{summarize, TraceSummary, DEFAULT_TOLERANCE};
+pub use trace::{
+    track_name, AttrVal, EventKind, Trace, TraceEvent, TraceLocal, TraceSink, TRACK_CALIBRATE,
+    TRACK_CKPT, TRACK_COORD, TRACK_STEP, TRACK_SWEEP_BASE,
+};
 
 use std::time::Instant;
 

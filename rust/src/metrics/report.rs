@@ -1,0 +1,368 @@
+//! Trace reduction: per-phase p50/p99/total tables, the goodput timeline,
+//! cache-hit rates — and the accounting cross-check that makes a trace a
+//! correctness oracle.
+//!
+//! The trainer emits its final [`TrainReport`](crate::coordinator::TrainReport)
+//! accounting as `report.*` counters on the coordinator track, recorded
+//! from the *same* `Timer` values that produced the per-phase spans. So in
+//! a well-formed trace the span durations must re-derive the report:
+//!
+//! - `count(trainer.step) == count(trainer.update) == report.steps` (exact)
+//! - `sum(trainer.input|compute|gradsum|update) == report.*_s`
+//! - `sum(trainer.fwd) + Σ eval exec_fwd_s == report.fwd_s` (eval runs the
+//!   same backend pass, so eval-time executor seconds are attributed on
+//!   the `trainer.eval` span), same for bwd
+//! - `fwd + bwd == report.exec_s`
+//! - `count(ckpt.publish) == report.checkpoints`
+//!
+//! [`summarize`] evaluates these with a tiny tolerance (phase sums are
+//! bit-identical within one incarnation; fault restarts and the Chrome
+//! µs round-trip perturb at ~1e-15 relative) and `trace summarize` exits
+//! nonzero when any check fails. Traces without `report.*` counters
+//! (sweep/calibrate traces) skip the cross-check.
+
+use std::collections::BTreeMap;
+
+use super::trace::{AttrVal, EventKind, Trace, TRACK_COORD};
+use crate::benchkit::{fmt_time, Table};
+use crate::util::timer::percentile;
+
+/// Relative tolerance for the accounting cross-check. Span sums re-add the
+/// exact f64 durations the report added, but in a different association
+/// across incarnations, and the Chrome export round-trips through µs.
+pub const DEFAULT_TOLERANCE: f64 = 1e-9;
+const ABS_TOLERANCE: f64 = 1e-12;
+
+#[derive(Clone, Debug)]
+pub struct PhaseStat {
+    pub name: String,
+    pub count: usize,
+    pub total_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Check {
+    pub name: String,
+    pub ok: bool,
+    pub detail: String,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    pub events: usize,
+    pub phases: Vec<PhaseStat>,
+    /// Final value of every counter (last sample wins).
+    pub counters: BTreeMap<String, f64>,
+    /// Human-readable incarnation/fault/rollback history, in event order.
+    pub timeline: Vec<String>,
+    /// `(cache name, hit rate)` derived from `*_hits`/`*_misses` counters.
+    pub cache_rates: Vec<(String, f64)>,
+    pub checks: Vec<Check>,
+}
+
+fn attr<'a>(attrs: &'a [(String, AttrVal)], key: &str) -> Option<&'a AttrVal> {
+    attrs.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+}
+
+fn attr_f64(attrs: &[(String, AttrVal)], key: &str) -> Option<f64> {
+    attr(attrs, key).and_then(|v| v.as_f64())
+}
+
+fn close(a: f64, b: f64, rel: f64) -> bool {
+    (a - b).abs() <= ABS_TOLERANCE + rel * a.abs().max(b.abs())
+}
+
+/// Reduce a trace. `tolerance` is the relative tolerance for the
+/// accounting cross-check ([`DEFAULT_TOLERANCE`] for the CLI default).
+pub fn summarize(trace: &Trace, tolerance: f64) -> TraceSummary {
+    let mut sum = TraceSummary { events: trace.len(), ..Default::default() };
+
+    // Per-phase duration samples, grouped by span name (event order, which
+    // drain() made deterministic).
+    let mut durs: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    for ev in &trace.events {
+        match ev.kind {
+            EventKind::Span => durs.entry(ev.name.as_str()).or_default().push(ev.dur_s),
+            EventKind::Counter => {
+                sum.counters.insert(ev.name.clone(), ev.dur_s);
+            }
+            EventKind::Instant => {}
+        }
+    }
+    for (name, ds) in &durs {
+        sum.phases.push(PhaseStat {
+            name: name.to_string(),
+            count: ds.len(),
+            total_s: ds.iter().sum(),
+            p50_s: percentile(ds, 50.0),
+            p99_s: percentile(ds, 99.0),
+            max_s: ds.iter().cloned().fold(0.0, f64::max),
+        });
+    }
+    sum.phases.sort_by(|a, b| b.total_s.total_cmp(&a.total_s));
+
+    // Goodput timeline: coordinator-track instants in order.
+    for ev in &trace.events {
+        if ev.track != TRACK_COORD || ev.kind != EventKind::Instant {
+            continue;
+        }
+        let geti = |k: &str| attr_f64(&ev.attrs, k).map(|x| x as i64).unwrap_or(-1);
+        let line = match ev.name.as_str() {
+            "incarnation.start" => format!(
+                "incarnation {} starts at step {} on {} cores",
+                geti("incarnation"),
+                geti("start_step"),
+                geti("world")
+            ),
+            "fault.death" => {
+                format!("chip {} dies before step {}", geti("chip"), geti("step"))
+            }
+            "fault.preemption" => {
+                format!("chip {} preempted before step {}", geti("chip"), geti("step"))
+            }
+            "rollback" => format!(
+                "rollback to step {} ({} steps of work lost)",
+                geti("to_step"),
+                geti("lost_steps")
+            ),
+            _ => format!("{} at t={:.3}s", ev.name, ev.t_s),
+        };
+        sum.timeline.push(line);
+    }
+
+    // Cache-hit rates from paired `<name>_hits` / `<name>_misses` counters.
+    let hit_keys: Vec<String> = sum
+        .counters
+        .keys()
+        .filter(|k| k.ends_with("_hits"))
+        .map(|k| k[..k.len() - 5].to_string())
+        .collect();
+    for base in hit_keys {
+        let hits = sum.counters[&format!("{base}_hits")];
+        let misses = sum.counters.get(&format!("{base}_misses")).copied().unwrap_or(0.0);
+        if hits + misses > 0.0 {
+            sum.cache_rates.push((base, hits / (hits + misses)));
+        }
+    }
+
+    // ---- accounting cross-check (trainer traces only) --------------------
+    if let Some(&steps) = sum.counters.get("report.steps") {
+        let span_total = |name: &str| durs.get(name).map(|d| d.iter().sum()).unwrap_or(0.0);
+        let span_count = |name: &str| durs.get(name).map(|d| d.len()).unwrap_or(0);
+        let counter = |k: &str| sum.counters.get(k).copied().unwrap_or(0.0);
+        let mut check_eq = |name: &str, got: f64, want: f64, exact: bool| {
+            let ok = if exact { got == want } else { close(got, want, tolerance) };
+            sum.checks.push(Check {
+                name: name.to_string(),
+                ok,
+                detail: format!("trace {got} vs report {want}"),
+            });
+        };
+
+        check_eq("steps == trainer.step spans", span_count("trainer.step") as f64, steps, true);
+        check_eq("steps == trainer.update spans", span_count("trainer.update") as f64, steps, true);
+        for phase in ["input", "compute", "gradsum", "update"] {
+            check_eq(
+                &format!("{phase} span sum == report.{phase}_s"),
+                span_total(&format!("trainer.{phase}")),
+                counter(&format!("report.{phase}_s")),
+                false,
+            );
+        }
+        // Eval runs the same executor: its fwd/bwd seconds are carried as
+        // span attributes, not sub-spans, and count toward the totals.
+        let eval_fwd: f64 = trace
+            .events
+            .iter()
+            .filter(|e| e.kind == EventKind::Span && e.name == "trainer.eval")
+            .filter_map(|e| attr_f64(&e.attrs, "exec_fwd_s"))
+            .sum();
+        let eval_bwd: f64 = trace
+            .events
+            .iter()
+            .filter(|e| e.kind == EventKind::Span && e.name == "trainer.eval")
+            .filter_map(|e| attr_f64(&e.attrs, "exec_bwd_s"))
+            .sum();
+        check_eq(
+            "fwd spans + eval fwd == report.fwd_s",
+            span_total("trainer.fwd") + eval_fwd,
+            counter("report.fwd_s"),
+            false,
+        );
+        check_eq(
+            "bwd spans + eval bwd == report.bwd_s",
+            span_total("trainer.bwd") + eval_bwd,
+            counter("report.bwd_s"),
+            false,
+        );
+        check_eq(
+            "fwd_s + bwd_s == report.exec_s",
+            counter("report.fwd_s") + counter("report.bwd_s"),
+            counter("report.exec_s"),
+            false,
+        );
+        check_eq(
+            "ckpt.publish spans == report.checkpoints",
+            span_count("ckpt.publish") as f64,
+            counter("report.checkpoints"),
+            true,
+        );
+    }
+    sum
+}
+
+impl TraceSummary {
+    /// True when every accounting check passed (vacuously true for traces
+    /// without `report.*` counters).
+    pub fn ok(&self) -> bool {
+        self.checks.iter().all(|c| c.ok)
+    }
+
+    pub fn print(&self) {
+        let mut t = Table::new(
+            &format!("trace summary ({} events)", self.events),
+            &["phase", "count", "total", "p50", "p99", "max"],
+        );
+        for p in &self.phases {
+            t.row(&[
+                p.name.clone(),
+                p.count.to_string(),
+                fmt_time(p.total_s),
+                fmt_time(p.p50_s),
+                fmt_time(p.p99_s),
+                fmt_time(p.max_s),
+            ]);
+        }
+        t.print();
+
+        if !self.timeline.is_empty() || self.counters.contains_key("report.goodput") {
+            println!("\n=== goodput timeline ===");
+            for line in &self.timeline {
+                println!("  {line}");
+            }
+            if let Some(g) = self.counters.get("report.goodput") {
+                println!(
+                    "  goodput {:.4} ({} steps lost, {} restores)",
+                    g,
+                    self.counters.get("report.lost_steps").copied().unwrap_or(0.0),
+                    self.counters.get("report.restores").copied().unwrap_or(0.0),
+                );
+            }
+        }
+
+        if !self.cache_rates.is_empty() {
+            println!("\n=== cache hit rates ===");
+            for (name, rate) in &self.cache_rates {
+                println!("  {name}: {:.1}%", rate * 100.0);
+            }
+        }
+
+        if self.checks.is_empty() {
+            println!("\naccounting cross-check: skipped (no report.* counters in trace)");
+        } else {
+            println!("\n=== accounting cross-check ===");
+            for c in &self.checks {
+                let mark = if c.ok { "ok  " } else { "FAIL" };
+                println!("  [{mark}] {} ({})", c.name, c.detail);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::trace::{TraceSink, TRACK_CKPT, TRACK_STEP};
+
+    /// Hand-build a consistent 2-step trainer trace.
+    fn consistent_trace() -> Trace {
+        let sink = TraceSink::enabled();
+        let mut tr = sink.local(TRACK_STEP, 0);
+        for step in 1usize..=2 {
+            let t0 = tr.start();
+            tr.span_at("trainer.input", t0, 0.01, || vec![("step", AttrVal::from(step))]);
+            tr.span_at("trainer.compute", t0, 0.1, || vec![("step", AttrVal::from(step))]);
+            tr.span_at("trainer.fwd", t0, 0.06, Vec::new);
+            tr.span_at("trainer.bwd", t0, 0.03, Vec::new);
+            tr.span_at("trainer.gradsum", t0, 0.02, || vec![("step", AttrVal::from(step))]);
+            tr.span_at("trainer.update", t0, 0.005, || vec![("step", AttrVal::from(step))]);
+            tr.span_at("trainer.step", t0, 0.14, || vec![("step", AttrVal::from(step))]);
+        }
+        // One eval contributing executor time outside the fwd/bwd spans.
+        let t0 = tr.start();
+        tr.span_at("trainer.eval", t0, 0.05, || {
+            vec![("exec_fwd_s", AttrVal::from(0.04)), ("exec_bwd_s", AttrVal::from(0.0))]
+        });
+        drop(tr);
+        let mut ck = sink.local(TRACK_CKPT, 0);
+        ck.span_at("ckpt.write", 0.0, 0.02, Vec::new);
+        ck.span_at("ckpt.publish", 0.02, 0.001, Vec::new);
+        drop(ck);
+        let mut co = sink.local(super::TRACK_COORD, 0);
+        co.counter("report.steps", 2.0);
+        co.counter("report.input_s", 0.02);
+        co.counter("report.compute_s", 0.2);
+        co.counter("report.gradsum_s", 0.04);
+        co.counter("report.update_s", 0.01);
+        co.counter("report.fwd_s", 0.06 + 0.06 + 0.04);
+        co.counter("report.bwd_s", 0.06);
+        co.counter("report.exec_s", 0.16 + 0.06);
+        co.counter("report.checkpoints", 1.0);
+        co.counter("report.goodput", 1.0);
+        drop(co);
+        sink.drain()
+    }
+
+    #[test]
+    fn consistent_trace_passes_checks() {
+        let s = summarize(&consistent_trace(), DEFAULT_TOLERANCE);
+        assert!(!s.checks.is_empty());
+        assert!(s.ok(), "{:#?}", s.checks);
+        let step = s.phases.iter().find(|p| p.name == "trainer.step").unwrap();
+        assert_eq!(step.count, 2);
+        assert!((step.total_s - 0.28).abs() < 1e-12);
+        assert!(step.p50_s > 0.0 && step.p99_s >= step.p50_s);
+    }
+
+    #[test]
+    fn tampered_counter_fails_checks() {
+        let mut t = consistent_trace();
+        for ev in t.events.iter_mut() {
+            if ev.name == "report.fwd_s" {
+                ev.dur_s *= 1.5;
+            }
+        }
+        let s = summarize(&t, DEFAULT_TOLERANCE);
+        assert!(!s.ok());
+        assert!(s.checks.iter().any(|c| !c.ok && c.name.contains("fwd")));
+    }
+
+    #[test]
+    fn dropped_span_fails_step_count() {
+        let mut t = consistent_trace();
+        let idx = t.events.iter().position(|e| e.name == "trainer.step").unwrap();
+        t.events.remove(idx);
+        let s = summarize(&t, DEFAULT_TOLERANCE);
+        assert!(s.checks.iter().any(|c| !c.ok && c.name.contains("trainer.step")));
+    }
+
+    #[test]
+    fn sweep_trace_skips_cross_check_and_reports_cache_rates() {
+        let sink = TraceSink::enabled();
+        let mut w = sink.local(crate::metrics::trace::TRACK_SWEEP_BASE, 0);
+        let t0 = w.start();
+        w.span_at("sweep.point", t0, 0.5, || vec![("chips", AttrVal::from(16usize))]);
+        w.counter("sweep.cache.makespan_hits", 30.0);
+        w.counter("sweep.cache.makespan_misses", 10.0);
+        drop(w);
+        let s = summarize(&sink.drain(), DEFAULT_TOLERANCE);
+        assert!(s.checks.is_empty());
+        assert!(s.ok());
+        assert_eq!(s.cache_rates.len(), 1);
+        assert!((s.cache_rates[0].1 - 0.75).abs() < 1e-12);
+        s.print(); // should not panic
+    }
+}

@@ -1,0 +1,479 @@
+//! Structured trace recorder: spans, instants and counters on named tracks.
+//!
+//! The paper's argument is an attribution story — which phase eats the step
+//! at which scale — and `SweepRecord`/`TrainReport` already carry the
+//! *totals*. This module records *when* everything happened: per-step phase
+//! spans in the trainer, checkpoint `AsyncWriter` write/publish windows,
+//! incarnation boundaries and rollbacks under faults, per-job spans in the
+//! sweep pool. Export formats live in [`super::export`], the reduction /
+//! cross-check engine in [`super::report`].
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Disabled tracing is free.** `TraceSink` is an `Option<Arc<..>>`;
+//!    every recording method is `#[inline]` and early-outs on `None`
+//!    without touching its attribute closure, so a disabled sink performs
+//!    no allocation and no clock read. The trainer's numerics never depend
+//!    on the sink, so a traced run is bit-identical to an untraced one.
+//! 2. **Deterministic event order.** Events are recorded into per-thread
+//!    [`TraceLocal`] buffers (no lock on the hot path) and merged into the
+//!    shared sink when the local is flushed/dropped. Each event carries a
+//!    `(track, epoch, seq)` key — track = logical timeline, epoch =
+//!    incarnation index (so a restarted rank-0 loop does not collide with
+//!    its predecessor), seq = position in the local buffer — and
+//!    [`TraceSink::drain`] sorts by that key. The resulting event
+//!    *sequence* is independent of thread scheduling and lock order;
+//!    only the wall-clock fields (`t_s`, `dur_s`, attrs/counters whose
+//!    name ends in `_s`) vary between runs. [`Trace::canonical_dump`]
+//!    strips exactly those fields, and the seeded determinism test pins
+//!    the dump byte-identical across runs.
+//! 3. **No dependencies.** Timestamps are `f64` seconds since the sink's
+//!    origin `Instant`; serialization goes through `util::json`.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Rank-0 step loop (per-step phase spans live here).
+pub const TRACK_STEP: u32 = 0;
+/// Coordinator (incarnation boundaries, fault/rollback instants, report counters).
+pub const TRACK_COORD: u32 = 1000;
+/// Checkpoint `AsyncWriter` thread (write/publish spans — the crash window).
+pub const TRACK_CKPT: u32 = 1001;
+/// `sweep --live` calibration points.
+pub const TRACK_CALIBRATE: u32 = 1002;
+/// Sweep pool worker `i` records on `TRACK_SWEEP_BASE + i`.
+pub const TRACK_SWEEP_BASE: u32 = 2000;
+
+/// Human-readable track name (Perfetto thread names, summary tables).
+pub fn track_name(track: u32) -> String {
+    match track {
+        TRACK_STEP => "rank0-steps".to_string(),
+        TRACK_COORD => "coordinator".to_string(),
+        TRACK_CKPT => "ckpt-writer".to_string(),
+        TRACK_CALIBRATE => "calibrate".to_string(),
+        t if t >= TRACK_SWEEP_BASE => format!("sweep-worker-{}", t - TRACK_SWEEP_BASE),
+        t => format!("track-{t}"),
+    }
+}
+
+/// Attribute value. Time-valued attributes use the `_s`-suffix naming
+/// convention (`queue_wait_s`, `exec_fwd_s`) so canonicalization and the
+/// summary engine can tell wall-clock values from deterministic ones.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AttrVal {
+    Int(i64),
+    Num(f64),
+    Str(String),
+}
+
+impl From<i64> for AttrVal {
+    fn from(x: i64) -> AttrVal {
+        AttrVal::Int(x)
+    }
+}
+impl From<usize> for AttrVal {
+    fn from(x: usize) -> AttrVal {
+        AttrVal::Int(x as i64)
+    }
+}
+impl From<u64> for AttrVal {
+    fn from(x: u64) -> AttrVal {
+        AttrVal::Int(x as i64)
+    }
+}
+impl From<f64> for AttrVal {
+    fn from(x: f64) -> AttrVal {
+        AttrVal::Num(x)
+    }
+}
+impl From<&str> for AttrVal {
+    fn from(s: &str) -> AttrVal {
+        AttrVal::Str(s.to_string())
+    }
+}
+impl From<String> for AttrVal {
+    fn from(s: String) -> AttrVal {
+        AttrVal::Str(s)
+    }
+}
+
+impl AttrVal {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            AttrVal::Int(x) => Some(*x as f64),
+            AttrVal::Num(x) => Some(*x),
+            AttrVal::Str(_) => None,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Interval: `t_s .. t_s + dur_s`.
+    Span,
+    /// Point event (`dur_s` unused).
+    Instant,
+    /// Monotonic counter sample: value in `dur_s`.
+    Counter,
+}
+
+impl EventKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::Span => "span",
+            EventKind::Instant => "instant",
+            EventKind::Counter => "counter",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub track: u32,
+    /// Incarnation index for trainer tracks; 0 elsewhere.
+    pub epoch: u32,
+    /// Position within the `(track, epoch)` local buffer (plus its seq base).
+    pub seq: u32,
+    /// Seconds since the sink origin.
+    pub t_s: f64,
+    pub kind: EventKind,
+    pub name: String,
+    /// Span duration in seconds, or the counter value ([`EventKind::Counter`]).
+    pub dur_s: f64,
+    pub attrs: Vec<(String, AttrVal)>,
+}
+
+struct Shared {
+    origin: Instant,
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+/// Handle to a trace being recorded. Cheap to clone; `disabled()` is the
+/// no-op sink (all recording paths early-out, nothing is allocated).
+#[derive(Clone, Default)]
+pub struct TraceSink(Option<Arc<Shared>>);
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TraceSink({})", if self.0.is_some() { "enabled" } else { "disabled" })
+    }
+}
+
+impl TraceSink {
+    pub fn disabled() -> TraceSink {
+        TraceSink(None)
+    }
+
+    pub fn enabled() -> TraceSink {
+        TraceSink(Some(Arc::new(Shared {
+            origin: Instant::now(),
+            events: Mutex::new(Vec::new()),
+        })))
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Per-thread recording buffer for one `(track, epoch)` timeline.
+    /// Sequence numbers start at 0; use [`TraceSink::local_from`] when
+    /// several short-lived locals share a timeline (checkpoint saves).
+    pub fn local(&self, track: u32, epoch: u32) -> TraceLocal {
+        self.local_from(track, epoch, 0)
+    }
+
+    /// Like [`TraceSink::local`] with an explicit sequence base, so events
+    /// from successive locals on the same `(track, epoch)` sort in creation
+    /// order rather than colliding at seq 0.
+    pub fn local_from(&self, track: u32, epoch: u32, seq_base: u32) -> TraceLocal {
+        TraceLocal { shared: self.0.clone(), track, epoch, seq: seq_base, buf: Vec::new() }
+    }
+
+    /// Take every recorded event, sorted by `(track, epoch, seq)` — an
+    /// order independent of thread scheduling. Locals still alive keep
+    /// appending to the (now empty) shared buffer.
+    pub fn drain(&self) -> Trace {
+        match &self.0 {
+            None => Trace { events: Vec::new() },
+            Some(sh) => {
+                let mut events = std::mem::take(&mut *sh.events.lock().unwrap());
+                events.sort_by(|a, b| {
+                    (a.track, a.epoch, a.seq).cmp(&(b.track, b.epoch, b.seq))
+                });
+                Trace { events }
+            }
+        }
+    }
+}
+
+/// Per-thread event buffer. Recording never takes the shared lock; events
+/// are moved into the sink by [`TraceLocal::flush`] (also called on drop).
+pub struct TraceLocal {
+    shared: Option<Arc<Shared>>,
+    track: u32,
+    epoch: u32,
+    seq: u32,
+    buf: Vec<TraceEvent>,
+}
+
+impl TraceLocal {
+    /// A local that records nothing (non-rank-0 workers).
+    pub fn disabled() -> TraceLocal {
+        TraceLocal { shared: None, track: 0, epoch: 0, seq: 0, buf: Vec::new() }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.shared.is_some()
+    }
+
+    /// Current time in seconds since the sink origin (0.0 when disabled).
+    /// Pair with [`TraceLocal::span`]: `let t0 = tr.start(); ...; tr.span(..)`.
+    #[inline]
+    pub fn start(&self) -> f64 {
+        match &self.shared {
+            None => 0.0,
+            Some(sh) => sh.origin.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Close a span opened at `t0` (from [`TraceLocal::start`]), timed now.
+    /// `attrs` is only invoked when the sink is enabled.
+    #[inline]
+    pub fn span<F>(&mut self, name: &'static str, t0: f64, attrs: F)
+    where
+        F: FnOnce() -> Vec<(&'static str, AttrVal)>,
+    {
+        if self.shared.is_some() {
+            let dur = self.start() - t0;
+            self.push(EventKind::Span, name, t0, dur, attrs());
+        }
+    }
+
+    /// Record a span with an externally measured duration — used to reuse
+    /// the exact `Timer` values that feed `StepBreakdown`, so span sums in
+    /// a trace reproduce the report's accounting bit-for-bit, and to place
+    /// synthetic sub-spans (fwd/bwd inside the compute span).
+    #[inline]
+    pub fn span_at<F>(&mut self, name: &'static str, t0: f64, dur_s: f64, attrs: F)
+    where
+        F: FnOnce() -> Vec<(&'static str, AttrVal)>,
+    {
+        if self.shared.is_some() {
+            self.push(EventKind::Span, name, t0, dur_s, attrs());
+        }
+    }
+
+    /// Point event, timed now.
+    #[inline]
+    pub fn instant<F>(&mut self, name: &'static str, attrs: F)
+    where
+        F: FnOnce() -> Vec<(&'static str, AttrVal)>,
+    {
+        if self.shared.is_some() {
+            let t = self.start();
+            self.push(EventKind::Instant, name, t, 0.0, attrs());
+        }
+    }
+
+    /// Counter sample, timed now. Counters whose name ends in `_s` carry
+    /// wall-clock values and are excluded from the canonical dump.
+    #[inline]
+    pub fn counter(&mut self, name: &'static str, value: f64) {
+        if self.shared.is_some() {
+            let t = self.start();
+            self.push(EventKind::Counter, name, t, value, Vec::new());
+        }
+    }
+
+    fn push(
+        &mut self,
+        kind: EventKind,
+        name: &'static str,
+        t_s: f64,
+        dur_s: f64,
+        attrs: Vec<(&'static str, AttrVal)>,
+    ) {
+        self.buf.push(TraceEvent {
+            track: self.track,
+            epoch: self.epoch,
+            seq: self.seq,
+            t_s,
+            kind,
+            name: name.to_string(),
+            dur_s,
+            attrs: attrs.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        });
+        self.seq += 1;
+    }
+
+    /// Move buffered events into the sink. Also runs on drop.
+    pub fn flush(&mut self) {
+        if let Some(sh) = &self.shared {
+            if !self.buf.is_empty() {
+                sh.events.lock().unwrap().append(&mut self.buf);
+            }
+        }
+    }
+}
+
+impl Drop for TraceLocal {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+/// A drained trace: events in deterministic `(track, epoch, seq)` order.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Timestamp-stripped dump: one line per event with kind, track, epoch,
+    /// seq, name, counter value (unless the name ends in `_s`) and attrs
+    /// (values of `_s`-suffixed keys replaced by `·`). Two seeded runs of
+    /// the same config produce byte-identical canonical dumps — this is the
+    /// determinism-modulo-timestamps oracle.
+    pub fn canonical_dump(&self) -> String {
+        let mut out = String::new();
+        for ev in &self.events {
+            out.push_str(&format!(
+                "{} {}/{}/{} {}",
+                ev.kind.label(),
+                ev.track,
+                ev.epoch,
+                ev.seq,
+                ev.name
+            ));
+            if ev.kind == EventKind::Counter && !ev.name.ends_with("_s") {
+                out.push_str(&format!(" ={}", fmt_num(ev.dur_s)));
+            }
+            for (k, v) in &ev.attrs {
+                if k.ends_with("_s") {
+                    out.push_str(&format!(" {k}=·"));
+                } else {
+                    match v {
+                        AttrVal::Int(x) => out.push_str(&format!(" {k}={x}")),
+                        AttrVal::Num(x) => out.push_str(&format!(" {k}={}", fmt_num(*x))),
+                        AttrVal::Str(s) => out.push_str(&format!(" {k}={s}")),
+                    }
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn fmt_num(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 9e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_records_nothing_and_skips_attr_closures() {
+        let sink = TraceSink::disabled();
+        assert!(!sink.is_enabled());
+        let mut tr = sink.local(TRACK_STEP, 0);
+        let t0 = tr.start();
+        assert_eq!(t0, 0.0);
+        tr.span("x", t0, || panic!("attr closure must not run when disabled"));
+        tr.instant("y", || panic!("attr closure must not run when disabled"));
+        tr.counter("c", 1.0);
+        drop(tr);
+        assert!(sink.drain().is_empty());
+    }
+
+    #[test]
+    fn drain_orders_by_track_epoch_seq_not_merge_order() {
+        let sink = TraceSink::enabled();
+        // Merge a later track first, then an earlier one, then a second
+        // epoch on the first track: drain must still sort deterministically.
+        let mut b = sink.local(TRACK_COORD, 0);
+        b.instant("coord.ev", Vec::new);
+        drop(b);
+        let mut a = sink.local(TRACK_STEP, 0);
+        a.counter("steps", 2.0);
+        a.instant("step.ev", Vec::new);
+        drop(a);
+        let mut a2 = sink.local(TRACK_STEP, 1);
+        a2.instant("restarted.ev", Vec::new);
+        drop(a2);
+        let tr = sink.drain();
+        let names: Vec<&str> = tr.events.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, vec!["steps", "step.ev", "restarted.ev", "coord.ev"]);
+        assert_eq!(tr.events[0].seq, 0);
+        assert_eq!(tr.events[1].seq, 1);
+        assert_eq!(tr.events[2].epoch, 1);
+    }
+
+    #[test]
+    fn seq_base_orders_successive_locals() {
+        let sink = TraceSink::enabled();
+        let mut second = sink.local_from(TRACK_CKPT, 0, 16);
+        second.instant("save.1", Vec::new);
+        drop(second);
+        let mut first = sink.local_from(TRACK_CKPT, 0, 0);
+        first.instant("save.0", Vec::new);
+        drop(first);
+        let tr = sink.drain();
+        let names: Vec<&str> = tr.events.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, vec!["save.0", "save.1"]);
+    }
+
+    #[test]
+    fn canonical_dump_strips_wall_clock_only() {
+        let sink = TraceSink::enabled();
+        let mut tr = sink.local(TRACK_STEP, 0);
+        let t0 = tr.start();
+        tr.span_at("trainer.compute", t0, 0.123, || {
+            vec![("step", AttrVal::from(3usize)), ("exec_fwd_s", AttrVal::from(0.1))]
+        });
+        tr.counter("report.steps", 8.0);
+        tr.counter("report.compute_s", 0.456);
+        drop(tr);
+        let dump = sink.drain().canonical_dump();
+        assert!(dump.contains("span 0/0/0 trainer.compute step=3 exec_fwd_s=·"), "{dump}");
+        assert!(dump.contains("counter 0/0/1 report.steps =8"), "{dump}");
+        // Wall-clock counter keeps its name, loses its value.
+        assert!(dump.contains("counter 0/0/2 report.compute_s\n"), "{dump}");
+        assert!(!dump.contains("0.123"), "{dump}");
+        assert!(!dump.contains("0.456"), "{dump}");
+    }
+
+    #[test]
+    fn span_measures_nonnegative_duration() {
+        let sink = TraceSink::enabled();
+        let mut tr = sink.local(TRACK_STEP, 0);
+        let t0 = tr.start();
+        tr.span("w", t0, Vec::new);
+        drop(tr);
+        let trace = sink.drain();
+        assert_eq!(trace.len(), 1);
+        assert!(trace.events[0].dur_s >= 0.0);
+        assert!(trace.events[0].t_s >= 0.0);
+    }
+
+    #[test]
+    fn track_names() {
+        assert_eq!(track_name(TRACK_STEP), "rank0-steps");
+        assert_eq!(track_name(TRACK_SWEEP_BASE + 3), "sweep-worker-3");
+    }
+}

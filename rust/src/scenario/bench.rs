@@ -19,8 +19,10 @@
 //! `BENCH_backend.json` (`tests/bench_backend.rs`; the `runtime_micro`
 //! bench binary prints the matrix as a table).
 
+use crate::coordinator::{train, TrainConfig};
 use crate::costs::shard_imbalance;
 use crate::data::synthetic::{ImageTask, LmTask};
+use crate::metrics::TraceSink;
 use crate::models::proxy::{proxy_dims, TaskKind};
 use crate::models::registry::ModelProfile;
 use crate::runtime::{
@@ -228,6 +230,104 @@ impl BackendBench {
     pub fn write(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
         std::fs::write(path, self.to_json().dump())
     }
+}
+
+/// Tracing overhead harness (`BENCH_trace.json`): the same seeded
+/// reference-trainer run with the sink disabled and enabled, cross-checked
+/// bit-for-bit (losses, evals, final params) before any timing is trusted.
+/// The disabled column is the no-tracing baseline the step loop must not
+/// regress against; `overhead_pct` is the enabled sink's full price —
+/// clock reads, attr closures, per-thread buffers and the final drain.
+#[derive(Clone, Debug)]
+pub struct TraceBench {
+    pub model: String,
+    pub cores: usize,
+    pub steps: usize,
+    /// Wall seconds of the timed run with the disabled (no-op) sink.
+    pub disabled_s: f64,
+    /// Wall seconds of the same run with an enabled sink recording.
+    pub enabled_s: f64,
+    /// Events the enabled run recorded (spans + instants + counters).
+    pub events: usize,
+}
+
+impl TraceBench {
+    /// Enabled-over-disabled wall-clock overhead in percent (can be
+    /// slightly negative on noisy machines; the acceptance bound reads
+    /// the artifact, it is not asserted here).
+    pub fn overhead_pct(&self) -> f64 {
+        (self.enabled_s / self.disabled_s.max(1e-12) - 1.0) * 100.0
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("bench", Json::from("trace_overhead")),
+            ("model", Json::from(self.model.as_str())),
+            ("cores", Json::from(self.cores)),
+            ("steps", Json::from(self.steps)),
+            ("disabled_seconds", Json::from(self.disabled_s)),
+            ("enabled_seconds", Json::from(self.enabled_s)),
+            ("events", Json::from(self.events)),
+            ("overhead_pct", Json::from(self.overhead_pct())),
+        ])
+    }
+
+    /// Write the record (`BENCH_trace.json`).
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().dump())
+    }
+}
+
+/// The shared run configuration: evals on (so eval spans are exercised)
+/// and everything else at `quick` defaults. Only the sink differs.
+fn trace_bench_cfg(model: &str, cores: usize, steps: usize, sink: TraceSink) -> TrainConfig {
+    let mut cfg = TrainConfig::quick(model, cores, steps);
+    cfg.eval_every = (steps / 4).max(1);
+    cfg.eval_examples = 64;
+    cfg.trace = sink;
+    cfg
+}
+
+fn bits_identical(a: &[Vec<f32>], b: &[Vec<f32>]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.len() == y.len() && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        })
+}
+
+/// Time one seeded trainer run with the sink disabled and enabled (after
+/// one untimed warmup), erroring out unless the two runs are bit-identical
+/// in step losses and final parameters — the "tracing never perturbs the
+/// numerics" contract `BENCH_trace.json` rides on.
+pub fn run_trace_bench(model: &str, cores: usize, steps: usize) -> Result<TraceBench, String> {
+    // Warmup: pays thread spawn + allocator churn so neither timed run does.
+    train(&trace_bench_cfg(model, cores, steps, TraceSink::disabled()))
+        .map_err(|e| e.to_string())?;
+
+    let t = Timer::start();
+    let off = train(&trace_bench_cfg(model, cores, steps, TraceSink::disabled()))
+        .map_err(|e| e.to_string())?;
+    let disabled_s = t.secs();
+
+    let sink = TraceSink::enabled();
+    let t = Timer::start();
+    let on = train(&trace_bench_cfg(model, cores, steps, sink.clone()))
+        .map_err(|e| e.to_string())?;
+    let enabled_s = t.secs();
+    let events = sink.drain().len();
+
+    let losses_identical = off.step_losses.len() == on.step_losses.len()
+        && off.step_losses.iter().zip(&on.step_losses).all(|(a, b)| a.to_bits() == b.to_bits());
+    if !losses_identical {
+        return Err(format!("{model}: traced run's step losses differ from the untraced run"));
+    }
+    if !bits_identical(&off.final_params, &on.final_params) {
+        return Err(format!("{model}: traced run's final params differ from the untraced run"));
+    }
+    if events == 0 {
+        return Err(format!("{model}: enabled sink recorded no events"));
+    }
+    Ok(TraceBench { model: model.to_string(), cores, steps, disabled_s, enabled_s, events })
 }
 
 /// Seeded params + one batch for a proxy family (shared by all three

@@ -1,0 +1,336 @@
+//! Per-axis marginal analysis of an ablation-grid sweep (`sweep --grid
+//! --marginals`).
+//!
+//! An [`super::AblationGrid`] sweep prices every §2 toggle combination,
+//! but the cross-product hides the question the paper answers per
+//! optimization: *what did this one toggle buy at this scale?* This
+//! module recovers that: for each axis — spatial partitioning,
+//! weight-update sharding, gradient-summation pipelining (serial →
+//! pipelined at the same torus dimensionality), and the optimizer (SGD →
+//! LARS) — it pairs every grid record with the record that differs in
+//! exactly that axis, and reports the benchmark-seconds ratio
+//! baseline/optimized per chip count (median over the co-varying axes,
+//! with the min/max spread). A ratio of 1.6 at 1024 chips reads "turning
+//! this on makes the benchmark 1.6x faster at 1024 chips, marginalized
+//! over every other toggle".
+//!
+//! Pairing is by the stable grid naming convention
+//! (`grid-{model}-sp:..-wus:..-gs:..-opt:..`, see [`super::grid`]);
+//! non-grid records are ignored, and pairs with a non-finite benchmark
+//! time (DNF points) are counted as skipped rather than polluting the
+//! ratios.
+
+use std::collections::HashMap;
+
+use crate::benchkit::{fmt_ratio, Table};
+use crate::util::json::{obj, Json};
+
+use super::runner::SweepReport;
+
+/// The parsed axis settings of one grid scenario name.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GridKey {
+    pub model: String,
+    pub spatial: bool,
+    pub wus: bool,
+    pub gradsum: String,
+    pub optimizer: String,
+}
+
+/// Parse a grid scenario name
+/// (`grid-{model}-sp:{on|off}-wus:{on|off}-gs:{label}-opt:{label}`).
+/// Returns `None` for anything that does not follow the convention.
+pub fn parse_grid_name(name: &str) -> Option<GridKey> {
+    let rest = name.strip_prefix("grid-")?;
+    let sp_at = rest.find("-sp:")?;
+    let wus_at = rest.find("-wus:")?;
+    let gs_at = rest.find("-gs:")?;
+    let opt_at = rest.find("-opt:")?;
+    if !(sp_at < wus_at && wus_at < gs_at && gs_at < opt_at) {
+        return None;
+    }
+    let onoff = |s: &str| match s {
+        "on" => Some(true),
+        "off" => Some(false),
+        _ => None,
+    };
+    Some(GridKey {
+        model: rest[..sp_at].to_string(),
+        spatial: onoff(&rest[sp_at + 4..wus_at])?,
+        wus: onoff(&rest[wus_at + 5..gs_at])?,
+        gradsum: rest[gs_at + 4..opt_at].to_string(),
+        optimizer: rest[opt_at + 5..].to_string(),
+    })
+}
+
+impl GridKey {
+    /// Canonical lookup string (all axes + model, order fixed).
+    fn lookup(&self) -> String {
+        format!(
+            "{}|sp:{}|wus:{}|gs:{}|opt:{}",
+            self.model, self.spatial, self.wus, self.gradsum, self.optimizer
+        )
+    }
+
+    /// The key that differs from `self` in exactly the given axis, flipped
+    /// to the optimized setting — or `None` when `self` already is the
+    /// optimized side (so each pair is visited once, from the baseline).
+    fn optimized_along(&self, axis: &str) -> Option<GridKey> {
+        let mut k = self.clone();
+        match axis {
+            "spatial" if !self.spatial => k.spatial = true,
+            "wus" if !self.wus => k.wus = true,
+            "gradsum" if self.gradsum.contains("serial") => {
+                k.gradsum = self.gradsum.replace("serial", "pipelined");
+            }
+            "optimizer" if self.optimizer == "sgd" => k.optimizer = "lars".to_string(),
+            _ => return None,
+        }
+        Some(k)
+    }
+}
+
+/// Marginal effect of one axis at one chip count, over every pair of grid
+/// records that differ in exactly that axis.
+#[derive(Clone, Debug)]
+pub struct AxisMarginal {
+    /// `spatial` | `wus` | `gradsum` | `optimizer`.
+    pub axis: &'static str,
+    pub chips: usize,
+    /// Finite pairs that produced a ratio.
+    pub pairs: usize,
+    /// Pairs dropped because either side was DNF (non-finite seconds).
+    pub skipped: usize,
+    /// benchmark_seconds(baseline) / benchmark_seconds(optimized):
+    /// >1 means the toggle bought speed at this scale.
+    pub median_ratio: f64,
+    pub min_ratio: f64,
+    pub max_ratio: f64,
+}
+
+/// The full per-axis marginal report.
+#[derive(Clone, Debug, Default)]
+pub struct MarginalReport {
+    pub rows: Vec<AxisMarginal>,
+}
+
+/// The axes in report order, with the baseline→optimized reading.
+const AXES: [(&str, &str); 4] = [
+    ("spatial", "off -> on"),
+    ("wus", "off -> on"),
+    ("gradsum", "serial -> pipelined"),
+    ("optimizer", "sgd -> lars"),
+];
+
+/// Compute per-axis marginals from a grid sweep report. Errors when the
+/// report holds no parseable grid records at all (e.g. a plain preset
+/// sweep was passed).
+pub fn grid_marginals(report: &SweepReport) -> Result<MarginalReport, String> {
+    // (lookup, chips) -> benchmark seconds, for every grid-named record.
+    let mut by_key: HashMap<(String, usize), f64> = HashMap::new();
+    let mut parsed: Vec<(GridKey, usize, f64)> = Vec::new();
+    for r in &report.records {
+        if let Some(k) = parse_grid_name(&r.scenario) {
+            by_key.insert((k.lookup(), r.chips), r.benchmark_seconds);
+            parsed.push((k, r.chips, r.benchmark_seconds));
+        }
+    }
+    if parsed.is_empty() {
+        return Err(
+            "no grid-named records in this report (marginals need a --grid sweep)".to_string()
+        );
+    }
+
+    let mut rows = Vec::new();
+    for (axis, _) in AXES {
+        // chips -> (ratios, skipped) over every baseline record.
+        let mut per_chips: HashMap<usize, (Vec<f64>, usize)> = HashMap::new();
+        for (k, chips, base_s) in &parsed {
+            let Some(opt_key) = k.optimized_along(axis) else { continue };
+            let Some(&opt_s) = by_key.get(&(opt_key.lookup(), *chips)) else { continue };
+            let entry = per_chips.entry(*chips).or_default();
+            if base_s.is_finite() && opt_s.is_finite() && opt_s > 0.0 {
+                entry.0.push(*base_s / opt_s);
+            } else {
+                entry.1 += 1;
+            }
+        }
+        let mut chip_counts: Vec<usize> = per_chips.keys().copied().collect();
+        chip_counts.sort_unstable();
+        for chips in chip_counts {
+            let (mut ratios, skipped) = per_chips.remove(&chips).expect("key just listed");
+            if ratios.is_empty() {
+                rows.push(AxisMarginal {
+                    axis,
+                    chips,
+                    pairs: 0,
+                    skipped,
+                    median_ratio: f64::NAN,
+                    min_ratio: f64::NAN,
+                    max_ratio: f64::NAN,
+                });
+                continue;
+            }
+            ratios.sort_by(|a, b| a.partial_cmp(b).expect("finite ratios"));
+            rows.push(AxisMarginal {
+                axis,
+                chips,
+                pairs: ratios.len(),
+                skipped,
+                median_ratio: ratios[ratios.len() / 2],
+                min_ratio: ratios[0],
+                max_ratio: ratios[ratios.len() - 1],
+            });
+        }
+    }
+    Ok(MarginalReport { rows })
+}
+
+impl MarginalReport {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("report", Json::from("grid_marginals")),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            fn num(x: f64) -> Json {
+                                if x.is_finite() {
+                                    Json::Num(x)
+                                } else {
+                                    Json::Null
+                                }
+                            }
+                            obj(vec![
+                                ("axis", Json::from(r.axis)),
+                                ("chips", Json::from(r.chips)),
+                                ("pairs", Json::from(r.pairs)),
+                                ("skipped", Json::from(r.skipped)),
+                                ("median_ratio", num(r.median_ratio)),
+                                ("min_ratio", num(r.min_ratio)),
+                                ("max_ratio", num(r.max_ratio)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Render the per-axis table (one row per axis × chip count).
+    pub fn print(&self) {
+        let mut table = Table::new(
+            "Per-axis marginal speedup (benchmark-seconds ratio, baseline/optimized)",
+            &["axis", "toggle", "chips", "pairs", "median", "min", "max"],
+        );
+        for r in &self.rows {
+            let toggle = AXES
+                .iter()
+                .find(|(a, _)| *a == r.axis)
+                .map(|(_, t)| *t)
+                .unwrap_or("?");
+            let fmt = |x: f64| if x.is_finite() { fmt_ratio(x) } else { "DNF".to_string() };
+            table.row(&[
+                r.axis.to_string(),
+                toggle.to_string(),
+                r.chips.to_string(),
+                format!("{}{}", r.pairs, if r.skipped > 0 { "*" } else { "" }),
+                fmt(r.median_ratio),
+                fmt(r.min_ratio),
+                fmt(r.max_ratio),
+            ]);
+        }
+        table.print();
+        if self.rows.iter().any(|r| r.skipped > 0) {
+            println!("  (* = DNF pairs excluded from the ratios)");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{AblationGrid, SweepRunner};
+
+    #[test]
+    fn grid_names_parse_and_reject() {
+        let k = parse_grid_name("grid-resnet50-sp:on-wus:off-gs:2d-pipelined-opt:lars").unwrap();
+        assert_eq!(
+            k,
+            GridKey {
+                model: "resnet50".to_string(),
+                spatial: true,
+                wus: false,
+                gradsum: "2d-pipelined".to_string(),
+                optimizer: "lars".to_string(),
+            }
+        );
+        assert!(parse_grid_name("resnet50-submission").is_none());
+        assert!(parse_grid_name("grid-x-sp:maybe-wus:on-gs:2d-serial-opt:sgd").is_none());
+    }
+
+    #[test]
+    fn optimized_counterparts() {
+        let base = parse_grid_name("grid-ssd-sp:off-wus:off-gs:2d-serial-opt:sgd").unwrap();
+        assert!(base.optimized_along("spatial").unwrap().spatial);
+        assert!(base.optimized_along("wus").unwrap().wus);
+        assert_eq!(base.optimized_along("gradsum").unwrap().gradsum, "2d-pipelined");
+        assert_eq!(base.optimized_along("optimizer").unwrap().optimizer, "lars");
+        // The optimized side itself produces no pair (each pair counted once).
+        let best = parse_grid_name("grid-ssd-sp:on-wus:on-gs:2d-pipelined-opt:lars").unwrap();
+        for (axis, _) in AXES {
+            assert!(best.optimized_along(axis).is_none(), "{axis}");
+        }
+    }
+
+    #[test]
+    fn marginals_over_a_small_grid() {
+        let mut g = AblationGrid::full_paper();
+        g.models = vec!["resnet50".into()];
+        g.chips = vec![16, 64];
+        let report = SweepRunner::new(g.scenarios()).run().unwrap();
+        let m = grid_marginals(&report).unwrap();
+        // 4 axes x 2 chip counts, each axis pairing 8 of the 16 combos.
+        assert_eq!(m.rows.len(), 8);
+        for r in &m.rows {
+            assert_eq!(r.pairs, 8, "{} @ {}", r.axis, r.chips);
+            assert_eq!(r.skipped, 0);
+            assert!(r.median_ratio.is_finite() && r.median_ratio > 0.0);
+            assert!(r.min_ratio <= r.median_ratio && r.median_ratio <= r.max_ratio);
+        }
+        // The §2 performance toggles must not hurt ResNet-50 at 64 chips
+        // (median). The optimizer axis is the exception by design: the
+        // grid holds epochs fixed, so sgd -> lars only adds update state
+        // traffic (20 vs 16 B/param) and its marginal sits at or just
+        // under 1.0.
+        for r in m.rows.iter().filter(|r| r.chips == 64) {
+            if r.axis == "optimizer" {
+                assert!(
+                    r.median_ratio > 0.9 && r.median_ratio <= 1.0 + 1e-9,
+                    "optimizer marginal {} out of range",
+                    r.median_ratio
+                );
+            } else {
+                assert!(
+                    r.median_ratio >= 0.99,
+                    "{}: median marginal {} < 1 at 64 chips",
+                    r.axis,
+                    r.median_ratio
+                );
+            }
+        }
+        // JSON round-trip.
+        let j = Json::parse(&m.to_json().dump()).unwrap();
+        assert_eq!(j.get("report").and_then(Json::as_str), Some("grid_marginals"));
+        assert_eq!(j.get("rows").and_then(Json::as_arr).map(|a| a.len()), Some(8));
+    }
+
+    #[test]
+    fn non_grid_report_is_an_error() {
+        let s = crate::scenario::ScalingScenario::submission("resnet50", vec![16]);
+        let report = SweepRunner::single(s).run().unwrap();
+        assert!(grid_marginals(&report).is_err());
+    }
+}

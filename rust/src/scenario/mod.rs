@@ -45,14 +45,17 @@
 pub mod bench;
 pub mod faults;
 pub mod grid;
+pub mod marginals;
 pub mod presets;
 pub mod runner;
 
 pub use bench::{
-    reference_point, run_backend_bench, run_sweep_bench, BackendBench, BackendCase, SweepBench,
+    reference_point, run_backend_bench, run_sweep_bench, run_trace_bench, BackendBench,
+    BackendCase, SweepBench, TraceBench,
 };
 pub use faults::{price_fault_trace, FaultEvent, FaultKind, FaultOutcome, FaultTrace};
 pub use grid::{AblationGrid, OptimizerAxis};
+pub use marginals::{grid_marginals, parse_grid_name, AxisMarginal, GridKey, MarginalReport};
 pub use presets::{
     fig7_scenarios, fig8_scenarios, fig9_scenarios, model_parallel_speedup, paper_chip_slices,
     table1_scenarios,
@@ -140,6 +143,10 @@ pub struct ScalingScenario {
     /// Optional failure/straggler schedule. `None` and an empty trace are
     /// both priced as goodput 1.0 and leave records byte-identical.
     pub faults: Option<FaultTrace>,
+    /// Live-calibrated compute coefficient (`sweep --costs-from`): price
+    /// compute at this achieved forward-GFLOP/s instead of the TPU-v3
+    /// datasheet roofline. `None` = stock TPU-v3.
+    pub compute_gflops: Option<f64>,
 }
 
 impl ScalingScenario {
@@ -157,6 +164,7 @@ impl ScalingScenario {
             distributed_eval: true,
             spatial_partitioning: true,
             faults: None,
+            compute_gflops: None,
         }
     }
 
@@ -172,6 +180,13 @@ impl ScalingScenario {
 
     pub fn with_faults(mut self, faults: FaultTrace) -> ScalingScenario {
         self.faults = Some(faults);
+        self
+    }
+
+    /// Price compute with a live-calibrated coefficient (the
+    /// `fitted_gflops` of a `sweep --live` calibration report).
+    pub fn with_compute_gflops(mut self, gflops: f64) -> ScalingScenario {
+        self.compute_gflops = Some(gflops);
         self
     }
 
@@ -230,6 +245,7 @@ impl ScalingScenario {
             spatial_partitioning: self.spatial_partitioning,
             epochs_override,
             layout_override,
+            compute_gflops: self.compute_gflops,
         }
     }
 }

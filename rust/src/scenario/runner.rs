@@ -17,10 +17,11 @@
 //! `tests/sweep_parallel.rs`).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::benchkit::Table;
+use crate::metrics::{AttrVal, TraceSink, TRACK_COORD, TRACK_SWEEP_BASE};
 use crate::costs::{gradient_census, shard_imbalance_from_census, Phase, PodLayout};
 use crate::models::registry::ModelProfile;
 use crate::netsim::{torus2d_gradsum_makespan, Dir, Message, NetParams, NetSim, Torus};
@@ -314,6 +315,12 @@ pub struct SweepCache {
     makespans: Mutex<HashMap<(usize, usize, u64, bool), f64>>,
     /// (model, participating shards) → weight-update shard imbalance.
     imbalance: Mutex<HashMap<(&'static str, usize), f64>>,
+    /// Hit/miss tallies (relaxed; purely observational — they feed the
+    /// `sweep.cache.*` trace counters and never affect results).
+    makespan_hits: AtomicU64,
+    makespan_misses: AtomicU64,
+    imbalance_hits: AtomicU64,
+    imbalance_misses: AtomicU64,
 }
 
 impl SweepCache {
@@ -326,8 +333,10 @@ impl SweepCache {
         let torus = Torus::for_chips_idle(chips.max(1), PodLayout::TORUS_MAX_ASPECT).0;
         let key = (torus.nx, torus.ny, payload_bytes.to_bits(), two_d);
         if let Some(&v) = self.makespans.lock().unwrap().get(&key) {
+            self.makespan_hits.fetch_add(1, Ordering::Relaxed);
             return v;
         }
+        self.makespan_misses.fetch_add(1, Ordering::Relaxed);
         let v = if two_d {
             torus2d_gradsum_makespan(torus, payload_bytes, &NetParams::default())
         } else {
@@ -340,8 +349,10 @@ impl SweepCache {
     fn shard_imbalance(&self, ctx: &ScenarioCtx, shards: usize) -> f64 {
         let key = (ctx.profile.name, shards);
         if let Some(&v) = self.imbalance.lock().unwrap().get(&key) {
+            self.imbalance_hits.fetch_add(1, Ordering::Relaxed);
             return v;
         }
+        self.imbalance_misses.fetch_add(1, Ordering::Relaxed);
         let v = shard_imbalance_from_census(&ctx.census, shards);
         self.imbalance.lock().unwrap().insert(key, v);
         v
@@ -375,6 +386,16 @@ impl SweepRunner {
     /// report is byte-identical to `jobs = 1` regardless of thread count
     /// or scheduling order.
     pub fn run_jobs(&self, jobs: usize) -> Result<SweepReport, String> {
+        self.run_jobs_traced(jobs, &TraceSink::disabled())
+    }
+
+    /// [`SweepRunner::run_jobs`] with per-point `sweep.point` spans on one
+    /// trace track per worker (queue-wait attribution in the span attrs)
+    /// and `sweep.cache.*` hit/miss counters on the coordinator track.
+    /// The report itself is identical to the untraced run; the *trace*
+    /// event sequence is only deterministic at `jobs = 1`, where points
+    /// retire in grid order on a single track.
+    pub fn run_jobs_traced(&self, jobs: usize, sink: &TraceSink) -> Result<SweepReport, String> {
         let mut ctxs = Vec::with_capacity(self.scenarios.len());
         for s in &self.scenarios {
             ctxs.push(ScenarioCtx::new(s)?);
@@ -387,23 +408,40 @@ impl SweepRunner {
             .collect();
         let jobs = pool_workers(jobs, points.len());
         let cache = SweepCache::default();
+        let mut co = sink.local(TRACK_COORD, 0);
+        let pool0 = co.start();
+        co.instant("sweep.pool.start", || {
+            vec![("points", AttrVal::from(points.len())), ("workers", AttrVal::from(jobs))]
+        });
         let mut records: Vec<Option<SweepRecord>> = Vec::new();
         records.resize_with(points.len(), || None);
         if jobs == 1 {
-            for (slot, &(si, chips)) in records.iter_mut().zip(&points) {
+            let mut tl = sink.local(TRACK_SWEEP_BASE, 0);
+            for (i, (slot, &(si, chips))) in records.iter_mut().zip(&points).enumerate() {
+                let t0 = tl.start();
                 *slot = Some(sweep_point_ctx(&self.scenarios[si], &ctxs[si], chips, &cache));
+                let name = self.scenarios[si].name.clone();
+                tl.span("sweep.point", t0, || {
+                    vec![
+                        ("scenario", AttrVal::Str(name)),
+                        ("chips", AttrVal::from(chips)),
+                        ("point", AttrVal::from(i)),
+                        ("queue_wait_s", AttrVal::Num(t0 - pool0)),
+                    ]
+                });
             }
         } else {
             let next = AtomicUsize::new(0);
             let mut buckets: Vec<Vec<(usize, SweepRecord)>> = Vec::new();
             std::thread::scope(|scope| {
                 let mut handles = Vec::new();
-                for _ in 0..jobs {
+                for w in 0..jobs {
                     let next = &next;
                     let points = &points;
                     let scenarios = &self.scenarios;
                     let ctxs = &ctxs;
                     let cache = &cache;
+                    let mut tl = sink.local(TRACK_SWEEP_BASE + w as u32, 0);
                     handles.push(scope.spawn(move || {
                         let mut out = Vec::new();
                         loop {
@@ -412,7 +450,17 @@ impl SweepRunner {
                                 break;
                             }
                             let (si, chips) = points[i];
+                            let t0 = tl.start();
                             let rec = sweep_point_ctx(&scenarios[si], &ctxs[si], chips, cache);
+                            let name = scenarios[si].name.clone();
+                            tl.span("sweep.point", t0, || {
+                                vec![
+                                    ("scenario", AttrVal::Str(name)),
+                                    ("chips", AttrVal::from(chips)),
+                                    ("point", AttrVal::from(i)),
+                                    ("queue_wait_s", AttrVal::Num(t0 - pool0)),
+                                ]
+                            });
                             out.push((i, rec));
                         }
                         out
@@ -426,6 +474,19 @@ impl SweepRunner {
                 records[i] = Some(rec);
             }
         }
+        co.counter("sweep.cache.makespan_hits", cache.makespan_hits.load(Ordering::Relaxed) as f64);
+        co.counter(
+            "sweep.cache.makespan_misses",
+            cache.makespan_misses.load(Ordering::Relaxed) as f64,
+        );
+        co.counter(
+            "sweep.cache.imbalance_hits",
+            cache.imbalance_hits.load(Ordering::Relaxed) as f64,
+        );
+        co.counter(
+            "sweep.cache.imbalance_misses",
+            cache.imbalance_misses.load(Ordering::Relaxed) as f64,
+        );
         Ok(SweepReport {
             records: records.into_iter().map(|r| r.expect("sweep point not computed")).collect(),
         })

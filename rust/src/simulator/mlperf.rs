@@ -16,7 +16,7 @@
 //! update or eval time.
 
 use crate::costs::{spatial_factors, CostConfig, CostStack, Phase, PhaseCost, PodLayout};
-use crate::devicesim::TPU_V3;
+use crate::devicesim::{Device, TPU_V3};
 use crate::models::registry::{Layout, ModelProfile};
 use crate::netsim::ArAlgo;
 
@@ -33,6 +33,10 @@ pub struct SimOptions {
     /// Override the submission layout policy (scenario sweeps with a fixed
     /// global batch use this for strong-scaling studies).
     pub layout_override: Option<Layout>,
+    /// Live-calibrated compute coefficient (`sweep --costs-from`): price
+    /// compute with [`Device::with_compute_gflops`] instead of the TPU-v3
+    /// datasheet roofline. `None` = the stock [`TPU_V3`] device.
+    pub compute_gflops: Option<f64>,
 }
 
 impl Default for SimOptions {
@@ -45,6 +49,7 @@ impl Default for SimOptions {
             spatial_partitioning: true,
             epochs_override: None,
             layout_override: None,
+            compute_gflops: None,
         }
     }
 }
@@ -53,6 +58,10 @@ impl SimOptions {
     /// The cost-layer configuration these toggles select.
     pub fn cost_config(&self) -> CostConfig {
         CostConfig {
+            dev: match self.compute_gflops {
+                Some(g) => Device::with_compute_gflops(g),
+                None => TPU_V3,
+            },
             gradsum_algo: if self.gradsum_2d { ArAlgo::Torus2D } else { ArAlgo::Ring1D },
             gradsum_pipelined: self.gradsum_pipelined,
             weight_update_sharding: self.weight_update_sharding,

@@ -1,0 +1,29 @@
+//! Tier-1 perf harness for the tracing layer: run the same seeded
+//! reference-trainer job with the sink disabled and enabled, cross-check
+//! bit-identity (losses + final params), and record the wall-clocks in
+//! `BENCH_trace.json` at the workspace root so every `cargo test` run
+//! refreshes the overhead trajectory. The acceptance bound (disabled ~0,
+//! enabled <5%) is read from the artifact, not asserted here — CI
+//! machines are noisy and the run is short.
+
+use tpu_pod_train::scenario::run_trace_bench;
+use tpu_pod_train::util::json::Json;
+
+#[test]
+fn trace_overhead_records_perf_trajectory() {
+    let bench = run_trace_bench("transformer", 2, 40)
+        .expect("trace bench (bit-identity cross-check)");
+    assert!(bench.disabled_s > 0.0 && bench.enabled_s > 0.0);
+    assert!(bench.events > 0, "enabled run must record events");
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_trace.json");
+    bench.write(path).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+
+    // Round-trip: the record parses and carries the headline fields.
+    let text = std::fs::read_to_string(path).unwrap();
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(j.get("bench").and_then(|v| v.as_str()), Some("trace_overhead"));
+    assert!(j.get("events").and_then(Json::as_usize).unwrap() > 0);
+    let pct = j.get("overhead_pct").and_then(Json::as_f64).unwrap();
+    assert!(pct.is_finite(), "overhead_pct must be finite, got {pct}");
+}

@@ -1,0 +1,182 @@
+//! End-to-end contract tests for the structured tracing layer:
+//!
+//! 1. a traced run (evals + checkpoints + an injected fault) is
+//!    deterministic modulo timestamps (`Trace::canonical_dump` is
+//!    byte-identical across two seeded runs);
+//! 2. tracing never perturbs the numerics: disabled-vs-enabled runs are
+//!    bit-identical in step losses and final params across SGD/Adam/LARS
+//!    and replicated/WUS updates;
+//! 3. the JSONL export round-trips losslessly and the accounting
+//!    cross-check (`summarize`) passes against the run's own counters;
+//! 4. the Chrome export names every phase/track and round-trips within
+//!    tolerance;
+//! 5. a tampered trace fails the cross-check (the nonzero-exit contract
+//!    of `trace summarize`).
+
+use tpu_pod_train::coordinator::{train, OptChoice, TrainConfig};
+use tpu_pod_train::metrics::{summarize, Trace, TraceSink, DEFAULT_TOLERANCE};
+use tpu_pod_train::optim::{AdamConfig, LarsConfig};
+use tpu_pod_train::scenario::{FaultEvent, FaultKind, FaultTrace};
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("trace-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The full-surface config: evals, durable checkpoints, and one injected
+/// chip death (step 17, after the step-10 checkpoint) so the trace carries
+/// eval spans, ckpt write/publish spans, a rollback and two incarnations.
+fn faulted_cfg(dir: &std::path::Path, sink: TraceSink) -> TrainConfig {
+    let mut cfg = TrainConfig::quick("transformer", 4, 30);
+    cfg.eval_every = 10;
+    cfg.eval_examples = 64;
+    cfg.checkpoint_every = 10;
+    cfg.checkpoint_dir = Some(dir.to_path_buf());
+    cfg.faults = Some(FaultTrace {
+        name: "trace-test".into(),
+        ckpt_every_steps: 10,
+        restore_seconds: 0.0,
+        events: vec![FaultEvent { step: 17, chip: 1, kind: FaultKind::Death }],
+    });
+    cfg.trace = sink;
+    cfg
+}
+
+#[test]
+fn traced_run_is_deterministic_modulo_timestamps() {
+    let d1 = tmpdir("det1");
+    let d2 = tmpdir("det2");
+    let s1 = TraceSink::enabled();
+    train(&faulted_cfg(&d1, s1.clone())).unwrap();
+    let s2 = TraceSink::enabled();
+    train(&faulted_cfg(&d2, s2.clone())).unwrap();
+    let t1 = s1.drain();
+    let t2 = s2.drain();
+    assert!(!t1.is_empty(), "traced run recorded nothing");
+    assert_eq!(
+        t1.canonical_dump(),
+        t2.canonical_dump(),
+        "two seeded runs must produce byte-identical canonical dumps"
+    );
+    let _ = std::fs::remove_dir_all(&d1);
+    let _ = std::fs::remove_dir_all(&d2);
+}
+
+#[test]
+fn tracing_never_perturbs_numerics() {
+    let optimizers: [(&str, OptChoice); 3] = [
+        ("sgd", OptChoice::Sgd { lr: 0.05, momentum: 0.9 }),
+        ("adam", OptChoice::Adam { cfg: AdamConfig::default(), lr: 1e-3 }),
+        ("lars", OptChoice::Lars { cfg: LarsConfig::default(), lr: 1.0 }),
+    ];
+    for (label, opt) in &optimizers {
+        for wus in [false, true] {
+            let mk = |sink: TraceSink| {
+                let mut c = TrainConfig::quick("transformer", 2, 10);
+                c.eval_every = 5;
+                c.eval_examples = 64;
+                c.opt = opt.clone();
+                c.use_wus = wus;
+                c.trace = sink;
+                c
+            };
+            let off = train(&mk(TraceSink::disabled())).unwrap();
+            let sink = TraceSink::enabled();
+            let on = train(&mk(sink.clone())).unwrap();
+            assert!(!sink.drain().is_empty(), "{label} wus={wus}: no events recorded");
+
+            assert_eq!(off.step_losses.len(), on.step_losses.len(), "{label} wus={wus}");
+            for (a, b) in off.step_losses.iter().zip(&on.step_losses) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{label} wus={wus}: losses diverged");
+            }
+            assert_eq!(off.final_params.len(), on.final_params.len(), "{label} wus={wus}");
+            for (pa, pb) in off.final_params.iter().zip(&on.final_params) {
+                assert_eq!(pa.len(), pb.len(), "{label} wus={wus}");
+                for (x, y) in pa.iter().zip(pb) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{label} wus={wus}: params diverged");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn jsonl_round_trip_passes_the_accounting_cross_check() {
+    let dir = tmpdir("jsonl");
+    let sink = TraceSink::enabled();
+    train(&faulted_cfg(&dir, sink.clone())).unwrap();
+    let t = sink.drain();
+
+    let path = dir.join("trace.jsonl");
+    t.write(&path).unwrap();
+    let back = Trace::load(&path).unwrap();
+    assert_eq!(back.len(), t.len());
+    assert_eq!(back.canonical_dump(), t.canonical_dump(), "JSONL round-trip lost events");
+
+    let s = summarize(&back, DEFAULT_TOLERANCE);
+    assert!(!s.checks.is_empty(), "trainer trace must carry report.* counters");
+    assert!(s.ok(), "accounting cross-check failed: {:#?}", s.checks);
+    // The injected death shows up in the goodput story.
+    assert!(s.timeline.iter().any(|l| l.contains("dies")), "{:?}", s.timeline);
+    assert!(s.timeline.iter().any(|l| l.contains("rollback")), "{:?}", s.timeline);
+    let goodput = s.counters.get("report.goodput").copied().unwrap();
+    assert!(goodput < 1.0, "rollback must cost goodput, got {goodput}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn chrome_export_names_phases_tracks_and_faults() {
+    let dir = tmpdir("chrome");
+    let sink = TraceSink::enabled();
+    train(&faulted_cfg(&dir, sink.clone())).unwrap();
+    let t = sink.drain();
+
+    let text = t.to_chrome();
+    for needle in [
+        "\"traceEvents\"",
+        "\"ph\":\"X\"",
+        "trainer.fwd",
+        "trainer.bwd",
+        "trainer.gradsum",
+        "trainer.update",
+        "trainer.eval",
+        "ckpt.write",
+        "ckpt.publish",
+        "fault.death",
+        "rollback",
+        "incarnation.start",
+        "rank0-steps",
+        "ckpt-writer",
+        "coordinator",
+    ] {
+        assert!(text.contains(needle), "chrome export missing {needle:?}");
+    }
+    // Round-trips (µs timestamps) and still reconciles with the report.
+    let back = Trace::parse(&text).unwrap();
+    assert_eq!(back.len(), t.len());
+    let s = summarize(&back, DEFAULT_TOLERANCE);
+    assert!(s.ok(), "chrome round-trip broke the cross-check: {:#?}", s.checks);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tampered_trace_fails_the_cross_check() {
+    let sink = TraceSink::enabled();
+    let mut cfg = TrainConfig::quick("transformer", 2, 8);
+    cfg.trace = sink.clone();
+    train(&cfg).unwrap();
+    let mut t = sink.drain();
+    assert!(summarize(&t, DEFAULT_TOLERANCE).ok(), "untampered trace must pass");
+
+    // Claim one more step than the spans show: the exact count check trips.
+    for ev in t.events.iter_mut() {
+        if ev.name == "report.steps" {
+            ev.dur_s += 1.0;
+        }
+    }
+    let s = summarize(&t, DEFAULT_TOLERANCE);
+    assert!(!s.ok(), "tampered step count must fail the cross-check");
+    assert!(s.checks.iter().any(|c| !c.ok && c.name.contains("steps")));
+}
