@@ -224,7 +224,7 @@ fn sim_point(family: &str, cores: usize, batch: usize) -> Result<(f64, f64, f64,
         model(family).ok_or_else(|| anyhow!("no registry profile for family {family:?}"))?;
     let layout =
         Layout { cores, mp: 1, replicas: cores, global_batch: cores * batch };
-    let options = SimOptions { layout_override: Some(layout), ..Default::default() };
+    let options = SimOptions::submission().layout(layout);
     let r = simulate(&profile, cores, &options);
     Ok((r.compute_seconds, r.gradsum_seconds, r.update_seconds, r.step_seconds))
 }

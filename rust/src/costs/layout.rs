@@ -12,7 +12,7 @@
 //! *participating* core set this type derives.
 
 use crate::models::registry::Layout;
-use crate::netsim::Torus;
+use crate::netsim::{Placement, PodSpec, TopologySpec, Torus};
 
 /// Core-participation view of a [`Layout`] on a TPU-v3 pod slice
 /// (2 cores per chip).
@@ -25,11 +25,26 @@ pub struct PodLayout {
     /// Data-parallel replica count.
     pub replicas: usize,
     pub global_batch: usize,
+    /// Multi-pod shape of the allocation. The default single-pod spec
+    /// collapses every price to the flat-torus model bit-identically.
+    pub pods: PodSpec,
 }
 
 impl PodLayout {
     pub fn from_layout(l: &Layout) -> PodLayout {
-        PodLayout { cores: l.cores, mp: l.mp, replicas: l.replicas, global_batch: l.global_batch }
+        PodLayout {
+            cores: l.cores,
+            mp: l.mp,
+            replicas: l.replicas,
+            global_batch: l.global_batch,
+            pods: PodSpec::default(),
+        }
+    }
+
+    /// The same layout spanning a multi-pod group.
+    pub fn with_pods(mut self, pods: PodSpec) -> PodLayout {
+        self.pods = pods;
+        self
     }
 
     /// Cores that hold a replica shard and do per-step work.
@@ -82,14 +97,35 @@ impl PodLayout {
     /// remainder explicitly idle ([`idle_torus_chips`](Self::idle_torus_chips)).
     /// Power-of-two participations keep their exact historical slices.
     pub fn participating_torus(&self) -> Torus {
-        Torus::for_chips_idle((self.participating_cores() / 2).max(1), Self::TORUS_MAX_ASPECT).0
+        TopologySpec::Capped { max_aspect: Self::TORUS_MAX_ASPECT }
+            .place((self.participating_cores() / 2).max(1))
+            .pod_torus
     }
 
     /// Chips left out of the participating torus because the survivor count
     /// does not factor into an acceptable rectangle (0 for well-factoring
     /// counts, including every power of two).
     pub fn idle_torus_chips(&self) -> usize {
-        Torus::for_chips_idle((self.participating_cores() / 2).max(1), Self::TORUS_MAX_ASPECT).1
+        TopologySpec::Capped { max_aspect: Self::TORUS_MAX_ASPECT }
+            .place((self.participating_cores() / 2).max(1))
+            .idle
+    }
+
+    /// Multi-pod placement of the participating chips: the collapsed
+    /// single-pod spec reproduces [`participating_torus`](Self::participating_torus)
+    /// exactly; a real hierarchy splits the chips evenly across pods.
+    pub fn pod_group(&self) -> Placement {
+        let chips = (self.participating_cores() / 2).max(1);
+        if self.pods.collapses() {
+            TopologySpec::Capped { max_aspect: Self::TORUS_MAX_ASPECT }.place(chips)
+        } else {
+            TopologySpec::Pods {
+                pods: self.pods.pods,
+                max_aspect: Self::TORUS_MAX_ASPECT,
+                inter_pod_ratio: self.pods.inter_pod_ratio,
+            }
+            .place(chips)
+        }
     }
 }
 
@@ -149,6 +185,18 @@ mod tests {
         let p = layout(194, 1, 194, 1024);
         assert_eq!(p.participating_torus().chips(), 96);
         assert_eq!(p.idle_torus_chips(), 1);
+    }
+
+    #[test]
+    fn pod_group_collapses_to_the_participating_torus() {
+        let p = layout(2048, 1, 2048, 32768);
+        let g = p.pod_group();
+        assert_eq!((g.pods, g.pod_torus.chips()), (1, 1024));
+        assert_eq!(g.pod_torus.chips(), p.participating_torus().chips());
+        // A real hierarchy splits the same chips across pods.
+        let multi = p.with_pods(PodSpec::new(2, 0.25)).pod_group();
+        assert_eq!((multi.pods, multi.pod_torus.chips()), (2, 512));
+        assert_eq!(multi.used_chips(), 1024);
     }
 
     #[test]

@@ -17,7 +17,10 @@
 use crate::devicesim::{weight_update_cost, Device, TPU_V3};
 use crate::evaluation::EvalSharding;
 use crate::models::registry::ModelProfile;
-use crate::netsim::{ArAlgo, CostModel, GradSumModel, NetParams, Torus};
+use crate::netsim::{
+    cross_pod_ring_seconds, ArAlgo, CostModel, CrossPodStrategy, GradSumModel, NetParams,
+    TopologySpec, Torus,
+};
 use crate::spatial::plan::{maskrcnn_stage1_layers, plan, ssd_layers};
 use crate::wus::ShardPlan;
 
@@ -233,11 +236,27 @@ impl StepCostModel for HaloPhase {
 }
 
 /// Gradient-summation phase: the §2 schedule over the participating
-/// torus (surplus chips carry no all-reduce traffic).
+/// torus (surplus chips carry no all-reduce traffic). Multi-pod layouts
+/// ([`PodLayout::pods`]) add a cross-pod term: hierarchical
+/// reduce-then-broadcast prices the intra-pod schedule plus a shard
+/// all-reduce over the slow inter-pod links; the flat-ring strategy
+/// prices one global 1-D ring whose every step runs at the inter-pod
+/// rate. Single-pod layouts are priced by the pre-hierarchy code path
+/// verbatim (bit-identical — pinned by the golden fixtures).
 pub struct GradSumPhase {
     pub net: NetParams,
     pub algo: ArAlgo,
     pub pipelined: bool,
+}
+
+impl GradSumPhase {
+    fn schedule_seconds(&self, gs: &GradSumModel, tensors: &[f64]) -> f64 {
+        if self.pipelined {
+            gs.pipelined(tensors)
+        } else {
+            gs.serial(tensors)
+        }
+    }
 }
 
 impl StepCostModel for GradSumPhase {
@@ -246,13 +265,37 @@ impl StepCostModel for GradSumPhase {
     }
 
     fn cost(&self, m: &ModelProfile, pod: &PodLayout) -> PhaseCost {
-        let net = CostModel::new(pod.participating_torus(), self.net);
-        let gs = GradSumModel { cost: &net, algo: self.algo };
         let tensors = m.gradient_bytes();
-        let seconds = if self.pipelined {
-            gs.pipelined(&tensors)
+        let seconds = if pod.pods.collapses() {
+            let net = CostModel::new(pod.participating_torus(), self.net);
+            let gs = GradSumModel { cost: &net, algo: self.algo };
+            self.schedule_seconds(&gs, &tensors)
         } else {
-            gs.serial(&tensors)
+            let group = pod.pod_group();
+            match pod.pods.strategy {
+                CrossPodStrategy::Hierarchical => {
+                    let net = CostModel::new(group.pod_torus, self.net);
+                    let gs = GradSumModel { cost: &net, algo: self.algo };
+                    let intra = self.schedule_seconds(&gs, &tensors);
+                    let total: f64 = tensors.iter().sum();
+                    let shard = total / group.pod_torus.chips().max(1) as f64;
+                    intra + cross_pod_ring_seconds(pod.pods, shard, &self.net)
+                }
+                CrossPodStrategy::FlatRing => {
+                    // One global ring; the boundary links gate every step,
+                    // so the whole ring runs at the inter-pod rate.
+                    let slow = NetParams {
+                        link_bw: pod.pods.inter_pod_ratio * self.net.link_bw,
+                        ..self.net
+                    };
+                    let flat = TopologySpec::Capped { max_aspect: PodLayout::TORUS_MAX_ASPECT }
+                        .place(group.used_chips().max(1))
+                        .pod_torus;
+                    let net = CostModel::new(flat, slow);
+                    let gs = GradSumModel { cost: &net, algo: ArAlgo::Ring1D };
+                    self.schedule_seconds(&gs, &tensors)
+                }
+            }
         };
         PhaseCost { phase: Phase::GradSum, seconds, cores: pod.gradsum_cores() }
     }
@@ -508,6 +551,46 @@ mod tests {
         let f = spatial_factors(&ssd, 4, &TPU_V3);
         assert!((1.4..1.9).contains(&f.speedup), "SSD 4-way speedup {}", f.speedup);
         assert!(f.comm_fraction > 0.0 && f.comm_fraction < 1.0);
+    }
+
+    #[test]
+    fn multi_pod_gradsum_adds_a_cross_pod_term() {
+        use crate::netsim::PodSpec;
+        let m = model("resnet50").unwrap();
+        let stack = CostStack::standard(&CostConfig::default());
+        let single = stack.breakdown(&m, &pod(2048, 1, 2048, 32768));
+        let collapsed =
+            stack.breakdown(&m, &pod(2048, 1, 2048, 32768).with_pods(PodSpec::new(2, 1.0)));
+        // Ratio 1.0 collapses: bit-identical to the single-pod price.
+        assert_eq!(
+            single.seconds(Phase::GradSum).to_bits(),
+            collapsed.seconds(Phase::GradSum).to_bits()
+        );
+        let hier =
+            stack.breakdown(&m, &pod(2048, 1, 2048, 32768).with_pods(PodSpec::new(2, 0.25)));
+        let slower =
+            stack.breakdown(&m, &pod(2048, 1, 2048, 32768).with_pods(PodSpec::new(2, 0.05)));
+        assert!(
+            slower.seconds(Phase::GradSum) > hier.seconds(Phase::GradSum),
+            "slower inter-pod links must cost more: {} vs {}",
+            slower.seconds(Phase::GradSum),
+            hier.seconds(Phase::GradSum)
+        );
+        let flat = stack.breakdown(
+            &m,
+            &pod(2048, 1, 2048, 32768).with_pods(PodSpec {
+                strategy: CrossPodStrategy::FlatRing,
+                ..PodSpec::new(2, 0.25)
+            }),
+        );
+        assert!(
+            flat.seconds(Phase::GradSum) > hier.seconds(Phase::GradSum),
+            "the global slow ring must lose to hierarchical reduce-then-broadcast"
+        );
+        // Only gradient summation crosses pod boundaries.
+        for phase in [Phase::Compute, Phase::Halo, Phase::WeightUpdate, Phase::Eval] {
+            assert_eq!(single.seconds(phase).to_bits(), hier.seconds(phase).to_bits());
+        }
     }
 
     #[test]

@@ -33,6 +33,19 @@
 //! [`spatial`]. No phase is priced over raw machine cores, so
 //! fixed-batch strong-scaling sweeps cannot overstate scaling.
 //!
+//! The network layer is hierarchical: [`netsim::TopologySpec`] places a
+//! chip count onto a flat 2-D torus or a [`netsim::PodSpec`] pod group
+//! (N intra-pod tori joined by slower inter-pod links), and cross-pod
+//! gradient summation prices either reduce-then-broadcast
+//! ([`netsim::CrossPodStrategy::Hierarchical`]) or one flat ring over
+//! the boundary links. Single-pod specs collapse bit-identically to the
+//! flat torus, non-uniform payload schedules route around the
+//! `netsim::fastpath` symmetry shortcut through the event-driven
+//! simulator, and concurrent phases (gradsum + halo) can share link
+//! bandwidth in one simulation
+//! ([`netsim::concurrent_gradsum_halo_makespan`]);
+//! `rust/tests/multipod.rs` pins all three properties.
+//!
 //! The paper's actual experiment is a *sweep*: each MLPerf model across
 //! pod slices (16 → 1024 chips) with weight-update sharding, spatial
 //! partitioning, gradient-summation schedule and optimizer co-tuned per

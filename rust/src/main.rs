@@ -30,6 +30,7 @@ use tpu_pod_train::config::Config;
 use tpu_pod_train::coordinator::{train, GradSumMode, OptChoice, TrainConfig};
 use tpu_pod_train::metrics::{summarize, Trace, TraceSink, DEFAULT_TOLERANCE};
 use tpu_pod_train::models::{all_models, model};
+use tpu_pod_train::netsim::CrossPodStrategy;
 use tpu_pod_train::optim::{AdamConfig, LarsConfig, LarsVariant};
 use tpu_pod_train::runtime::{BackendChoice, Manifest};
 use tpu_pod_train::scenario::{
@@ -281,6 +282,9 @@ fn cmd_simulate(tokens: &[String]) -> i32 {
     let cli = Cli::new("simulate", "TPU-v3 pod time-to-train simulation")
         .opt("model", "resnet50", "resnet50|ssd|maskrcnn|transformer|gnmt")
         .opt("cores", "2048", "TPU-v3 cores")
+        .opt("pods", "1", "pods in the group (hierarchical multi-pod topology)")
+        .opt("inter-pod-ratio", "1", "inter-pod : intra-pod link bandwidth ratio, in (0, 1]")
+        .opt("cross-pod", "hierarchical", "cross-pod gradsum strategy: hierarchical|flat-ring")
         .flag("no-wus", "disable weight-update sharding")
         .flag("no-pipelining", "disable pipelined gradient summation")
         .flag("no-2d", "use 1-D ring gradient summation")
@@ -298,18 +302,41 @@ fn cmd_simulate(tokens: &[String]) -> i32 {
         eprintln!("unknown model {name}");
         return 2;
     };
-    let opts = SimOptions {
-        gradsum_2d: !a.flag("no-2d"),
-        gradsum_pipelined: !a.flag("no-pipelining"),
-        weight_update_sharding: !a.flag("no-wus"),
-        distributed_eval: !a.flag("no-dist-eval"),
-        spatial_partitioning: !a.flag("no-spatial"),
-        epochs_override: None,
-        layout_override: None,
-        compute_gflops: None,
+    let xp_arg = a.get_or("cross-pod", "hierarchical");
+    let Some(xp) = CrossPodStrategy::parse(&xp_arg) else {
+        eprintln!("bad --cross-pod value {xp_arg:?} (expected hierarchical or flat-ring)");
+        return 2;
     };
+    let mut opts = SimOptions::submission()
+        .pods(a.get_usize("pods", 1), a.get_f64("inter-pod-ratio", 1.0))
+        .cross_pod(xp);
+    if let Err(e) = opts.pods.validate() {
+        eprintln!("simulate: {e}");
+        return 2;
+    }
+    if a.flag("no-2d") {
+        opts = opts.ring_gradsum();
+    }
+    if a.flag("no-pipelining") {
+        opts = opts.serial_gradsum();
+    }
+    if a.flag("no-wus") {
+        opts = opts.without_wus();
+    }
+    if a.flag("no-dist-eval") {
+        opts = opts.without_distributed_eval();
+    }
+    if a.flag("no-spatial") {
+        opts = opts.without_spatial();
+    }
     let r = simulate(&m, a.get_usize("cores", 2048), &opts);
     println!("{name} @ {} cores: layout {:?}", r.cores, r.layout);
+    if !opts.pods.collapses() {
+        println!(
+            "  pod group: {} pods @ inter-pod bandwidth ratio {}, {} cross-pod gradsum",
+            opts.pods.pods, opts.pods.inter_pod_ratio, opts.pods.strategy.label()
+        );
+    }
     println!(
         "  participating {} cores ({} surplus/idle)",
         r.participating_cores, r.surplus_cores
@@ -409,6 +436,17 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
         .opt("model", "", "resnet50|ssd|maskrcnn|transformer|gnmt|all (all with --grid)")
         .opt("chips", "", "TPU-v3 chip counts (default 16,64,256,1024; paper ladder with --grid)")
         .opt("batch", "0", "fixed global batch (0 = submission layout policy)")
+        .opt("pods", "1", "pods in the group; a comma list with --grid adds a grid axis")
+        .opt(
+            "inter-pod-ratio",
+            "1",
+            "inter-pod : intra-pod bandwidth ratio in (0, 1]; comma list with --grid",
+        )
+        .opt(
+            "cross-pod",
+            "hierarchical",
+            "cross-pod gradsum: hierarchical|flat-ring; comma list with --grid",
+        )
         .opt("jobs", "1", "point-execution workers (0 = one per core; output matches --jobs 1)")
         .opt("out", "", "also write the JSON report to this file")
         .opt("compare", "", "baseline SweepReport JSON to diff against (exit 1 on regression)")
@@ -462,6 +500,16 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
         if !a.get_or("compare", "").is_empty() {
             eprintln!("--compare conflicts with --live");
             return 2;
+        }
+        for (name, default) in
+            [("pods", "1"), ("inter-pod-ratio", "1"), ("cross-pod", "hierarchical")]
+        {
+            if a.get_or(name, default) != default {
+                eprintln!(
+                    "--{name} conflicts with --live (the live grid runs the reference trainer)"
+                );
+                return 2;
+            }
         }
         if !a.get_or("costs-from", "").is_empty() {
             eprintln!("--costs-from conflicts with --live (--live *produces* the calibration)");
@@ -603,6 +651,59 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
             return 2;
         }
     };
+    let mut pods_axis = Vec::new();
+    for tok in a.get_or("pods", "1").split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        match tok.parse::<usize>() {
+            Ok(p) if p >= 1 => pods_axis.push(p),
+            _ => {
+                eprintln!(
+                    "bad --pods value {tok:?} (expected positive integers, e.g. --pods 1,2,4)"
+                );
+                return 2;
+            }
+        }
+    }
+    if pods_axis.is_empty() {
+        pods_axis.push(1);
+    }
+    let mut ratio_axis = Vec::new();
+    for tok in a.get_or("inter-pod-ratio", "1").split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        match tok.parse::<f64>() {
+            Ok(r) if r > 0.0 && r <= 1.0 => ratio_axis.push(r),
+            _ => {
+                eprintln!("bad --inter-pod-ratio value {tok:?} (expected ratios in (0, 1])");
+                return 2;
+            }
+        }
+    }
+    if ratio_axis.is_empty() {
+        ratio_axis.push(1.0);
+    }
+    let mut xp_axis = Vec::new();
+    for tok in a.get_or("cross-pod", "hierarchical").split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        match CrossPodStrategy::parse(tok) {
+            Some(s) => xp_axis.push(s),
+            None => {
+                eprintln!("bad --cross-pod value {tok:?} (expected hierarchical or flat-ring)");
+                return 2;
+            }
+        }
+    }
+    if xp_axis.is_empty() {
+        xp_axis.push(CrossPodStrategy::Hierarchical);
+    }
     let scenarios: Vec<ScalingScenario> = if grid_mode {
         // The §2 cross-product; --model/--chips narrow it, the per-axis
         // flags are meaningless here (the grid sweeps both settings).
@@ -625,6 +726,9 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
         if !chips.is_empty() {
             g.chips = chips;
         }
+        g.pods = pods_axis;
+        g.inter_pod_ratios = ratio_axis;
+        g.cross_pod = xp_axis;
         let workers = tpu_pod_train::scenario::pool_workers(jobs, g.point_count());
         eprintln!(
             "ablation grid: {} scenarios x {} chip counts = {} points ({} workers)",
@@ -638,6 +742,14 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
         if chips.is_empty() {
             chips = vec![16, 64, 256, 1024];
         }
+        if pods_axis.len() > 1 || ratio_axis.len() > 1 || xp_axis.len() > 1 {
+            eprintln!(
+                "comma lists for --pods/--inter-pod-ratio/--cross-pod need --grid \
+                 (a plain sweep takes one value per axis)"
+            );
+            return 2;
+        }
+        let (pods_one, ratio_one, xp_one) = (pods_axis[0], ratio_axis[0], xp_axis[0]);
         let gradsum = match (!a.flag("no-2d"), !a.flag("serial-gradsum")) {
             (true, true) => GradSumChoice::Pipelined2D,
             (true, false) => GradSumChoice::Serial2D,
@@ -648,7 +760,9 @@ fn cmd_sweep(tokens: &[String]) -> i32 {
             .iter()
             .map(|name| {
                 let mut s = ScalingScenario::submission(name, chips.clone())
-                    .named(format!("sweep-{name}"));
+                    .named(format!("sweep-{name}"))
+                    .with_pods(pods_one, ratio_one)
+                    .with_cross_pod(xp_one);
                 if batch > 0 {
                     s = s.with_batch(BatchSchedule::Fixed(batch));
                 }
@@ -779,7 +893,8 @@ fn cmd_faults(tokens: &[String]) -> i32 {
         .opt("name", "trace", "trace name (recorded in the JSON)")
         .opt("seed", "0", "rng seed (traces are deterministic given the seed)")
         .opt("steps", "1000", "training steps the trace covers")
-        .opt("chips", "16", "failure domains (simulator chips / trainer ranks)")
+        .opt("chips", "16", "failure domains per pod (simulator chips / trainer ranks)")
+        .opt("pods", "1", "pods in the group: traces cover the global chips x pods slice")
         .opt("ckpt-every", "100", "simulator-side durable checkpoint cadence in steps")
         .opt("restore-seconds", "30", "wall-clock cost of one checkpoint restore")
         .opt("slowdown-rate", "0.001", "per-chip-step probability of a straggler window")
@@ -793,6 +908,14 @@ fn cmd_faults(tokens: &[String]) -> i32 {
             return 2;
         }
     };
+    let pods = a.get_usize("pods", 1);
+    if pods == 0 {
+        eprintln!("--pods must be at least 1");
+        return 2;
+    }
+    // Multi-pod jobs address chips globally, so both generation and
+    // validation work on the whole pod group, not one pod's slice.
+    let chips = a.get_usize("chips", 16) * pods;
     let validate_path = a.get_or("validate", "");
     if !validate_path.is_empty() {
         // Structural validation (ordering, zero steps, empty windows)
@@ -807,7 +930,6 @@ fn cmd_faults(tokens: &[String]) -> i32 {
             }
         };
         let steps = a.get_usize("steps", 1000) as u64;
-        let chips = a.get_usize("chips", 16);
         if let Err(e) = trace.validate_in_context(steps, chips) {
             eprintln!("invalid fault trace {validate_path}: {e}");
             return 1;
@@ -825,7 +947,7 @@ fn cmd_faults(tokens: &[String]) -> i32 {
         &a.get_or("name", "trace"),
         a.get_usize("seed", 0) as u64,
         a.get_usize("steps", 1000) as u64,
-        a.get_usize("chips", 16),
+        chips,
         a.get_usize("ckpt-every", 100) as u64,
         a.get_f64("restore-seconds", 30.0),
         a.get_f64("slowdown-rate", 0.001),

@@ -102,18 +102,8 @@ pub fn torus2d_gradsum_event_makespan(torus: Torus, payloads: &[f64], p: &NetPar
         return 0.0;
     }
     let phase_step = |dir_plus: Dir, dir_minus: Dir, denom: f64| -> f64 {
-        let mut sim = NetSim::new(torus, p.link_bw, p.link_latency);
-        let msgs: Vec<Message> = torus
-            .coords()
-            .flat_map(|c| {
-                let half = payloads[torus.id(c)] / denom / 2.0;
-                [
-                    Message { src: c, dst: torus.step(c, dir_plus), bytes: half, ready_at: 0.0 },
-                    Message { src: c, dst: torus.step(c, dir_minus), bytes: half, ready_at: 0.0 },
-                ]
-            })
-            .collect();
-        sim.makespan(&msgs)
+        let msgs = gradsum_phase_messages(torus, payloads, dir_plus, dir_minus, denom);
+        NetSim::new(torus, p.link_bw, p.link_latency).makespan(&msgs)
     };
     let x_step = if torus.nx > 1 {
         phase_step(Dir::XPlus, Dir::XMinus, torus.nx as f64)
@@ -126,6 +116,149 @@ pub fn torus2d_gradsum_event_makespan(torus: Torus, payloads: &[f64], p: &NetPar
         0.0
     };
     2.0 * ((torus.nx - 1) as f64 * x_step + (torus.ny - 1) as f64 * y_step)
+}
+
+/// One bidirectional gradsum phase step's message batch (every chip ships
+/// half a `payload/denom` chunk to each neighbor along the phase axis) —
+/// the unit both [`torus2d_gradsum_event_makespan`] and the concurrent
+/// gradsum+halo pricing schedule.
+fn gradsum_phase_messages(
+    torus: Torus,
+    payloads: &[f64],
+    dir_plus: Dir,
+    dir_minus: Dir,
+    denom: f64,
+) -> Vec<Message> {
+    torus
+        .coords()
+        .flat_map(|c| {
+            let half = payloads[torus.id(c)] / denom / 2.0;
+            [
+                Message { src: c, dst: torus.step(c, dir_plus), bytes: half, ready_at: 0.0 },
+                Message { src: c, dst: torus.step(c, dir_minus), bytes: half, ready_at: 0.0 },
+            ]
+        })
+        .collect()
+}
+
+/// One unidirectional 1-D ring step's message batch (row-major embedding:
+/// every chip ships its `1/n` chunk to the next chip), matching the
+/// scenario runner's 1-D contention model.
+fn ring1d_step_messages(torus: Torus, payloads: &[f64]) -> Vec<Message> {
+    let n = torus.chips();
+    (0..n)
+        .map(|i| Message {
+            src: torus.coord(i),
+            dst: torus.coord((i + 1) % n),
+            bytes: payloads[i] / n as f64,
+            ready_at: 0.0,
+        })
+        .collect()
+}
+
+/// The spatial-partition halo phase as a message batch: chips are
+/// partitioned into consecutive row-major groups of `halo_group` chips
+/// (one mp group each); every chip ships `halo_bytes` to the next member
+/// of its group. Empty when the halo phase is inactive.
+fn halo_messages(torus: Torus, halo_group: usize, halo_bytes: f64) -> Vec<Message> {
+    let n = torus.chips();
+    if halo_group <= 1 || !(halo_bytes > 0.0) {
+        return Vec::new();
+    }
+    let mut msgs = Vec::new();
+    let mut start = 0;
+    while start < n {
+        let size = halo_group.min(n - start);
+        if size > 1 {
+            for off in 0..size {
+                msgs.push(Message {
+                    src: torus.coord(start + off),
+                    dst: torus.coord(start + (off + 1) % size),
+                    bytes: halo_bytes,
+                    ready_at: 0.0,
+                });
+            }
+        }
+        start += size;
+    }
+    msgs
+}
+
+/// Concurrent-phase contention pricing: the gradient-summation schedule
+/// with the halo batch injected *into the same simulation* as the first
+/// gradsum step, so the two phases share link bandwidth instead of being
+/// priced independently.
+///
+/// The halo batch is appended after the gradsum messages, and the event
+/// simulator's stable `ready_at` sort keeps the gradsum message times
+/// unchanged — so the joint makespan is always ≥ the max of either phase
+/// priced alone (adding traffic can only delay the added traffic). The
+/// remaining `2(nx-1)+2(ny-1)-1` (2-D) or `2(n-1)-1` (1-D) steps run
+/// clean. When the halo phase is inactive the price degenerates to the
+/// plain (guarded) gradsum schedule; any active halo or non-uniform
+/// payload schedule reports `fastpath: false`.
+pub fn concurrent_gradsum_halo_makespan(
+    torus: Torus,
+    payloads: &[f64],
+    halo_group: usize,
+    halo_bytes: f64,
+    two_d: bool,
+    p: &NetParams,
+) -> GuardedMakespan {
+    assert_eq!(payloads.len(), torus.chips(), "one payload per chip");
+    let halo = halo_messages(torus, halo_group, halo_bytes);
+    let n = torus.chips();
+    if halo.is_empty() {
+        return if two_d {
+            torus2d_gradsum_makespan_guarded(torus, payloads, p)
+        } else {
+            let msgs = ring1d_step_messages(torus, payloads);
+            let one_step = if n > 1 {
+                NetSim::new(torus, p.link_bw, p.link_latency).makespan(&msgs)
+            } else {
+                0.0
+            };
+            GuardedMakespan {
+                seconds: one_step * (2 * n.saturating_sub(1)) as f64,
+                fastpath: payload_uniform(payloads),
+            }
+        };
+    }
+    let seconds = if n <= 1 {
+        NetSim::new(torus, p.link_bw, p.link_latency).makespan(&halo)
+    } else if two_d {
+        let step = |dir_plus: Dir, dir_minus: Dir, denom: f64| {
+            gradsum_phase_messages(torus, payloads, dir_plus, dir_minus, denom)
+        };
+        let x_msgs = step(Dir::XPlus, Dir::XMinus, torus.nx as f64);
+        let y_msgs = step(Dir::YPlus, Dir::YMinus, (torus.nx * torus.ny) as f64);
+        let x_step = if torus.nx > 1 {
+            NetSim::new(torus, p.link_bw, p.link_latency).makespan(&x_msgs)
+        } else {
+            0.0
+        };
+        let y_step = if torus.ny > 1 {
+            NetSim::new(torus, p.link_bw, p.link_latency).makespan(&y_msgs)
+        } else {
+            0.0
+        };
+        let clean = 2.0 * ((torus.nx - 1) as f64 * x_step + (torus.ny - 1) as f64 * y_step);
+        // The halo overlaps the first executed step (X phase, or Y on a
+        // 1-wide torus); the rest of the schedule runs clean.
+        let mut sim = NetSim::new(torus, p.link_bw, p.link_latency);
+        if torus.nx > 1 {
+            clean - x_step + sim.concurrent_makespan(&[&x_msgs, &halo])
+        } else {
+            clean - y_step + sim.concurrent_makespan(&[&y_msgs, &halo])
+        }
+    } else {
+        let msgs = ring1d_step_messages(torus, payloads);
+        let one_step = NetSim::new(torus, p.link_bw, p.link_latency).makespan(&msgs);
+        let joint =
+            NetSim::new(torus, p.link_bw, p.link_latency).concurrent_makespan(&[&msgs, &halo]);
+        joint + one_step * (2 * (n - 1) - 1) as f64
+    };
+    GuardedMakespan { seconds, fastpath: false }
 }
 
 /// Guarded entry point: the symmetry fast path when the per-chip payload
@@ -228,6 +361,43 @@ mod tests {
         // The heavy chip can only slow the schedule down.
         let uniform = torus2d_gradsum_makespan(torus, 1e6, &p);
         assert!(g.seconds >= uniform - 1e-12, "{} vs uniform {uniform}", g.seconds);
+    }
+
+    #[test]
+    fn zero_halo_concurrent_price_degenerates_to_the_plain_schedule() {
+        let p = NetParams::default();
+        let torus = Torus::for_chips(64);
+        let payloads = vec![1e7; torus.chips()];
+        // No halo bytes: bit-identical to the guarded fast-path price.
+        let g = concurrent_gradsum_halo_makespan(torus, &payloads, 4, 0.0, true, &p);
+        assert!(g.fastpath);
+        assert_eq!(g.seconds.to_bits(), torus2d_gradsum_makespan(torus, 1e7, &p).to_bits());
+        // A halo group of 1 has nobody to exchange with: same degeneration.
+        let g1 = concurrent_gradsum_halo_makespan(torus, &payloads, 1, 5e6, true, &p);
+        assert!(g1.fastpath);
+        assert_eq!(g1.seconds.to_bits(), g.seconds.to_bits());
+    }
+
+    #[test]
+    fn concurrent_halo_never_beats_either_phase_alone() {
+        let p = NetParams::default();
+        let torus = Torus::for_chips(64);
+        let payloads = vec![1e7; torus.chips()];
+        let halo_alone =
+            NetSim::new(torus, p.link_bw, p.link_latency).makespan(&halo_messages(torus, 4, 5e6));
+        assert!(halo_alone > 0.0);
+        for two_d in [true, false] {
+            let clean =
+                concurrent_gradsum_halo_makespan(torus, &payloads, 4, 0.0, two_d, &p).seconds;
+            let joint = concurrent_gradsum_halo_makespan(torus, &payloads, 4, 5e6, two_d, &p);
+            assert!(!joint.fastpath, "shared-link pricing must report fastpath: false");
+            assert!(
+                joint.seconds > clean,
+                "two_d={two_d}: joint {} must exceed the clean schedule {clean}",
+                joint.seconds
+            );
+            assert!(joint.seconds >= halo_alone, "two_d={two_d}");
+        }
     }
 
     #[test]

@@ -1,16 +1,35 @@
 //! TPU-v3 pod interconnect simulation (paper Figs. 1-2): 2-D torus
 //! topology, analytic collective cost model, and an event-driven
 //! link-contention simulator that validates the analytic assumptions.
+//!
+//! Beyond the paper's single pod, the [`topology`] module models
+//! *hierarchical* pod groups ([`PodSpec`]/[`TopologySpec`]): N identical
+//! 2-D tori joined by inter-pod links at a fraction of the torus link
+//! bandwidth, with two cross-pod gradient-summation strategies
+//! ([`CrossPodStrategy`]). The event simulator supports per-link
+//! bandwidth overrides ([`NetSim::set_link_bw`]) for the slow boundary
+//! links and concurrent-phase injection ([`NetSim::concurrent_makespan`])
+//! so overlapping gradsum and halo payloads share link bandwidth instead
+//! of being priced independently. The `fastpath` symmetry shortcut stays
+//! exact only for uniform payloads on a collapsed (single-pod) spec;
+//! every other case routes through the guarded, event-driven entry
+//! points and reports `fastpath: false`.
 
 pub mod cost;
 pub mod fastpath;
 pub mod sim;
+pub mod topology;
 pub mod torus;
 
 pub use cost::{ArAlgo, CostModel, GradSumModel, NetParams};
 pub use fastpath::{
-    payload_uniform, ring_step_makespan, torus2d_gradsum_event_makespan,
-    torus2d_gradsum_makespan, torus2d_gradsum_makespan_guarded, GuardedMakespan,
+    concurrent_gradsum_halo_makespan, payload_uniform, ring_step_makespan,
+    torus2d_gradsum_event_makespan, torus2d_gradsum_makespan, torus2d_gradsum_makespan_guarded,
+    GuardedMakespan,
 };
 pub use sim::{Message, NetSim};
+pub use topology::{
+    cross_pod_ring_seconds, pod_group_gradsum_makespan, pod_group_gradsum_makespan_guarded,
+    schedule_fingerprint, CrossPodStrategy, Placement, PodSpec, TopologySpec,
+};
 pub use torus::{Coord, Dir, Link, Torus};

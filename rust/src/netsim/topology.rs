@@ -1,0 +1,513 @@
+//! Hierarchical multi-pod topology: placement specs and cross-pod pricing.
+//!
+//! The paper stops at one 1024-chip pod; its follow-up ("Exploring the
+//! Limits of Concurrency in ML Training on Google TPUs", arxiv
+//! 2011.03641) spans pod boundaries, where inter-pod links are a fixed
+//! factor slower than the intra-pod 2-D torus links. This module is the
+//! single entry point for turning a chip count into a placement
+//! ([`TopologySpec::place`]) and for pricing gradient summation over a
+//! *pod group*: `pods` identical 2-D tori joined by inter-pod links at
+//! `inter_pod_ratio` of the torus link bandwidth.
+//!
+//! Two cross-pod strategies are priced ([`CrossPodStrategy`]):
+//!
+//! * **Hierarchical** (reduce-then-broadcast): the full 4-phase 2-D
+//!   schedule inside each pod, then a bidirectional ring all-reduce of
+//!   the per-chip shard across the `pods` pod leaders over the slow
+//!   links. Intra-pod phases are identical across pods and overlap
+//!   perfectly, so the group price is one pod's price plus the cross
+//!   term.
+//! * **FlatRing**: one global 1-D ring over every chip in the group,
+//!   ignoring the hierarchy. The ring steps are priced event-driven with
+//!   per-link bandwidth overrides on the pod-boundary links
+//!   ([`super::NetSim::set_link_bw`]), so the slow links honestly
+//!   bottleneck every one of the `2*(n-1)` steps.
+//!
+//! Single-pod reduction is exact by construction: a [`PodSpec`] with
+//! `pods == 1` or `inter_pod_ratio == 1.0` [`PodSpec::collapses`] and
+//! delegates verbatim to the flat-torus fast path, so every pre-existing
+//! single-pod price is bit-identical (pinned by `tests/multipod.rs`).
+//!
+//! Non-uniform payload schedules route through the guarded entry point
+//! ([`pod_group_gradsum_makespan_guarded`]) and are priced by the full
+//! event-driven simulation (`fastpath: false`), never by the symmetry
+//! shortcut; [`schedule_fingerprint`] gives memoization caches a stable
+//! key over the exact payload bit-pattern.
+
+use super::cost::NetParams;
+use super::fastpath::{
+    payload_uniform, ring_step_makespan, torus2d_gradsum_event_makespan, torus2d_gradsum_makespan,
+    torus2d_gradsum_makespan_guarded, GuardedMakespan,
+};
+use super::sim::{Message, NetSim};
+use super::torus::{Coord, Dir, Torus};
+
+/// How gradient summation crosses pod boundaries.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum CrossPodStrategy {
+    /// Reduce inside each pod first, then all-reduce the shard across
+    /// pods over the slow links (reduce-then-broadcast).
+    Hierarchical,
+    /// One flat 1-D ring over every chip in the group; pod-boundary
+    /// links bottleneck every step.
+    FlatRing,
+}
+
+impl CrossPodStrategy {
+    /// Stable label used in grid names, CLI flags and `SweepRecord`s.
+    pub fn label(&self) -> &'static str {
+        match self {
+            CrossPodStrategy::Hierarchical => "hierarchical",
+            CrossPodStrategy::FlatRing => "flat-ring",
+        }
+    }
+
+    /// Inverse of [`label`](Self::label).
+    pub fn parse(s: &str) -> Option<CrossPodStrategy> {
+        match s {
+            "hierarchical" => Some(CrossPodStrategy::Hierarchical),
+            "flat-ring" => Some(CrossPodStrategy::FlatRing),
+            _ => None,
+        }
+    }
+}
+
+/// Multi-pod shape of a job: how many pods share the work and how much
+/// slower the links between them are. The default is the paper's
+/// single-pod world and collapses to the flat 2-D torus everywhere.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PodSpec {
+    /// Number of pods in the group (1 = the paper's single-pod setup).
+    pub pods: usize,
+    /// Inter-pod link bandwidth as a fraction of the intra-pod link
+    /// bandwidth, in `(0, 1]`; `1.0` makes the hierarchy invisible.
+    pub inter_pod_ratio: f64,
+    /// Cross-pod gradient-summation strategy.
+    pub strategy: CrossPodStrategy,
+}
+
+impl Default for PodSpec {
+    fn default() -> PodSpec {
+        PodSpec { pods: 1, inter_pod_ratio: 1.0, strategy: CrossPodStrategy::Hierarchical }
+    }
+}
+
+impl PodSpec {
+    pub fn new(pods: usize, inter_pod_ratio: f64) -> PodSpec {
+        PodSpec { pods, inter_pod_ratio, ..PodSpec::default() }
+    }
+
+    /// The same spec with a different cross-pod strategy.
+    pub fn with_strategy(mut self, strategy: CrossPodStrategy) -> PodSpec {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Whether the hierarchy is indistinguishable from a flat torus:
+    /// one pod, or inter-pod links exactly as fast as intra-pod links.
+    /// Collapsing specs must price bit-identically to the flat model.
+    pub fn collapses(&self) -> bool {
+        self.pods <= 1 || self.inter_pod_ratio == 1.0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.pods < 1 {
+            return Err("pod count must be at least 1".to_string());
+        }
+        if !(self.inter_pod_ratio > 0.0 && self.inter_pod_ratio <= 1.0) {
+            return Err(format!(
+                "inter-pod bandwidth ratio must be in (0, 1], got {}",
+                self.inter_pod_ratio
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// How to turn a chip count into a torus placement — the one entry point
+/// behind `Torus::for_chips`, `Torus::for_chips_idle` and the multi-pod
+/// group constructor (which are all thin wrappers over [`place`]).
+///
+/// [`place`]: TopologySpec::place
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TopologySpec {
+    /// Exact factorization: every chip used, `ny <= nx`, degenerate
+    /// aspect ratios allowed (primes become 1-D rings).
+    Exact,
+    /// Best rectangular torus of at most `chips` chips with
+    /// `nx <= ny * max_aspect`; the remainder idles.
+    Capped { max_aspect: usize },
+    /// `pods` identical capped tori over an even split of the chips;
+    /// chips that fit no pod idle.
+    Pods { pods: usize, max_aspect: usize, inter_pod_ratio: f64 },
+}
+
+/// A placed topology: the per-pod torus, how many pods repeat it, the
+/// inter-pod bandwidth ratio joining them, and the idle remainder.
+#[derive(Clone, Copy, Debug)]
+pub struct Placement {
+    pub pod_torus: Torus,
+    pub pods: usize,
+    pub inter_pod_ratio: f64,
+    pub idle: usize,
+}
+
+impl Placement {
+    /// Chips actually participating across every pod.
+    pub fn used_chips(&self) -> usize {
+        self.pod_torus.chips() * self.pods
+    }
+}
+
+/// Exact factorization (moved verbatim from `Torus::for_chips`): the
+/// largest divisor at most `sqrt(chips)` becomes `ny`.
+fn exact_factor(chips: usize) -> Torus {
+    assert!(chips >= 1, "chip count must be at least 1");
+    let mut ny = 1;
+    let mut d = 1;
+    while d * d <= chips {
+        if chips % d == 0 {
+            ny = d;
+        }
+        d += 1;
+    }
+    Torus::new(chips / ny, ny)
+}
+
+/// Aspect-capped factorization with idle remainder (moved verbatim from
+/// `Torus::for_chips_idle`).
+fn capped_factor(chips: usize, max_aspect: usize) -> (Torus, usize) {
+    assert!(chips >= 1, "chip count must be at least 1");
+    assert!(max_aspect >= 1);
+    for used in (1..=chips).rev() {
+        let t = exact_factor(used);
+        if t.nx <= t.ny * max_aspect {
+            return (t, chips - used);
+        }
+    }
+    (Torus::new(1, 1), chips - 1)
+}
+
+impl TopologySpec {
+    /// Place `chips` chips under this spec.
+    pub fn place(&self, chips: usize) -> Placement {
+        match *self {
+            TopologySpec::Exact => {
+                let t = exact_factor(chips);
+                Placement { pod_torus: t, pods: 1, inter_pod_ratio: 1.0, idle: 0 }
+            }
+            TopologySpec::Capped { max_aspect } => {
+                let (t, idle) = capped_factor(chips, max_aspect);
+                Placement { pod_torus: t, pods: 1, inter_pod_ratio: 1.0, idle }
+            }
+            TopologySpec::Pods { pods, max_aspect, inter_pod_ratio } => {
+                assert!(pods >= 1, "pod count must be at least 1");
+                let per_pod = (chips / pods).max(1);
+                let (t, _) = capped_factor(per_pod, max_aspect);
+                let used = t.chips() * pods;
+                Placement {
+                    pod_torus: t,
+                    pods,
+                    inter_pod_ratio,
+                    idle: chips.saturating_sub(used),
+                }
+            }
+        }
+    }
+}
+
+/// `NetParams` with the link bandwidth scaled down to the inter-pod rate.
+fn inter_pod_params(p: &NetParams, ratio: f64) -> NetParams {
+    NetParams { link_bw: ratio * p.link_bw, ..*p }
+}
+
+/// Cross-pod all-reduce seconds for a per-chip shard of `shard_bytes`:
+/// `2*(pods-1)` bidirectional ring steps across the pod leaders over the
+/// inter-pod links. Zero when the spec collapses to a single pod.
+pub fn cross_pod_ring_seconds(pods: PodSpec, shard_bytes: f64, p: &NetParams) -> f64 {
+    if pods.collapses() {
+        return 0.0;
+    }
+    let p_inter = inter_pod_params(p, pods.inter_pod_ratio);
+    2.0 * (pods.pods - 1) as f64
+        * ring_step_makespan(pods.pods, shard_bytes / pods.pods as f64, &p_inter)
+}
+
+/// One bidirectional ring step over the flat multi-pod ring, priced
+/// event-driven with the pod-boundary links slowed to the inter-pod
+/// rate. `chunk_of(id)` gives the per-chip chunk for this step.
+fn flat_ring_step(
+    n: usize,
+    pod_chips: usize,
+    ratio: f64,
+    p: &NetParams,
+    chunk_of: impl Fn(usize) -> f64,
+) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let ring = Torus::new(n, 1);
+    let mut sim = NetSim::new(ring, p.link_bw, p.link_latency);
+    let slow = ratio * p.link_bw;
+    for pod in 0..n.div_ceil(pod_chips) {
+        let first = pod * pod_chips;
+        let last = (first + pod_chips - 1).min(n - 1);
+        // Both directed links crossing the boundary after this pod.
+        sim.set_link_bw(Coord { x: last, y: 0 }, Dir::XPlus, slow);
+        sim.set_link_bw(Coord { x: (last + 1) % n, y: 0 }, Dir::XMinus, slow);
+        // And the boundary before it (wraps to the previous pod's tail).
+        sim.set_link_bw(Coord { x: first, y: 0 }, Dir::XMinus, slow);
+        sim.set_link_bw(Coord { x: (first + n - 1) % n, y: 0 }, Dir::XPlus, slow);
+    }
+    let msgs: Vec<Message> = ring
+        .coords()
+        .flat_map(|c| {
+            let half = chunk_of(ring.id(c)) / 2.0;
+            [
+                Message { src: c, dst: ring.step(c, Dir::XPlus), bytes: half, ready_at: 0.0 },
+                Message { src: c, dst: ring.step(c, Dir::XMinus), bytes: half, ready_at: 0.0 },
+            ]
+        })
+        .collect();
+    sim.makespan(&msgs)
+}
+
+/// Gradient-summation makespan of a pod group under a uniform per-chip
+/// payload. Collapsing specs ([`PodSpec::collapses`]) delegate verbatim
+/// to the flat 2-D torus price over the *requested* chip count, so the
+/// single-pod reduction is bit-identical to the pre-hierarchy model.
+pub fn pod_group_gradsum_makespan(
+    chips: usize,
+    pods: PodSpec,
+    max_aspect: usize,
+    payload_bytes: f64,
+    p: &NetParams,
+) -> f64 {
+    if pods.collapses() {
+        let (torus, _) = capped_factor(chips.max(1), max_aspect);
+        return torus2d_gradsum_makespan(torus, payload_bytes, p);
+    }
+    let placement =
+        TopologySpec::Pods { pods: pods.pods, max_aspect, inter_pod_ratio: pods.inter_pod_ratio }
+            .place(chips.max(1));
+    let t = placement.pod_torus;
+    match pods.strategy {
+        CrossPodStrategy::Hierarchical => {
+            let intra = torus2d_gradsum_makespan(t, payload_bytes, p);
+            let shard = payload_bytes / t.chips() as f64;
+            intra + cross_pod_ring_seconds(pods, shard, p)
+        }
+        CrossPodStrategy::FlatRing => {
+            let n = placement.used_chips();
+            let chunk = payload_bytes / n as f64;
+            let step = flat_ring_step(n, t.chips(), pods.inter_pod_ratio, p, |_| chunk);
+            2.0 * (n.saturating_sub(1)) as f64 * step
+        }
+    }
+}
+
+/// Guarded multi-pod gradient summation over a per-chip payload
+/// schedule (row-major within each pod, pods concatenated). Uniform
+/// schedules take the symmetry fast path (and collapsing specs delegate
+/// to the flat guarded entry point bit-identically); any non-uniform
+/// schedule is priced by the event-driven simulation and reports
+/// `fastpath: false`.
+pub fn pod_group_gradsum_makespan_guarded(
+    chips: usize,
+    pods: PodSpec,
+    max_aspect: usize,
+    payloads: &[f64],
+    p: &NetParams,
+) -> GuardedMakespan {
+    if pods.collapses() {
+        let (torus, _) = capped_factor(chips.max(1), max_aspect);
+        return torus2d_gradsum_makespan_guarded(torus, payloads, p);
+    }
+    let placement =
+        TopologySpec::Pods { pods: pods.pods, max_aspect, inter_pod_ratio: pods.inter_pod_ratio }
+            .place(chips.max(1));
+    let t = placement.pod_torus;
+    assert_eq!(payloads.len(), placement.used_chips(), "one payload per participating chip");
+    if payload_uniform(payloads) {
+        let payload = payloads.first().copied().unwrap_or(0.0);
+        return GuardedMakespan {
+            seconds: pod_group_gradsum_makespan(chips, pods, max_aspect, payload, p),
+            fastpath: true,
+        };
+    }
+    let seconds = match pods.strategy {
+        CrossPodStrategy::Hierarchical => {
+            // Pods no longer mirror each other: price every pod's event
+            // schedule and take the straggler.
+            let intra = payloads
+                .chunks(t.chips())
+                .map(|pod| torus2d_gradsum_event_makespan(t, pod, p))
+                .fold(0.0, f64::max);
+            // The cross-pod ring ships the heaviest chip's shard.
+            let heaviest = payloads.iter().cloned().fold(0.0, f64::max);
+            let shard = heaviest / t.chips() as f64;
+            intra + cross_pod_ring_seconds(pods, shard, p)
+        }
+        CrossPodStrategy::FlatRing => {
+            let n = placement.used_chips();
+            let step = flat_ring_step(n, t.chips(), pods.inter_pod_ratio, p, |id| {
+                payloads[id] / n as f64
+            });
+            2.0 * (n.saturating_sub(1)) as f64 * step
+        }
+    };
+    GuardedMakespan { seconds, fastpath: false }
+}
+
+/// Stable 64-bit fingerprint of a payload schedule (FNV-1a over the
+/// exact f64 bit patterns) — the memoization-key component that makes
+/// two different schedules cache separately while staying deterministic
+/// across runs and platforms.
+pub fn schedule_fingerprint(payloads: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for payload in payloads {
+        for byte in payload.to_bits().to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_spec_matches_for_chips_wrapper() {
+        for chips in 1..=200 {
+            let placed = TopologySpec::Exact.place(chips);
+            let t = Torus::for_chips(chips);
+            assert_eq!((placed.pod_torus.nx, placed.pod_torus.ny), (t.nx, t.ny));
+            assert_eq!(placed.pods, 1);
+            assert_eq!(placed.idle, 0);
+        }
+    }
+
+    #[test]
+    fn capped_spec_matches_for_chips_idle_wrapper() {
+        for chips in 1..=200 {
+            let placed = TopologySpec::Capped { max_aspect: 4 }.place(chips);
+            let (t, idle) = Torus::for_chips_idle(chips, 4);
+            assert_eq!((placed.pod_torus.nx, placed.pod_torus.ny), (t.nx, t.ny));
+            assert_eq!(placed.idle, idle);
+        }
+    }
+
+    #[test]
+    fn pod_group_places_identical_tori() {
+        let placed =
+            TopologySpec::Pods { pods: 2, max_aspect: 4, inter_pod_ratio: 0.25 }.place(2048);
+        assert_eq!((placed.pod_torus.nx, placed.pod_torus.ny), (32, 32));
+        assert_eq!(placed.pods, 2);
+        assert_eq!(placed.used_chips(), 2048);
+        assert_eq!(placed.idle, 0);
+        // Ragged counts drop the chips no pod can hold.
+        let ragged =
+            TopologySpec::Pods { pods: 3, max_aspect: 4, inter_pod_ratio: 0.5 }.place(100);
+        assert_eq!(ragged.used_chips() + ragged.idle, 100);
+    }
+
+    #[test]
+    fn collapsing_specs_price_bit_identically_to_the_flat_torus() {
+        let p = NetParams::default();
+        for chips in [16usize, 64, 256, 1024] {
+            let flat = torus2d_gradsum_makespan(Torus::for_chips_idle(chips, 4).0, 3.3e7, &p);
+            for pods in [
+                PodSpec::default(),
+                PodSpec::new(1, 0.25),
+                PodSpec::new(4, 1.0),
+                PodSpec { strategy: CrossPodStrategy::FlatRing, ..PodSpec::new(1, 1.0) },
+            ] {
+                let group = pod_group_gradsum_makespan(chips, pods, 4, 3.3e7, &p);
+                assert_eq!(group.to_bits(), flat.to_bits(), "{chips} chips, {pods:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn slower_inter_pod_links_cost_more() {
+        let p = NetParams::default();
+        let fast = pod_group_gradsum_makespan(512, PodSpec::new(2, 0.5), 4, 1e8, &p);
+        let slow = pod_group_gradsum_makespan(512, PodSpec::new(2, 0.1), 4, 1e8, &p);
+        let collapsed = pod_group_gradsum_makespan(512, PodSpec::new(2, 1.0), 4, 1e8, &p);
+        assert!(slow > fast, "slow {slow} vs fast {fast}");
+        assert!(fast > 0.0 && collapsed > 0.0);
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_ring_across_slow_links() {
+        let p = NetParams::default();
+        let hier = pod_group_gradsum_makespan(128, PodSpec::new(2, 0.25), 4, 1e8, &p);
+        let flat = pod_group_gradsum_makespan(
+            128,
+            PodSpec { strategy: CrossPodStrategy::FlatRing, ..PodSpec::new(2, 0.25) },
+            4,
+            1e8,
+            &p,
+        );
+        assert!(
+            flat > hier,
+            "flat ring over slow boundaries ({flat}) must lose to hierarchical ({hier})"
+        );
+    }
+
+    #[test]
+    fn non_uniform_schedules_route_to_the_event_engine() {
+        let p = NetParams::default();
+        for pods in [PodSpec::new(2, 0.25), PodSpec::default()] {
+            let placed = TopologySpec::Pods {
+                pods: pods.pods,
+                max_aspect: 4,
+                inter_pod_ratio: pods.inter_pod_ratio,
+            }
+            .place(32);
+            let n = if pods.collapses() {
+                Torus::for_chips_idle(32, 4).0.chips()
+            } else {
+                placed.used_chips()
+            };
+            let mut payloads = vec![1e6; n];
+            payloads[3] = 9e6;
+            let g = pod_group_gradsum_makespan_guarded(32, pods, 4, &payloads, &p);
+            assert!(!g.fastpath, "{pods:?}");
+            let base = vec![1e6; n];
+            let uniform = pod_group_gradsum_makespan_guarded(32, pods, 4, &base, &p);
+            assert!(uniform.fastpath);
+            assert!(g.seconds >= uniform.seconds - 1e-12);
+        }
+    }
+
+    #[test]
+    fn strategy_labels_round_trip() {
+        for s in [CrossPodStrategy::Hierarchical, CrossPodStrategy::FlatRing] {
+            assert_eq!(CrossPodStrategy::parse(s.label()), Some(s));
+        }
+        assert_eq!(CrossPodStrategy::parse("diagonal"), None);
+    }
+
+    #[test]
+    fn pod_spec_validation() {
+        assert!(PodSpec::default().validate().is_ok());
+        assert!(PodSpec::new(4, 0.25).validate().is_ok());
+        assert!(PodSpec::new(0, 0.5).validate().is_err());
+        assert!(PodSpec::new(2, 0.0).validate().is_err());
+        assert!(PodSpec::new(2, 1.5).validate().is_err());
+        assert!(PodSpec::new(2, f64::NAN).validate().is_err());
+    }
+
+    #[test]
+    fn schedule_fingerprints_distinguish_schedules() {
+        let a = schedule_fingerprint(&[1e6, 1e6, 1e6]);
+        let b = schedule_fingerprint(&[1e6, 2e6, 1e6]);
+        let c = schedule_fingerprint(&[1e6, 1e6, 1e6]);
+        assert_eq!(a, c);
+        assert_ne!(a, b);
+        assert_ne!(schedule_fingerprint(&[]), schedule_fingerprint(&[0.0]));
+    }
+}

@@ -45,17 +45,11 @@ impl Torus {
     /// Square-ish torus for a given chip count: the exact factorization
     /// `nx * ny == chips` with `ny` the largest divisor at most √chips
     /// (1024 → 32x32, 128 → 16x8, 12 → 4x3, primes → 1-D ring).
+    ///
+    /// Thin wrapper over [`TopologySpec::Exact`](super::TopologySpec) —
+    /// the placement logic lives in `netsim::topology`.
     pub fn for_chips(chips: usize) -> Torus {
-        assert!(chips >= 1, "chip count must be at least 1");
-        let mut ny = 1;
-        let mut d = 1;
-        while d * d <= chips {
-            if chips % d == 0 {
-                ny = d;
-            }
-            d += 1;
-        }
-        Torus::new(chips / ny, ny)
+        super::topology::TopologySpec::Exact.place(chips).pod_torus
     }
 
     /// Best rectangular torus of *at most* `chips` chips with aspect ratio
@@ -63,16 +57,11 @@ impl Torus {
     /// counts whose exact factorization would degenerate (97 → 97x1) drop a
     /// few chips instead (97 → 12x8 with 1 idle); chip counts that factor
     /// well — every power of two included — use all chips with zero idle.
+    ///
+    /// Thin wrapper over [`TopologySpec::Capped`](super::TopologySpec).
     pub fn for_chips_idle(chips: usize, max_aspect: usize) -> (Torus, usize) {
-        assert!(chips >= 1, "chip count must be at least 1");
-        assert!(max_aspect >= 1);
-        for used in (1..=chips).rev() {
-            let t = Torus::for_chips(used);
-            if t.nx <= t.ny * max_aspect {
-                return (t, chips - used);
-            }
-        }
-        (Torus::new(1, 1), chips - 1)
+        let placed = super::topology::TopologySpec::Capped { max_aspect }.place(chips);
+        (placed.pod_torus, placed.idle)
     }
 
     pub fn chips(&self) -> usize {

@@ -35,8 +35,8 @@ use crate::util::timer::Timer;
 
 use super::grid::AblationGrid;
 use super::runner::{
-    assemble_record, gradsum_contention_makespan, pool_workers, SweepRecord, SweepReport,
-    SweepRunner,
+    assemble_record, concurrent_contention_makespan, gradsum_contention_makespan_pods,
+    pool_workers, SweepRecord, SweepReport, SweepRunner,
 };
 use super::ScalingScenario;
 
@@ -98,12 +98,22 @@ pub fn reference_point(s: &ScalingScenario, m: &ModelProfile, chips: usize) -> S
     let opts = s.sim_options(cores);
     let r = simulate(m, cores, &opts);
     let imbalance = shard_imbalance(m, r.participating_cores);
-    let makespan = gradsum_contention_makespan(
-        m.params * 4.0,
-        (r.participating_cores / 2).max(1),
-        s.gradsum.is_2d(),
-    );
-    let mut rec = assemble_record(s, m, chips, &r, imbalance, makespan);
+    let part_chips = (r.participating_cores / 2).max(1);
+    let makespan =
+        gradsum_contention_makespan_pods(m.params * 4.0, part_chips, s.gradsum.is_2d(), s.pods);
+    let concurrent = if r.halo_seconds > 0.0 {
+        concurrent_contention_makespan(
+            m.params * 4.0,
+            part_chips,
+            s.gradsum.is_2d(),
+            s.pods,
+            r.layout.mp,
+            r.halo_seconds,
+        )
+    } else {
+        makespan
+    };
+    let mut rec = assemble_record(s, m, chips, &r, imbalance, makespan, concurrent);
     super::faults::apply_fault_trace(s, m, &r, &mut rec);
     rec
 }

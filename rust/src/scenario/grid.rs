@@ -11,11 +11,17 @@
 //! Grid naming convention (stable — `sweep --compare` matches on it):
 //! `grid-{model}-sp:{on|off}-wus:{on|off}-gs:{gradsum}-opt:{optimizer}`
 //! with the gradsum label from [`GradSumChoice::label`] and the optimizer
-//! label from [`OptimizerAxis::label`]. Axis order in the emitted list is
-//! model (outer) → spatial → wus → gradsum → optimizer (inner), each in
-//! its declared order, then the chip ladder within each scenario.
+//! label from [`OptimizerAxis::label`]. Non-default multi-pod
+//! combinations append `-pods:{P}-ipr:{R}-xp:{strategy}` (pod count,
+//! inter-pod bandwidth ratio, [`CrossPodStrategy::label`]); the default
+//! single-pod combination keeps the bare name, so every pre-pod baseline
+//! still matches. Axis order in the emitted list is model (outer) →
+//! spatial → wus → gradsum → optimizer → pods → ratio → strategy
+//! (inner), each in its declared order, then the chip ladder within each
+//! scenario.
 
 use crate::models::registry::{all_models, Optimizer};
+use crate::netsim::{CrossPodStrategy, PodSpec};
 
 use super::presets::paper_chip_slices;
 use super::{GradSumChoice, OptimizerChoice, ScalingScenario};
@@ -75,6 +81,12 @@ pub struct AblationGrid {
     pub gradsum: Vec<GradSumChoice>,
     /// Optimizer axis (LARS vs SGD update traffic).
     pub optimizers: Vec<OptimizerAxis>,
+    /// Multi-pod axis: pods per group (1 = the paper's single pod).
+    pub pods: Vec<usize>,
+    /// Inter-pod link bandwidth ratios, in `(0, 1]`.
+    pub inter_pod_ratios: Vec<f64>,
+    /// Cross-pod gradient-summation strategy axis.
+    pub cross_pod: Vec<CrossPodStrategy>,
 }
 
 impl AblationGrid {
@@ -90,6 +102,9 @@ impl AblationGrid {
             weight_update_sharding: vec![true, false],
             gradsum: vec![GradSumChoice::Pipelined2D, GradSumChoice::Serial2D],
             optimizers: vec![OptimizerAxis::Lars, OptimizerAxis::Sgd],
+            pods: vec![1],
+            inter_pod_ratios: vec![1.0],
+            cross_pod: vec![CrossPodStrategy::Hierarchical],
         }
     }
 
@@ -100,6 +115,9 @@ impl AblationGrid {
             * self.weight_update_sharding.len()
             * self.gradsum.len()
             * self.optimizers.len()
+            * self.pods.len()
+            * self.inter_pod_ratios.len()
+            * self.cross_pod.len()
     }
 
     /// Grid points (scenarios × chip ladder).
@@ -107,22 +125,34 @@ impl AblationGrid {
         self.scenario_count() * self.chips.len()
     }
 
-    /// The naming convention above, for one axis combination.
+    /// The naming convention above, for one axis combination. The default
+    /// single-pod spec keeps the historical (suffix-free) name so pre-pod
+    /// baselines still match under `sweep --compare`.
     pub fn scenario_name(
         model: &str,
         spatial: bool,
         wus: bool,
         gradsum: GradSumChoice,
         optimizer: OptimizerAxis,
+        pods: PodSpec,
     ) -> String {
         let onoff = |b: bool| if b { "on" } else { "off" };
-        format!(
+        let mut name = format!(
             "grid-{model}-sp:{}-wus:{}-gs:{}-opt:{}",
             onoff(spatial),
             onoff(wus),
             gradsum.label(),
             optimizer.label()
-        )
+        );
+        if pods != PodSpec::default() {
+            name.push_str(&format!(
+                "-pods:{}-ipr:{}-xp:{}",
+                pods.pods,
+                pods.inter_pod_ratio,
+                pods.strategy.label()
+            ));
+        }
+        name
     }
 
     /// Emit every axis combination as a labeled submission-based scenario
@@ -134,13 +164,25 @@ impl AblationGrid {
                 for &wus in &self.weight_update_sharding {
                     for &gradsum in &self.gradsum {
                         for &opt in &self.optimizers {
-                            let mut s = ScalingScenario::submission(model, self.chips.clone())
-                                .named(Self::scenario_name(model, spatial, wus, gradsum, opt));
-                            s.spatial_partitioning = spatial;
-                            s.weight_update_sharding = wus;
-                            s.gradsum = gradsum;
-                            s.optimizer = opt.choice();
-                            out.push(s);
+                            for &pods in &self.pods {
+                                for &ratio in &self.inter_pod_ratios {
+                                    for &xp in &self.cross_pod {
+                                        let spec = PodSpec::new(pods, ratio).with_strategy(xp);
+                                        let mut s =
+                                            ScalingScenario::submission(model, self.chips.clone())
+                                                .named(Self::scenario_name(
+                                                    model, spatial, wus, gradsum, opt, spec,
+                                                ))
+                                                .with_pods(pods, ratio)
+                                                .with_cross_pod(xp);
+                                        s.spatial_partitioning = spatial;
+                                        s.weight_update_sharding = wus;
+                                        s.gradsum = gradsum;
+                                        s.optimizer = opt.choice();
+                                        out.push(s);
+                                    }
+                                }
+                            }
                         }
                     }
                 }
@@ -210,6 +252,38 @@ mod tests {
         assert_eq!(lars.epochs, sgd.epochs);
         assert!(lars.update_seconds > sgd.update_seconds, "LARS carries more state");
         assert_eq!(lars.compute_seconds, sgd.compute_seconds);
+    }
+
+    #[test]
+    fn pod_axes_expand_the_grid_and_tag_names() {
+        let mut g = AblationGrid::full_paper();
+        g.models = vec!["resnet50".into()];
+        g.chips = vec![64];
+        g.spatial = vec![true];
+        g.weight_update_sharding = vec![true];
+        g.gradsum = vec![GradSumChoice::Pipelined2D];
+        g.optimizers = vec![OptimizerAxis::Lars];
+        g.pods = vec![1, 2];
+        g.inter_pod_ratios = vec![1.0, 0.25];
+        g.cross_pod = vec![CrossPodStrategy::Hierarchical, CrossPodStrategy::FlatRing];
+        assert_eq!(g.scenario_count(), 8);
+        let scenarios = g.scenarios();
+        let names: BTreeSet<String> = scenarios.iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names.len(), 8, "pod-axis names must stay unique");
+        // The default combination keeps the historical suffix-free name.
+        assert!(names.contains("grid-resnet50-sp:on-wus:on-gs:2d-pipelined-opt:lars"));
+        assert!(names.contains(
+            "grid-resnet50-sp:on-wus:on-gs:2d-pipelined-opt:lars-pods:2-ipr:0.25-xp:flat-ring"
+        ));
+        for s in &scenarios {
+            s.validate().unwrap();
+        }
+        // The spec reaches the emitted scenario.
+        let multi = scenarios
+            .iter()
+            .find(|s| s.name.ends_with("-pods:2-ipr:0.25-xp:hierarchical"))
+            .unwrap();
+        assert_eq!(multi.pods, PodSpec::new(2, 0.25));
     }
 
     #[test]

@@ -15,10 +15,13 @@
 //! over every other toggle".
 //!
 //! Pairing is by the stable grid naming convention
-//! (`grid-{model}-sp:..-wus:..-gs:..-opt:..`, see [`super::grid`]);
-//! non-grid records are ignored, and pairs with a non-finite benchmark
-//! time (DNF points) are counted as skipped rather than polluting the
-//! ratios.
+//! (`grid-{model}-sp:..-wus:..-gs:..-opt:..`, optionally suffixed
+//! `-pods:..-ipr:..-xp:..` for non-default multi-pod combinations, see
+//! [`super::grid`]); non-grid records are ignored, and pairs with a
+//! non-finite benchmark time (DNF points) are counted as skipped rather
+//! than polluting the ratios. The multi-pod fields are held fixed by
+//! every pairing (they are co-varying context, not a toggled axis), so a
+//! 2-pod record only ever pairs with another 2-pod record.
 
 use std::collections::HashMap;
 
@@ -27,7 +30,10 @@ use crate::util::json::{obj, Json};
 
 use super::runner::SweepReport;
 
-/// The parsed axis settings of one grid scenario name.
+/// The parsed axis settings of one grid scenario name. The multi-pod
+/// fields keep their textual grid-label form (pods "1", ratio "1",
+/// strategy "hierarchical" for suffix-free names) — pairing only needs
+/// equality, never arithmetic.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct GridKey {
     pub model: String,
@@ -35,10 +41,14 @@ pub struct GridKey {
     pub wus: bool,
     pub gradsum: String,
     pub optimizer: String,
+    pub pods: String,
+    pub inter_pod_ratio: String,
+    pub cross_pod: String,
 }
 
 /// Parse a grid scenario name
-/// (`grid-{model}-sp:{on|off}-wus:{on|off}-gs:{label}-opt:{label}`).
+/// (`grid-{model}-sp:{on|off}-wus:{on|off}-gs:{label}-opt:{label}`, with
+/// an optional `-pods:{P}-ipr:{R}-xp:{strategy}` multi-pod suffix).
 /// Returns `None` for anything that does not follow the convention.
 pub fn parse_grid_name(name: &str) -> Option<GridKey> {
     let rest = name.strip_prefix("grid-")?;
@@ -54,12 +64,35 @@ pub fn parse_grid_name(name: &str) -> Option<GridKey> {
         "off" => Some(false),
         _ => None,
     };
+    let tail = &rest[opt_at + 5..];
+    let (optimizer, pods, inter_pod_ratio, cross_pod) = match tail.find("-pods:") {
+        None => {
+            (tail.to_string(), "1".to_string(), "1".to_string(), "hierarchical".to_string())
+        }
+        Some(p_at) => {
+            let podtail = &tail[p_at + 6..];
+            let ipr_at = podtail.find("-ipr:")?;
+            let xp_at = podtail.find("-xp:")?;
+            if ipr_at >= xp_at {
+                return None;
+            }
+            (
+                tail[..p_at].to_string(),
+                podtail[..ipr_at].to_string(),
+                podtail[ipr_at + 5..xp_at].to_string(),
+                podtail[xp_at + 4..].to_string(),
+            )
+        }
+    };
     Some(GridKey {
         model: rest[..sp_at].to_string(),
         spatial: onoff(&rest[sp_at + 4..wus_at])?,
         wus: onoff(&rest[wus_at + 5..gs_at])?,
         gradsum: rest[gs_at + 4..opt_at].to_string(),
-        optimizer: rest[opt_at + 5..].to_string(),
+        optimizer,
+        pods,
+        inter_pod_ratio,
+        cross_pod,
     })
 }
 
@@ -67,8 +100,15 @@ impl GridKey {
     /// Canonical lookup string (all axes + model, order fixed).
     fn lookup(&self) -> String {
         format!(
-            "{}|sp:{}|wus:{}|gs:{}|opt:{}",
-            self.model, self.spatial, self.wus, self.gradsum, self.optimizer
+            "{}|sp:{}|wus:{}|gs:{}|opt:{}|pods:{}|ipr:{}|xp:{}",
+            self.model,
+            self.spatial,
+            self.wus,
+            self.gradsum,
+            self.optimizer,
+            self.pods,
+            self.inter_pod_ratio,
+            self.cross_pod
         )
     }
 
@@ -265,10 +305,32 @@ mod tests {
                 wus: false,
                 gradsum: "2d-pipelined".to_string(),
                 optimizer: "lars".to_string(),
+                pods: "1".to_string(),
+                inter_pod_ratio: "1".to_string(),
+                cross_pod: "hierarchical".to_string(),
             }
         );
         assert!(parse_grid_name("resnet50-submission").is_none());
         assert!(parse_grid_name("grid-x-sp:maybe-wus:on-gs:2d-serial-opt:sgd").is_none());
+    }
+
+    #[test]
+    fn pod_suffixed_names_parse_and_default() {
+        let name =
+            "grid-resnet50-sp:on-wus:on-gs:2d-pipelined-opt:lars-pods:2-ipr:0.25-xp:flat-ring";
+        let k = parse_grid_name(name).unwrap();
+        assert_eq!(k.optimizer, "lars");
+        assert_eq!(k.pods, "2");
+        assert_eq!(k.inter_pod_ratio, "0.25");
+        assert_eq!(k.cross_pod, "flat-ring");
+        let bare = parse_grid_name("grid-resnet50-sp:on-wus:on-gs:2d-pipelined-opt:lars").unwrap();
+        assert_eq!((bare.pods.as_str(), bare.inter_pod_ratio.as_str()), ("1", "1"));
+        assert_eq!(bare.cross_pod, "hierarchical");
+        // Different pod context never pairs with the bare grid.
+        assert_ne!(k.lookup(), bare.lookup());
+        // A mangled suffix ordering is rejected outright.
+        let mangled = "grid-x-sp:on-wus:on-gs:2d-serial-opt:sgd-pods:2-xp:flat-ring-ipr:0.25";
+        assert!(parse_grid_name(mangled).is_none());
     }
 
     #[test]

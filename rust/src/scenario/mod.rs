@@ -17,7 +17,10 @@
 //!   output is byte-identical to a serial run.
 //! * [`AblationGrid`] — the scenario × `SimOptions` cross-product driver:
 //!   every §2 axis (spatial on/off, WUS on/off, gradsum serial/pipelined,
-//!   LARS vs SGD) as labeled scenarios (`tpu-pod-train sweep --grid`).
+//!   LARS vs SGD) as labeled scenarios (`tpu-pod-train sweep --grid`),
+//!   plus the multi-pod axes (pod count × inter-pod bandwidth ratio ×
+//!   cross-pod gradsum strategy) layered on via `--pods`,
+//!   `--inter-pod-ratio` and `--cross-pod`.
 //! * [`SweepReport`] — the record set with JSON serialization
 //!   (`tpu-pod-train sweep` writes these; golden-trace tests pin them),
 //!   plus [`compare_reports`] — the `sweep --compare baseline.json` diff
@@ -61,11 +64,13 @@ pub use presets::{
     table1_scenarios,
 };
 pub use runner::{
-    compare_reports, effective_jobs, gradsum_contention_makespan, pool_workers, run_scenario,
-    sweep_point, PointDiff, SweepComparison, SweepRecord, SweepReport, SweepRunner,
+    compare_reports, concurrent_contention_makespan, effective_jobs, gradsum_contention_makespan,
+    gradsum_contention_makespan_pods, pool_workers, run_scenario, sweep_point, PointDiff,
+    SweepCache, SweepComparison, SweepRecord, SweepReport, SweepRunner,
 };
 
 use crate::models::registry::{model, Layout, ModelProfile, Optimizer};
+use crate::netsim::{CrossPodStrategy, PodSpec};
 use crate::simulator::SimOptions;
 
 /// How the global batch is chosen at each sweep point.
@@ -147,6 +152,10 @@ pub struct ScalingScenario {
     /// compute at this achieved forward-GFLOP/s instead of the TPU-v3
     /// datasheet roofline. `None` = stock TPU-v3.
     pub compute_gflops: Option<f64>,
+    /// Multi-pod topology: pod count, inter-pod bandwidth ratio and
+    /// cross-pod gradsum strategy. The default single-pod spec prices
+    /// bit-identically to the pre-hierarchy sweep.
+    pub pods: PodSpec,
 }
 
 impl ScalingScenario {
@@ -165,6 +174,7 @@ impl ScalingScenario {
             spatial_partitioning: true,
             faults: None,
             compute_gflops: None,
+            pods: PodSpec::default(),
         }
     }
 
@@ -187,6 +197,19 @@ impl ScalingScenario {
     /// `fitted_gflops` of a `sweep --live` calibration report).
     pub fn with_compute_gflops(mut self, gflops: f64) -> ScalingScenario {
         self.compute_gflops = Some(gflops);
+        self
+    }
+
+    /// Span `pods` pods joined by inter-pod links at `inter_pod_ratio`
+    /// of the torus link bandwidth (keeps the current strategy).
+    pub fn with_pods(mut self, pods: usize, inter_pod_ratio: f64) -> ScalingScenario {
+        self.pods = PodSpec { pods, inter_pod_ratio, ..self.pods };
+        self
+    }
+
+    /// Pick the cross-pod gradient-summation strategy.
+    pub fn with_cross_pod(mut self, strategy: CrossPodStrategy) -> ScalingScenario {
+        self.pods.strategy = strategy;
         self
     }
 
@@ -215,6 +238,7 @@ impl ScalingScenario {
         if let Some(trace) = &self.faults {
             trace.validate()?;
         }
+        self.pods.validate().map_err(|e| format!("scenario {:?}: {e}", self.name))?;
         Ok(m)
     }
 
@@ -246,6 +270,7 @@ impl ScalingScenario {
             epochs_override,
             layout_override,
             compute_gflops: self.compute_gflops,
+            pods: self.pods,
         }
     }
 }
@@ -285,9 +310,31 @@ mod tests {
     #[test]
     fn bad_chip_counts_rejected() {
         assert!(ScalingScenario::submission("ssd", vec![]).validate().is_err());
-        assert!(ScalingScenario::submission("ssd", vec![48]).validate().is_err());
+        // Arbitrary (non-power-of-two) counts are valid since the
+        // elastic-survivor work; only zero and duplicates are rejected.
+        assert!(ScalingScenario::submission("ssd", vec![48]).validate().is_ok());
         assert!(ScalingScenario::submission("ssd", vec![0]).validate().is_err());
         assert!(ScalingScenario::submission("ssd", vec![64, 64]).validate().is_err());
+    }
+
+    #[test]
+    fn pod_spec_flows_into_sim_options_and_validates() {
+        let s = ScalingScenario::submission("resnet50", vec![64])
+            .with_pods(2, 0.25)
+            .with_cross_pod(CrossPodStrategy::FlatRing);
+        assert!(s.validate().is_ok());
+        let opts = s.sim_options(128);
+        assert_eq!(opts.pods.pods, 2);
+        assert_eq!(opts.pods.inter_pod_ratio, 0.25);
+        assert_eq!(opts.pods.strategy, CrossPodStrategy::FlatRing);
+        assert!(ScalingScenario::submission("resnet50", vec![64])
+            .with_pods(0, 0.25)
+            .validate()
+            .is_err());
+        assert!(ScalingScenario::submission("resnet50", vec![64])
+            .with_pods(2, 1.5)
+            .validate()
+            .is_err());
     }
 
     #[test]

@@ -24,7 +24,11 @@ use crate::benchkit::Table;
 use crate::metrics::{AttrVal, TraceSink, TRACK_COORD, TRACK_SWEEP_BASE};
 use crate::costs::{gradient_census, shard_imbalance_from_census, Phase, PodLayout};
 use crate::models::registry::ModelProfile;
-use crate::netsim::{torus2d_gradsum_makespan, Dir, Message, NetParams, NetSim, Torus};
+use crate::netsim::{
+    concurrent_gradsum_halo_makespan, cross_pod_ring_seconds, payload_uniform,
+    pod_group_gradsum_makespan, pod_group_gradsum_makespan_guarded, schedule_fingerprint,
+    CrossPodStrategy, Dir, GuardedMakespan, Message, NetParams, NetSim, PodSpec, Torus,
+};
 use crate::simulator::{simulate, SimResult};
 use crate::util::json::{obj, Json};
 
@@ -85,6 +89,19 @@ pub struct SweepRecord {
     pub restore_seconds: f64,
     /// Participating cores of the final (possibly fault-degraded) layout.
     pub final_cores: usize,
+    /// Pods in the scenario's hierarchical group (1 = single flat pod).
+    pub pods: usize,
+    /// Inter-pod link bandwidth as a fraction of the torus link bandwidth.
+    pub inter_pod_ratio: f64,
+    /// Cross-pod gradient-summation strategy label
+    /// ([`CrossPodStrategy::label`]); single-pod records carry the
+    /// default "hierarchical".
+    pub cross_pod_strategy: String,
+    /// Gradsum makespan when the spatial-partition halo traffic shares
+    /// the links concurrently (see [`concurrent_contention_makespan`]).
+    /// Equals `collective_makespan_seconds` exactly when the point has no
+    /// halo traffic.
+    pub concurrent_makespan_seconds: f64,
 }
 
 impl SweepRecord {
@@ -131,6 +148,10 @@ impl SweepRecord {
             ("lost_steps", num(self.lost_steps)),
             ("restore_seconds", num(self.restore_seconds)),
             ("final_cores", Json::from(self.final_cores)),
+            ("pods", Json::from(self.pods)),
+            ("inter_pod_ratio", num(self.inter_pod_ratio)),
+            ("cross_pod_strategy", Json::Str(self.cross_pod_strategy.clone())),
+            ("concurrent_makespan_seconds", num(self.concurrent_makespan_seconds)),
         ])
     }
 
@@ -198,6 +219,19 @@ impl SweepRecord {
                 _ => 0.0,
             },
             final_cores: int("final_cores"),
+            // Baselines that predate the multi-pod axis are single-pod.
+            pods: j.get("pods").and_then(Json::as_usize).unwrap_or(1),
+            inter_pod_ratio: match j.get("inter_pod_ratio") {
+                Some(Json::Num(x)) => *x,
+                Some(Json::Null) => f64::INFINITY,
+                _ => 1.0,
+            },
+            cross_pod_strategy: j
+                .get("cross_pod_strategy")
+                .and_then(Json::as_str)
+                .unwrap_or("hierarchical")
+                .to_string(),
+            concurrent_makespan_seconds: num("concurrent_makespan_seconds"),
         })
     }
 }
@@ -301,6 +335,44 @@ impl ScenarioCtx {
     }
 }
 
+/// Full key of one memoized makespan: every input of the kernel —
+/// participating chips, payload (or the fingerprint of a non-uniform
+/// per-chip schedule), gradsum shape, multi-pod spec, and any concurrent
+/// halo phase. Two sweep points share an entry only when every one of
+/// these coincides, which is what keeps cache hits value-exact.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+struct MakespanKey {
+    chips: usize,
+    /// `payload_bytes.to_bits()`; 0 for fingerprinted schedules.
+    payload_bits: u64,
+    two_d: bool,
+    pods: usize,
+    ratio_bits: u64,
+    strategy: CrossPodStrategy,
+    /// [`schedule_fingerprint`] of a non-uniform per-chip payload
+    /// schedule; 0 for the uniform (payload-keyed) case.
+    schedule: u64,
+    /// Concurrent halo phase (0 / 0 when the point has no halo traffic).
+    halo_group: usize,
+    halo_bits: u64,
+}
+
+impl MakespanKey {
+    fn point(payload_bytes: f64, chips: usize, two_d: bool, pods: PodSpec) -> MakespanKey {
+        MakespanKey {
+            chips,
+            payload_bits: payload_bytes.to_bits(),
+            two_d,
+            pods: pods.pods,
+            ratio_bits: pods.inter_pod_ratio.to_bits(),
+            strategy: pods.strategy,
+            schedule: 0,
+            halo_group: 0,
+            halo_bits: 0,
+        }
+    }
+}
+
 /// Memoized hot kernels shared by every point (and worker thread) of a
 /// sweep. Keys capture every input of the memoized function, so a cache
 /// hit returns exactly the bits a fresh computation would — memoization
@@ -310,9 +382,8 @@ impl ScenarioCtx {
 /// divergent result.
 #[derive(Default)]
 pub struct SweepCache {
-    /// (participating torus nx, ny, payload-bytes bits, 2-D schedule) →
-    /// event-driven contention makespan.
-    makespans: Mutex<HashMap<(usize, usize, u64, bool), f64>>,
+    /// [`MakespanKey`] → event-driven / fast-path contention makespan.
+    makespans: Mutex<HashMap<MakespanKey, f64>>,
     /// (model, participating shards) → weight-update shard imbalance.
     imbalance: Mutex<HashMap<(&'static str, usize), f64>>,
     /// Hit/miss tallies (relaxed; purely observational — they feed the
@@ -324,26 +395,90 @@ pub struct SweepCache {
 }
 
 impl SweepCache {
-    /// Contention makespan of the scenario's gradient-summation schedule
-    /// over the participating torus. 2-D schedules go through the exact
-    /// `netsim` symmetry fast-path (one representative ring row/column);
-    /// the 1-D ring embedding is priced by the full event-driven
-    /// simulation. Either way the result is memoized by torus + payload.
-    fn contention_makespan(&self, payload_bytes: f64, chips: usize, two_d: bool) -> f64 {
-        let torus = Torus::for_chips_idle(chips.max(1), PodLayout::TORUS_MAX_ASPECT).0;
-        let key = (torus.nx, torus.ny, payload_bytes.to_bits(), two_d);
+    fn memo_makespan(&self, key: MakespanKey, compute: impl FnOnce() -> f64) -> f64 {
         if let Some(&v) = self.makespans.lock().unwrap().get(&key) {
             self.makespan_hits.fetch_add(1, Ordering::Relaxed);
             return v;
         }
         self.makespan_misses.fetch_add(1, Ordering::Relaxed);
-        let v = if two_d {
-            torus2d_gradsum_makespan(torus, payload_bytes, &NetParams::default())
-        } else {
-            gradsum_contention_makespan(payload_bytes, chips, false)
-        };
+        let v = compute();
         self.makespans.lock().unwrap().insert(key, v);
         v
+    }
+
+    /// Contention makespan of the scenario's gradient-summation schedule
+    /// over the participating group (see
+    /// [`gradsum_contention_makespan_pods`] for the pricing rules).
+    fn contention_makespan(
+        &self,
+        payload_bytes: f64,
+        chips: usize,
+        two_d: bool,
+        pods: PodSpec,
+    ) -> f64 {
+        self.memo_makespan(MakespanKey::point(payload_bytes, chips, two_d, pods), || {
+            gradsum_contention_makespan_pods(payload_bytes, chips, two_d, pods)
+        })
+    }
+
+    /// Gradsum makespan with the spatial-partition halo phase sharing the
+    /// links concurrently (see [`concurrent_contention_makespan`]).
+    fn concurrent_makespan(
+        &self,
+        payload_bytes: f64,
+        chips: usize,
+        two_d: bool,
+        pods: PodSpec,
+        halo_group: usize,
+        halo_seconds: f64,
+    ) -> f64 {
+        let key = MakespanKey {
+            halo_group,
+            halo_bits: halo_seconds.to_bits(),
+            ..MakespanKey::point(payload_bytes, chips, two_d, pods)
+        };
+        self.memo_makespan(key, || {
+            concurrent_contention_makespan(
+                payload_bytes,
+                chips,
+                two_d,
+                pods,
+                halo_group,
+                halo_seconds,
+            )
+        })
+    }
+
+    /// Makespan of a *non-uniform* per-chip payload schedule, memoized by
+    /// its [`schedule_fingerprint`] (the uniform case hits the same entry
+    /// as any permutation-identical schedule; distinct schedules can
+    /// never collide on a payload-keyed entry because their key carries
+    /// `payload_bits = 0`). The `fastpath` flag reports whether the
+    /// symmetry shortcut priced the schedule — `false` for every
+    /// non-uniform schedule, which is what routes them through the
+    /// event-driven simulation.
+    pub fn scheduled_makespan(
+        &self,
+        payloads: &[f64],
+        chips: usize,
+        pods: PodSpec,
+    ) -> GuardedMakespan {
+        let key = MakespanKey {
+            payload_bits: 0,
+            schedule: schedule_fingerprint(payloads),
+            ..MakespanKey::point(0.0, chips, true, pods)
+        };
+        let seconds = self.memo_makespan(key, || {
+            pod_group_gradsum_makespan_guarded(
+                chips,
+                pods,
+                PodLayout::TORUS_MAX_ASPECT,
+                payloads,
+                &NetParams::default(),
+            )
+            .seconds
+        });
+        GuardedMakespan { seconds, fastpath: payload_uniform(payloads) }
     }
 
     fn shard_imbalance(&self, ctx: &ScenarioCtx, shards: usize) -> f64 {
@@ -531,12 +666,24 @@ fn sweep_point_ctx(
     let opts = s.sim_options(cores);
     let r = simulate(m, cores, &opts);
     let imbalance = cache.shard_imbalance(ctx, r.participating_cores);
-    let makespan = cache.contention_makespan(
-        ctx.payload_bytes,
-        (r.participating_cores / 2).max(1),
-        s.gradsum.is_2d(),
-    );
-    let mut rec = assemble_record(s, m, chips, &r, imbalance, makespan);
+    let part_chips = (r.participating_cores / 2).max(1);
+    let makespan =
+        cache.contention_makespan(ctx.payload_bytes, part_chips, s.gradsum.is_2d(), s.pods);
+    // Points without halo traffic have nothing to contend with: the
+    // concurrent price *is* the clean price, reused bit-for-bit.
+    let concurrent = if r.halo_seconds > 0.0 {
+        cache.concurrent_makespan(
+            ctx.payload_bytes,
+            part_chips,
+            s.gradsum.is_2d(),
+            s.pods,
+            r.layout.mp,
+            r.halo_seconds,
+        )
+    } else {
+        makespan
+    };
+    let mut rec = assemble_record(s, m, chips, &r, imbalance, makespan, concurrent);
     super::faults::apply_fault_trace(s, m, &r, &mut rec);
     rec
 }
@@ -551,6 +698,7 @@ pub(super) fn assemble_record(
     r: &SimResult,
     shard_imbalance: f64,
     collective_makespan_seconds: f64,
+    concurrent_makespan_seconds: f64,
 ) -> SweepRecord {
     SweepRecord {
         scenario: s.name.clone(),
@@ -585,6 +733,10 @@ pub(super) fn assemble_record(
         lost_steps: 0.0,
         restore_seconds: 0.0,
         final_cores: r.participating_cores,
+        pods: s.pods.pods,
+        inter_pod_ratio: s.pods.inter_pod_ratio,
+        cross_pod_strategy: s.pods.strategy.label().to_string(),
+        concurrent_makespan_seconds,
     }
 }
 
@@ -693,6 +845,89 @@ pub fn gradsum_contention_makespan(payload_bytes: f64, chips: usize, two_d: bool
         let one_step = sim.makespan(&msgs);
         one_step * (2 * (n - 1)) as f64
     }
+}
+
+/// Multi-pod generalization of [`gradsum_contention_makespan`]: the
+/// collapsed single-pod spec reproduces the flat price bit-for-bit; a
+/// real hierarchy prices the intra-pod schedule over the per-pod torus
+/// plus the cross-pod term of the scenario's [`CrossPodStrategy`].
+///
+/// * 2-D schedules go through [`pod_group_gradsum_makespan`], whose
+///   collapsed branch is the exact symmetry fast-path the single-pod
+///   cache used.
+/// * 1-D hierarchical keeps the event-driven ring embedding per pod and
+///   adds the analytic cross-pod shard ring
+///   ([`cross_pod_ring_seconds`]).
+/// * The flat-ring strategy is one ring over every chip of every pod
+///   with slow boundary links; it is inherently 1-D, so both schedule
+///   shapes price it through [`pod_group_gradsum_makespan`].
+pub fn gradsum_contention_makespan_pods(
+    payload_bytes: f64,
+    chips: usize,
+    two_d: bool,
+    pods: PodSpec,
+) -> f64 {
+    let p = NetParams::default();
+    if two_d {
+        pod_group_gradsum_makespan(
+            chips.max(1),
+            pods,
+            PodLayout::TORUS_MAX_ASPECT,
+            payload_bytes,
+            &p,
+        )
+    } else if pods.collapses() {
+        gradsum_contention_makespan(payload_bytes, chips, false)
+    } else {
+        match pods.strategy {
+            CrossPodStrategy::FlatRing => pod_group_gradsum_makespan(
+                chips.max(1),
+                pods,
+                PodLayout::TORUS_MAX_ASPECT,
+                payload_bytes,
+                &p,
+            ),
+            CrossPodStrategy::Hierarchical => {
+                let per_pod = (chips / pods.pods).max(1);
+                let torus = Torus::for_chips_idle(per_pod, PodLayout::TORUS_MAX_ASPECT).0;
+                gradsum_contention_makespan(payload_bytes, per_pod, false)
+                    + cross_pod_ring_seconds(pods, payload_bytes / torus.chips() as f64, &p)
+            }
+        }
+    }
+}
+
+/// Gradsum makespan when the spatial-partition halo phase shares the
+/// links *concurrently* instead of being priced in isolation: the halo
+/// payload (converted back to link-equivalent bytes at the default link
+/// bandwidth) is injected into the same event simulation as the first
+/// gradsum ring step, so overlapping messages queue on shared links (see
+/// [`concurrent_gradsum_halo_makespan`]). The cross-pod addendum of a
+/// real hierarchy rides on top, exactly as in
+/// [`gradsum_contention_makespan_pods`]. With no halo traffic the result
+/// is the clean (phase-isolated) price.
+pub fn concurrent_contention_makespan(
+    payload_bytes: f64,
+    chips: usize,
+    two_d: bool,
+    pods: PodSpec,
+    halo_group: usize,
+    halo_seconds: f64,
+) -> f64 {
+    let p = NetParams::default();
+    let halo_bytes = halo_seconds * p.link_bw;
+    let local_chips =
+        if pods.collapses() { chips.max(1) } else { (chips.max(1) / pods.pods).max(1) };
+    let torus = Torus::for_chips_idle(local_chips, PodLayout::TORUS_MAX_ASPECT).0;
+    let payloads = vec![payload_bytes; torus.chips()];
+    let joint =
+        concurrent_gradsum_halo_makespan(torus, &payloads, halo_group, halo_bytes, two_d, &p)
+            .seconds;
+    // The cross-pod shard ring (zero for a collapsed spec) does not
+    // overlap the intra-pod halo traffic; it rides after the joint phase.
+    let cross = gradsum_contention_makespan_pods(payload_bytes, chips, two_d, pods)
+        - gradsum_contention_makespan_pods(payload_bytes, local_chips, two_d, PodSpec::default());
+    joint + cross
 }
 
 /// One point's diff between a baseline and a new report.
@@ -1028,5 +1263,103 @@ mod tests {
         assert_eq!(report.records[0].participating_cores, 0);
         let cmp = compare_reports(&report, &report, 0.05);
         assert_eq!(cmp.regressions(), 0);
+    }
+
+    #[test]
+    fn pre_pod_baselines_read_as_single_pod() {
+        // A record written before the multi-pod axis existed carries no
+        // pod fields: it must parse as a flat single-pod point, with the
+        // concurrent makespan unknown (NaN, skipped by the comparer).
+        let old = r#"{"version":2,"records":[{"scenario":"s","model":"resnet50",
+            "chips":64,"cores":128,"benchmark_seconds":10.0,"converged":true,
+            "collective_makespan_seconds":0.001}]}"#;
+        let report = SweepReport::parse(old).unwrap();
+        let r = &report.records[0];
+        assert_eq!(r.pods, 1);
+        assert_eq!(r.inter_pod_ratio, 1.0);
+        assert_eq!(r.cross_pod_strategy, "hierarchical");
+        assert!(r.concurrent_makespan_seconds.is_nan());
+        assert_eq!(compare_reports(&report, &report, 0.05).regressions(), 0);
+    }
+
+    #[test]
+    fn multi_pod_contention_collapses_and_orders() {
+        let payload = 1.0e8;
+        // Collapsing specs reproduce the flat single-pod prices bit-for-bit.
+        let flat_1d = gradsum_contention_makespan(payload, 256, false);
+        let flat_2d = crate::netsim::torus2d_gradsum_makespan(
+            Torus::for_chips_idle(256, PodLayout::TORUS_MAX_ASPECT).0,
+            payload,
+            &NetParams::default(),
+        );
+        for pods in [PodSpec::default(), PodSpec::new(1, 0.25), PodSpec::new(4, 1.0)] {
+            let p1 = gradsum_contention_makespan_pods(payload, 256, false, pods);
+            assert_eq!(p1.to_bits(), flat_1d.to_bits());
+            let p2 = gradsum_contention_makespan_pods(payload, 256, true, pods);
+            assert_eq!(p2.to_bits(), flat_2d.to_bits());
+        }
+        // A real hierarchy costs more than its per-pod torus alone, and a
+        // slower inter-pod link strictly more than a faster one.
+        let hier25 = gradsum_contention_makespan_pods(payload, 1024, true, PodSpec::new(2, 0.25));
+        let hier05 = gradsum_contention_makespan_pods(payload, 1024, true, PodSpec::new(2, 0.05));
+        let per_pod = crate::netsim::torus2d_gradsum_makespan(
+            Torus::for_chips_idle(512, PodLayout::TORUS_MAX_ASPECT).0,
+            payload,
+            &NetParams::default(),
+        );
+        assert!(hier25 > per_pod, "cross-pod term must be visible: {hier25} vs {per_pod}");
+        assert!(hier05 > hier25, "slower inter-pod links must cost more");
+        // The flat ring drags every chunk across the slow boundary links.
+        let flat_ring = gradsum_contention_makespan_pods(
+            payload,
+            1024,
+            true,
+            PodSpec::new(2, 0.25).with_strategy(CrossPodStrategy::FlatRing),
+        );
+        assert!(flat_ring > hier25, "flat ring {flat_ring} should exceed hierarchical {hier25}");
+        // 1-D hierarchy: per-pod ring plus the cross-pod shard ring.
+        let hier_1d = gradsum_contention_makespan_pods(payload, 1024, false, PodSpec::new(2, 0.25));
+        assert!(hier_1d > gradsum_contention_makespan(payload, 512, false));
+    }
+
+    #[test]
+    fn concurrent_price_reuses_clean_price_without_halo() {
+        let payload = 1.0e8;
+        for two_d in [true, false] {
+            let clean = gradsum_contention_makespan_pods(payload, 64, two_d, PodSpec::default());
+            let no_halo =
+                concurrent_contention_makespan(payload, 64, two_d, PodSpec::default(), 4, 0.0);
+            assert_eq!(no_halo.to_bits(), clean.to_bits());
+            // Real halo traffic queues on the shared links: the joint
+            // makespan strictly exceeds the phase-isolated price.
+            let with_halo =
+                concurrent_contention_makespan(payload, 64, two_d, PodSpec::default(), 4, 1e-3);
+            assert!(
+                with_halo > clean,
+                "two_d={two_d}: concurrent {with_halo} should exceed clean {clean}"
+            );
+        }
+    }
+
+    #[test]
+    fn cache_distinguishes_payload_schedules() {
+        let cache = SweepCache::default();
+        let uniform = vec![1.0e6; 16];
+        let u = cache.scheduled_makespan(&uniform, 16, PodSpec::default());
+        assert!(u.fastpath, "uniform schedules take the symmetry fast-path");
+        let mut skew = uniform.clone();
+        skew[3] *= 4.0;
+        let s1 = cache.scheduled_makespan(&skew, 16, PodSpec::default());
+        assert!(!s1.fastpath, "non-uniform schedules must bypass the fast-path");
+        assert!(s1.seconds > u.seconds);
+        // Same schedule again: a cache hit returning exactly the same bits.
+        let hits = cache.makespan_hits.load(Ordering::Relaxed);
+        let s2 = cache.scheduled_makespan(&skew, 16, PodSpec::default());
+        assert_eq!(s1.seconds.to_bits(), s2.seconds.to_bits());
+        assert_eq!(cache.makespan_hits.load(Ordering::Relaxed), hits + 1);
+        // A multi-pod spec keys separately and still flags non-uniform.
+        let s3 = cache.scheduled_makespan(&skew, 16, PodSpec::new(2, 0.25));
+        assert!(!s3.fastpath);
+        assert_ne!(s3.seconds.to_bits(), s1.seconds.to_bits());
     }
 }

@@ -18,9 +18,21 @@
 use crate::costs::{spatial_factors, CostConfig, CostStack, Phase, PhaseCost, PodLayout};
 use crate::devicesim::{Device, TPU_V3};
 use crate::models::registry::{Layout, ModelProfile};
-use crate::netsim::ArAlgo;
+use crate::netsim::{ArAlgo, CrossPodStrategy, PodSpec};
 
 /// Optimization toggles (all true = the Google submission config).
+///
+/// Construct with the builder — [`SimOptions::submission()`] is the
+/// all-optimizations default, and each method peels one technique off or
+/// extends the topology:
+///
+/// ```ignore
+/// let opts = SimOptions::submission().without_wus().pods(4, 0.25);
+/// ```
+///
+/// Plain `Default` construction and direct field access keep working;
+/// the builder only exists so adding fields (like the multi-pod spec)
+/// doesn't churn every call site again.
 #[derive(Clone, Copy, Debug)]
 pub struct SimOptions {
     pub gradsum_2d: bool,
@@ -37,6 +49,10 @@ pub struct SimOptions {
     /// compute with [`Device::with_compute_gflops`] instead of the TPU-v3
     /// datasheet roofline. `None` = the stock [`TPU_V3`] device.
     pub compute_gflops: Option<f64>,
+    /// Multi-pod topology (pod count, inter-pod bandwidth ratio, cross-pod
+    /// gradsum strategy). The default single-pod spec prices bit-identically
+    /// to the pre-hierarchy simulator.
+    pub pods: PodSpec,
 }
 
 impl Default for SimOptions {
@@ -50,11 +66,79 @@ impl Default for SimOptions {
             epochs_override: None,
             layout_override: None,
             compute_gflops: None,
+            pods: PodSpec::default(),
         }
     }
 }
 
 impl SimOptions {
+    /// Builder entry point: the Google submission config (all §2
+    /// optimizations on, single pod).
+    pub fn submission() -> SimOptions {
+        SimOptions::default()
+    }
+
+    /// Disable weight-update sharding.
+    pub fn without_wus(mut self) -> SimOptions {
+        self.weight_update_sharding = false;
+        self
+    }
+
+    /// Disable spatial partitioning (pure data parallelism).
+    pub fn without_spatial(mut self) -> SimOptions {
+        self.spatial_partitioning = false;
+        self
+    }
+
+    /// Side-card eval instead of distributed in-loop eval.
+    pub fn without_distributed_eval(mut self) -> SimOptions {
+        self.distributed_eval = false;
+        self
+    }
+
+    /// Serial fused gradient summation instead of the pipelined schedule.
+    pub fn serial_gradsum(mut self) -> SimOptions {
+        self.gradsum_pipelined = false;
+        self
+    }
+
+    /// 1-D ring gradient summation instead of the 2-D torus schedule.
+    pub fn ring_gradsum(mut self) -> SimOptions {
+        self.gradsum_2d = false;
+        self
+    }
+
+    /// Span `pods` pods joined by links at `inter_pod_ratio` of the torus
+    /// link bandwidth (keeps the current cross-pod strategy).
+    pub fn pods(mut self, pods: usize, inter_pod_ratio: f64) -> SimOptions {
+        self.pods = PodSpec { pods, inter_pod_ratio, ..self.pods };
+        self
+    }
+
+    /// Pick the cross-pod gradient-summation strategy.
+    pub fn cross_pod(mut self, strategy: CrossPodStrategy) -> SimOptions {
+        self.pods.strategy = strategy;
+        self
+    }
+
+    /// Override the convergence-curve epochs.
+    pub fn epochs(mut self, epochs: f64) -> SimOptions {
+        self.epochs_override = Some(epochs);
+        self
+    }
+
+    /// Override the submission layout policy.
+    pub fn layout(mut self, layout: Layout) -> SimOptions {
+        self.layout_override = Some(layout);
+        self
+    }
+
+    /// Price compute at a live-calibrated GFLOP/s coefficient.
+    pub fn with_compute_gflops(mut self, gflops: f64) -> SimOptions {
+        self.compute_gflops = Some(gflops);
+        self
+    }
+
     /// The cost-layer configuration these toggles select.
     pub fn cost_config(&self) -> CostConfig {
         CostConfig {
@@ -125,7 +209,7 @@ pub fn simulate(model: &ModelProfile, cores: usize, opts: &SimOptions) -> SimRes
     if let Some(l) = opts.layout_override {
         layout = l;
     }
-    let pod = PodLayout::from_layout(&layout);
+    let pod = PodLayout::from_layout(&layout).with_pods(opts.pods);
 
     let epochs = opts
         .epochs_override
@@ -344,6 +428,48 @@ mod tests {
         assert_eq!(a.eval_seconds, b.eval_seconds);
         assert_eq!(a.benchmark_seconds, b.benchmark_seconds);
         assert_eq!(b.surplus_cores, 1536);
+    }
+
+    #[test]
+    fn builder_matches_literal_construction() {
+        let built = SimOptions::submission()
+            .without_wus()
+            .without_distributed_eval()
+            .serial_gradsum()
+            .ring_gradsum()
+            .without_spatial();
+        let literal = SimOptions {
+            gradsum_2d: false,
+            gradsum_pipelined: false,
+            weight_update_sharding: false,
+            distributed_eval: false,
+            spatial_partitioning: false,
+            ..Default::default()
+        };
+        let r_built = simulate(&m("resnet50"), 1024, &built);
+        let r_literal = simulate(&m("resnet50"), 1024, &literal);
+        assert_eq!(r_built.benchmark_seconds.to_bits(), r_literal.benchmark_seconds.to_bits());
+        assert_eq!(built.pods, PodSpec::default());
+    }
+
+    #[test]
+    fn multi_pod_options_price_the_hierarchy() {
+        // pods(n, 1.0) collapses: bit-identical to the single-pod default.
+        let single = simulate(&m("resnet50"), 2048, &SimOptions::default());
+        let collapsed = simulate(&m("resnet50"), 2048, &SimOptions::submission().pods(2, 1.0));
+        assert_eq!(single.benchmark_seconds.to_bits(), collapsed.benchmark_seconds.to_bits());
+        // A real hierarchy reprices gradsum only; slower links cost more.
+        let hier = simulate(&m("resnet50"), 2048, &SimOptions::submission().pods(2, 0.25));
+        let slower = simulate(&m("resnet50"), 2048, &SimOptions::submission().pods(2, 0.05));
+        assert_eq!(single.compute_seconds.to_bits(), hier.compute_seconds.to_bits());
+        assert_eq!(single.update_seconds.to_bits(), hier.update_seconds.to_bits());
+        assert!(slower.gradsum_seconds > hier.gradsum_seconds);
+        let flat = simulate(
+            &m("resnet50"),
+            2048,
+            &SimOptions::submission().pods(2, 0.25).cross_pod(CrossPodStrategy::FlatRing),
+        );
+        assert!(flat.gradsum_seconds > hier.gradsum_seconds);
     }
 
     #[test]

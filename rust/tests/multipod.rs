@@ -1,0 +1,234 @@
+//! Cross-layer property tests for the hierarchical multi-pod netsim
+//! (referenced from `netsim::topology`'s module docs):
+//!
+//! 1. **Collapse bit-identity** — any pod spec with `pods = 1` or
+//!    inter-pod ratio `1.0` prices bit-identically to the flat 2-D torus
+//!    on the paper's 16/64/256/1024 ladder, for both the raw and the
+//!    guarded (per-chip payload) entry points.
+//! 2. **Fast-path bypass** — a non-uniform payload schedule reports
+//!    `fastpath: false` through the pod-aware guarded pricing and the
+//!    `SweepCache` schedule key, and costs at least the uniform price.
+//! 3. **Concurrent-phase contention** — gradsum and halo injected into
+//!    one simulation cost at least either phase priced alone.
+//!
+//! Plus the grid end-to-end: pod axes declared on an `AblationGrid`
+//! arrive in the emitted `SweepRecord`s.
+
+use tpu_pod_train::costs::PodLayout;
+use tpu_pod_train::netsim::{
+    concurrent_gradsum_halo_makespan, pod_group_gradsum_makespan,
+    pod_group_gradsum_makespan_guarded, torus2d_gradsum_makespan, CrossPodStrategy, Message,
+    NetParams, NetSim, PodSpec, Torus,
+};
+use tpu_pod_train::scenario::{AblationGrid, SweepCache, SweepRunner};
+
+const LADDER: [usize; 4] = [16, 64, 256, 1024];
+
+/// Every degenerate pod spec (single pod, or full-rate inter-pod links,
+/// under either cross-pod strategy) must collapse to the flat capped
+/// torus **bit-for-bit** — multi-pod support cannot perturb the paper's
+/// single-pod numbers even in the last ulp.
+#[test]
+fn collapsing_pod_specs_price_bit_identical_to_the_flat_torus() {
+    let p = NetParams::default();
+    for &chips in &LADDER {
+        let torus = Torus::for_chips_idle(chips, PodLayout::TORUS_MAX_ASPECT).0;
+        let flat = torus2d_gradsum_makespan(torus, 1e8, &p);
+        for spec in [
+            PodSpec::default(),
+            PodSpec::new(1, 0.25),
+            PodSpec::new(4, 1.0),
+            PodSpec::new(1, 1.0).with_strategy(CrossPodStrategy::FlatRing),
+            PodSpec::new(8, 1.0).with_strategy(CrossPodStrategy::FlatRing),
+        ] {
+            let priced =
+                pod_group_gradsum_makespan(chips, spec, PodLayout::TORUS_MAX_ASPECT, 1e8, &p);
+            assert_eq!(
+                priced.to_bits(),
+                flat.to_bits(),
+                "chips {chips}, spec {spec:?}: {priced} vs flat {flat}"
+            );
+        }
+    }
+}
+
+/// The guarded entry point under uniform payloads: collapse specs take
+/// the symmetry fast path and reproduce the flat price bit-for-bit on
+/// the whole ladder.
+#[test]
+fn guarded_uniform_collapse_takes_the_fast_path_on_the_ladder() {
+    let p = NetParams::default();
+    for &chips in &LADDER {
+        let torus = Torus::for_chips_idle(chips, PodLayout::TORUS_MAX_ASPECT).0;
+        let flat = torus2d_gradsum_makespan(torus, 4e7, &p);
+        let payloads = vec![4e7; torus.chips()];
+        let g = pod_group_gradsum_makespan_guarded(
+            chips,
+            PodSpec::default(),
+            PodLayout::TORUS_MAX_ASPECT,
+            &payloads,
+            &p,
+        );
+        assert!(g.fastpath, "uniform single-pod payloads must take the fast path");
+        assert_eq!(g.seconds.to_bits(), flat.to_bits(), "chips {chips}");
+    }
+}
+
+/// Slower inter-pod links can only cost more, and the cross-pod phase is
+/// a real cost on top of each pod's own reduction.
+#[test]
+fn slower_inter_pod_links_cost_more() {
+    let p = NetParams::default();
+    for &chips in &[64usize, 256, 1024] {
+        let half = pod_group_gradsum_makespan(
+            chips,
+            PodSpec::new(4, 0.5),
+            PodLayout::TORUS_MAX_ASPECT,
+            1e8,
+            &p,
+        );
+        let eighth = pod_group_gradsum_makespan(
+            chips,
+            PodSpec::new(4, 0.125),
+            PodLayout::TORUS_MAX_ASPECT,
+            1e8,
+            &p,
+        );
+        assert!(eighth > half, "chips {chips}: ratio 1/8 {eighth} vs 1/2 {half}");
+        let per_pod = torus2d_gradsum_makespan(
+            Torus::for_chips_idle(chips / 4, PodLayout::TORUS_MAX_ASPECT).0,
+            1e8,
+            &p,
+        );
+        assert!(half > per_pod, "chips {chips}: the cross-pod phase must cost something");
+    }
+}
+
+/// Non-uniform payload schedules must bypass the symmetry fast path —
+/// through the pod-aware guarded pricing directly, and through the
+/// `SweepCache`, whose key carries the full schedule fingerprint (so a
+/// skewed schedule can never be served a uniform schedule's cached
+/// price) and the pod spec (so multi-pod points never collide with flat
+/// ones).
+#[test]
+fn non_uniform_schedules_bypass_the_fastpath_and_key_the_cache() {
+    let p = NetParams::default();
+    let chips = 64usize;
+    let torus = Torus::for_chips_idle(chips, PodLayout::TORUS_MAX_ASPECT).0;
+    let mut payloads = vec![1e7; torus.chips()];
+    let uniform = pod_group_gradsum_makespan_guarded(
+        chips,
+        PodSpec::default(),
+        PodLayout::TORUS_MAX_ASPECT,
+        &payloads,
+        &p,
+    );
+    assert!(uniform.fastpath);
+    payloads[7] *= 3.0;
+    let skewed = pod_group_gradsum_makespan_guarded(
+        chips,
+        PodSpec::default(),
+        PodLayout::TORUS_MAX_ASPECT,
+        &payloads,
+        &p,
+    );
+    assert!(!skewed.fastpath, "a non-uniform schedule must use the event engine");
+    assert!(skewed.seconds > uniform.seconds, "the heavy chip can only slow things down");
+
+    // Same contract through the memoizing cache (the sweep engine's path).
+    let cache = SweepCache::default();
+    let base = vec![1e7; torus.chips()];
+    let c_uniform = cache.scheduled_makespan(&base, chips, PodSpec::default());
+    assert!(c_uniform.fastpath);
+    assert_eq!(c_uniform.seconds.to_bits(), uniform.seconds.to_bits());
+    let c_skewed = cache.scheduled_makespan(&payloads, chips, PodSpec::default());
+    assert!(!c_skewed.fastpath);
+    assert_eq!(c_skewed.seconds.to_bits(), skewed.seconds.to_bits());
+    // A multi-pod spec keys (and prices) separately from the flat torus.
+    let c_multi = cache.scheduled_makespan(&payloads, chips, PodSpec::new(2, 0.25));
+    assert!(!c_multi.fastpath);
+    assert_ne!(c_multi.seconds.to_bits(), c_skewed.seconds.to_bits());
+}
+
+/// The halo batch of `concurrent_gradsum_halo_makespan`'s convention:
+/// consecutive row-major groups of `group` chips, each chip shipping
+/// `bytes` to the next member of its group ring.
+fn halo_batch(torus: Torus, group: usize, bytes: f64) -> Vec<Message> {
+    let n = torus.chips();
+    let mut msgs = Vec::new();
+    let mut start = 0;
+    while start < n {
+        let size = group.min(n - start);
+        if size > 1 {
+            for off in 0..size {
+                msgs.push(Message {
+                    src: torus.coord(start + off),
+                    dst: torus.coord(start + (off + 1) % size),
+                    bytes,
+                    ready_at: 0.0,
+                });
+            }
+        }
+        start += size;
+    }
+    msgs
+}
+
+/// Concurrent phases share link bandwidth: the joint price is at least
+/// the clean gradsum schedule and at least the halo phase alone, for
+/// both gradsum schedules, across the ladder's lower rungs.
+#[test]
+fn concurrent_phases_cost_at_least_each_phase_alone() {
+    let p = NetParams::default();
+    for &chips in &[16usize, 64, 256] {
+        let torus = Torus::for_chips_idle(chips, PodLayout::TORUS_MAX_ASPECT).0;
+        let payloads = vec![2e7; torus.chips()];
+        let halo_alone = NetSim::new(torus, p.link_bw, p.link_latency)
+            .makespan(&halo_batch(torus, 4, 1e6));
+        assert!(halo_alone > 0.0);
+        for two_d in [true, false] {
+            let clean =
+                concurrent_gradsum_halo_makespan(torus, &payloads, 4, 0.0, two_d, &p).seconds;
+            let joint = concurrent_gradsum_halo_makespan(torus, &payloads, 4, 1e6, two_d, &p);
+            assert!(!joint.fastpath, "shared-link pricing is never the fast path");
+            assert!(
+                joint.seconds >= clean,
+                "chips {chips} two_d {two_d}: joint {} vs clean {clean}",
+                joint.seconds
+            );
+            assert!(
+                joint.seconds >= halo_alone,
+                "chips {chips} two_d {two_d}: joint {} vs halo alone {halo_alone}",
+                joint.seconds
+            );
+        }
+    }
+}
+
+/// End to end: pod axes declared on the ablation grid arrive in the
+/// emitted records — strategy labels, ratio, pod count, and a finite
+/// concurrent makespan next to the collective one.
+#[test]
+fn grid_pod_axes_reach_the_sweep_records() {
+    let mut g = AblationGrid::full_paper();
+    g.models = vec!["resnet50".to_string()];
+    g.chips = vec![16];
+    g.pods = vec![2];
+    g.inter_pod_ratios = vec![0.25];
+    g.cross_pod = vec![CrossPodStrategy::Hierarchical, CrossPodStrategy::FlatRing];
+    let report = SweepRunner::new(g.scenarios()).run_jobs(2).expect("grid runs");
+    assert!(!report.records.is_empty());
+    let mut labels = std::collections::BTreeSet::new();
+    for r in &report.records {
+        assert_eq!(r.pods, 2, "{}", r.scenario);
+        assert_eq!(r.inter_pod_ratio, 0.25, "{}", r.scenario);
+        assert!(r.scenario.contains("-pods:2-ipr:0.25-xp:"), "{}", r.scenario);
+        assert!(r.collective_makespan_seconds.is_finite());
+        assert!(r.concurrent_makespan_seconds.is_finite());
+        labels.insert(r.cross_pod_strategy.clone());
+    }
+    assert_eq!(
+        labels.into_iter().collect::<Vec<_>>(),
+        vec!["flat-ring".to_string(), "hierarchical".to_string()]
+    );
+}
